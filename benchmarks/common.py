@@ -1,0 +1,46 @@
+"""Shared benchmark utilities.
+
+The paper's experiments (N=900, i_max=600N, e=3N) are CPU-hours at full
+fidelity; every benchmark here runs a structurally identical, budget-reduced
+configuration (documented per benchmark and in EXPERIMENTS.md) and the knobs
+to scale back up on real hardware (--full).
+"""
+from __future__ import annotations
+
+import json
+import os
+import time
+
+import jax
+
+from repro.core import afm, metrics
+from repro.data import make_dataset
+
+RESULTS_DIR = os.path.join(os.path.dirname(__file__), "..", "results", "bench")
+
+
+def save(name: str, payload: dict) -> str:
+    os.makedirs(RESULTS_DIR, exist_ok=True)
+    path = os.path.join(RESULTS_DIR, f"{name}.json")
+    with open(path, "w") as f:
+        json.dump(payload, f, indent=1)
+    return path
+
+
+def train_afm(key, cfg: afm.AFMConfig, data):
+    state = afm.init(key, cfg, data)
+    t0 = time.time()
+    state, aux = jax.jit(
+        lambda s, k: afm.train(s, data, k, cfg))(state, key)
+    jax.block_until_ready(state.w)
+    return state, aux, time.time() - t0
+
+
+def map_quality(state, samples, side):
+    q = float(metrics.quantization_error(state.w, samples))
+    t = float(metrics.topological_error(state.w, samples, side))
+    return q, t
+
+
+def dataset(name: str, train_size: int, test_size: int):
+    return make_dataset(name, train_size=train_size, test_size=test_size)

@@ -1,0 +1,43 @@
+"""§3.5 complexity: under e ~ N, i_max ~ N, total work scales ~ N^2; per
+sample the work (search hops + greedy steps + cascade size) scales ~ O(N).
+
+We count the actual algorithmic operations (not wall time — single CPU):
+exploration hops (= e), measured greedy steps, measured cascade sizes.
+"""
+from __future__ import annotations
+
+import jax
+import numpy as np
+
+from benchmarks import common
+from repro.core import afm
+
+
+def run(quick: bool = True):
+    sides = (6, 10, 14) if quick else (10, 14, 20, 28)
+    xtr, _, _, _ = common.dataset("letters", train_size=3000, test_size=10)
+    rows = []
+    for side in sides:
+        n = side * side
+        cfg = afm.AFMConfig(side=side, dim=16, i_max=20 * n, batch=16,
+                            e_factor=1.0)
+        state, aux, dt = common.train_afm(jax.random.PRNGKey(7), cfg, xtr)
+        greedy = float(np.asarray(aux.greedy_steps, np.float64).mean())
+        casc = float(np.asarray(aux.cascade_size, np.float64).mean())
+        per_sample = cfg.e + greedy + casc
+        rows.append({"N": n, "e": cfg.e, "greedy_steps": greedy,
+                     "mean_cascade": casc, "ops_per_sample": per_sample})
+        print(f"  N={n:4d} ops/sample={per_sample:9.1f} "
+              f"(e={cfg.e}, greedy={greedy:.1f}, cascade={casc:.1f})",
+              flush=True)
+    # per-sample ops should scale ~linearly in N (dominated by e ~ N)
+    n0, n1 = rows[0], rows[-1]
+    growth = (n1["ops_per_sample"] / n0["ops_per_sample"]) / (n1["N"] / n0["N"])
+    derived = {"linear_growth_factor": growth,
+               "claim_at_most_linear_per_sample": growth < 1.5}
+    common.save("complexity", {"rows": rows, "derived": derived})
+    return rows, derived
+
+
+if __name__ == "__main__":
+    run()

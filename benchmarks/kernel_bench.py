@@ -1,0 +1,57 @@
+"""Kernel micro-bench: BMU search kernel vs pure-jnp oracle.
+
+On this CPU container the Pallas kernel runs in interpret mode (Python), so
+wall time is NOT indicative of TPU performance; we report the oracle's XLA
+wall time (the production CPU path) plus correctness across the paper's
+shapes, and the kernel's VMEM working-set / arithmetic-intensity derivation
+used for the TPU roofline.
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks import common
+from repro.kernels.bmu import ops as bmu_ops, ref as bmu_ref
+
+
+def _time(fn, *args, iters=5):
+    fn(*args)[0].block_until_ready()
+    t0 = time.time()
+    for _ in range(iters):
+        out = fn(*args)
+    jax.block_until_ready(out)
+    return (time.time() - t0) / iters * 1e6  # us
+
+
+def run(quick: bool = True):
+    rows = []
+    shapes = [(900, 64, 784), (1156, 256, 784), (2500, 64, 36)]
+    if not quick:
+        shapes += [(6400, 256, 784), (65536, 1024, 512)]
+    for (n, b, d) in shapes:
+        key = jax.random.PRNGKey(n + b)
+        w = jax.random.normal(key, (n, d))
+        s = jax.random.normal(jax.random.fold_in(key, 1), (b, d))
+        us_ref = _time(jax.jit(bmu_ref.bmu_ref), w, s)
+        i1, q1 = bmu_ops.bmu(w, s, interpret=True)
+        i2, q2 = bmu_ref.bmu_ref(w, s)
+        ok = bool(np.array_equal(np.asarray(i1), np.asarray(i2)))
+        # TPU roofline for the kernel: FLOPs = 2 N B D (cross term dominates)
+        flops = 2.0 * n * b * d
+        bytes_hbm = 4.0 * (n * d + b * d + 2 * b)   # one pass over W and S
+        intensity = flops / bytes_hbm
+        rows.append({"N": n, "B": b, "D": d, "oracle_us": round(us_ref, 1),
+                     "match": ok, "arith_intensity": round(intensity, 2),
+                     "tpu_bound": "compute" if intensity > 240 else "memory"})
+        print(f"  N={n:6d} B={b:4d} D={d:4d} oracle={us_ref:9.1f}us "
+              f"match={ok} AI={intensity:.1f}", flush=True)
+    common.save("kernel_bench", {"rows": rows})
+    return rows, {"all_match": all(r["match"] for r in rows)}
+
+
+if __name__ == "__main__":
+    run()

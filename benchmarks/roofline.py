@@ -1,0 +1,54 @@
+"""§Roofline report: aggregate results/dryrun/*.json into the per-(arch,
+shape, mesh) three-term roofline table (compute / memory / collective),
+dominant bottleneck, and MODEL_FLOPS / HLO_FLOPs utilisation ratio."""
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+DRYRUN_DIR = os.path.join(os.path.dirname(__file__), "..", "results", "dryrun")
+
+
+def load_all(mesh: str | None = None, tag: object = "ANY"):
+    rows = []
+    for path in sorted(glob.glob(os.path.join(DRYRUN_DIR, "*.json"))):
+        with open(path) as f:
+            d = json.load(f)
+        if mesh and d["mesh"] != mesh:
+            continue
+        if tag != "ANY" and d.get("tag") != tag:
+            continue
+        rows.append(d)
+    return rows
+
+
+def fmt_table(rows) -> str:
+    hdr = (f"{'arch':22s} {'shape':12s} {'mesh':8s} "
+           f"{'compute_s':>10s} {'memory_s':>10s} {'coll_s':>10s} "
+           f"{'bound':>8s} {'useful':>7s}")
+    lines = [hdr, "-" * len(hdr)]
+    for d in rows:
+        r = d["roofline"]
+        u = d.get("useful_flops_ratio")
+        lines.append(
+            f"{d['arch']:22s} {d['shape']:12s} {d['mesh']:8s} "
+            f"{r['compute_s']:10.3e} {r['memory_s']:10.3e} "
+            f"{r['collective_s']:10.3e} {r['bottleneck']:>8s} "
+            f"{(u if u else 0):7.2f}")
+    return "\n".join(lines)
+
+
+def run(quick: bool = True):
+    rows = load_all(tag=None)
+    print(fmt_table(rows))
+    by_bound = {}
+    for d in rows:
+        by_bound.setdefault(d["roofline"]["bottleneck"], 0)
+        by_bound[d["roofline"]["bottleneck"]] += 1
+    derived = {"n_configs": len(rows), "bottleneck_histogram": by_bound}
+    return rows, derived
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,59 @@
+"""Benchmark runner — one module per paper table/figure + system benches.
+
+Prints ``name,us_per_call,derived`` CSV per the repo convention, where
+us_per_call is the module's wall time and ``derived`` the claim-check summary.
+
+    PYTHONPATH=src python -m benchmarks.run [--quick/--full] [--only fig2,...]
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+MODULES = [
+    ("fig2_search_accuracy", "benchmarks.fig2_search_accuracy"),
+    ("fig3_scale_invariance", "benchmarks.fig3_scale_invariance"),
+    ("fig45_cascade_grid", "benchmarks.fig45_cascade_grid"),
+    ("fig6_scalability", "benchmarks.fig6_scalability"),
+    ("table2_classification", "benchmarks.table2_classification"),
+    ("table3_cascade_stats", "benchmarks.table3_cascade_stats"),
+    ("complexity", "benchmarks.complexity"),
+    ("kernel_bench", "benchmarks.kernel_bench"),
+    ("roofline", "benchmarks.roofline"),
+]
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true",
+                    help="paper-scale budgets (hours on CPU; for real hw)")
+    ap.add_argument("--only", default=None)
+    args = ap.parse_args()
+    only = set(args.only.split(",")) if args.only else None
+
+    import importlib
+    print("name,us_per_call,derived")
+    failures = []
+    for name, modname in MODULES:
+        if only and name not in only:
+            continue
+        t0 = time.time()
+        try:
+            mod = importlib.import_module(modname)
+            print(f"## {name}", file=sys.stderr, flush=True)
+            _, derived = mod.run(quick=not args.full)
+            us = (time.time() - t0) * 1e6
+            dstr = ";".join(f"{k}={v}" for k, v in (derived or {}).items())
+            print(f"{name},{us:.0f},{dstr}", flush=True)
+        except Exception as e:  # noqa: BLE001
+            failures.append(name)
+            print(f"{name},FAILED,{type(e).__name__}: {e}", flush=True)
+            import traceback
+            traceback.print_exc(limit=5, file=sys.stderr)
+    if failures:
+        raise SystemExit(f"benchmark failures: {failures}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,54 @@
+"""Paper §3.4 scenario: AFM vs synchronous SOM on multiple datasets
+(Table 2, reduced budgets). Identical data feeds both algorithms.
+
+    PYTHONPATH=src python examples/classify_datasets.py [--datasets a,b]
+"""
+import argparse
+
+import jax
+
+from repro.core import afm, classifier, som
+from repro.data import DATASETS, make_dataset
+
+
+def evaluate(w, xtr, ytr, xte, yte, classes):
+    labels = classifier.label_units(w, xtr, ytr)
+    pred = classifier.predict(w, labels, xte)
+    p, r = classifier.precision_recall(pred, yte, classes)
+    return float(p), float(r)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--datasets", default="satimage,letters")
+    ap.add_argument("--side", type=int, default=12)
+    args = ap.parse_args()
+    key = jax.random.PRNGKey(0)
+
+    print(f"{'dataset':12s} {'AFM prec':>9s} {'AFM rec':>9s} "
+          f"{'SOM prec':>9s} {'SOM rec':>9s}")
+    for name in args.datasets.split(","):
+        spec = DATASETS[name]
+        xtr, ytr, xte, yte = make_dataset(
+            name, train_size=min(spec.train, 4000),
+            test_size=min(spec.test, 800))
+        acfg = afm.AFMConfig(side=args.side, dim=spec.features,
+                             i_max=40 * args.side ** 2, batch=16,
+                             e_factor=1.0, c_d=1000.0)
+        astate = afm.init(key, acfg, xtr)
+        astate, _ = jax.jit(lambda s, k, c=acfg: afm.train(s, xtr, k, c))(
+            astate, key)
+        ap_, ar = evaluate(astate.w, xtr, ytr, xte, yte, spec.classes)
+
+        scfg = som.SOMConfig(side=args.side, dim=spec.features,
+                             i_max=40 * args.side ** 2, batch=1,
+                             sigma_end=0.5)
+        sstate = som.init(key, scfg, xtr)
+        sstate = jax.jit(lambda s, k, c=scfg: som.train(s, xtr, k, c))(
+            sstate, key)
+        sp, sr = evaluate(sstate.w, xtr, ytr, xte, yte, spec.classes)
+        print(f"{name:12s} {ap_:9.3f} {ar:9.3f} {sp:9.3f} {sr:9.3f}")
+
+
+if __name__ == "__main__":
+    main()

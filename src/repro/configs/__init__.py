@@ -1,0 +1,131 @@
+"""Architecture registry + input-shape specs.
+
+Every assigned architecture is a module here exposing ``config()`` (the exact
+published geometry, source cited in the module docstring) and
+``smoke_config()`` (a reduced same-family variant for CPU smoke tests).
+
+``for_shape(cfg, shape)`` specialises a config for one of the four assigned
+input shapes (window overrides for long-context serving) and
+``input_specs(cfg, shape)`` builds ShapeDtypeStruct stand-ins for every model
+input — weak-type-correct, shardable, no device allocation.
+"""
+from __future__ import annotations
+
+import dataclasses
+import importlib
+
+import jax
+import jax.numpy as jnp
+
+ARCHS = [
+    "smollm_360m", "whisper_medium", "llama3_2_1b", "qwen2_vl_72b",
+    "recurrentgemma_2b", "deepseek_moe_16b", "deepseek_coder_33b",
+    "yi_9b", "granite_moe_1b_a400m", "mamba2_1_3b",
+]
+
+# canonical ids from the assignment -> module names
+ALIASES = {
+    "smollm-360m": "smollm_360m",
+    "whisper-medium": "whisper_medium",
+    "llama3.2-1b": "llama3_2_1b",
+    "qwen2-vl-72b": "qwen2_vl_72b",
+    "recurrentgemma-2b": "recurrentgemma_2b",
+    "deepseek-moe-16b": "deepseek_moe_16b",
+    "deepseek-coder-33b": "deepseek_coder_33b",
+    "yi-9b": "yi_9b",
+    "granite-moe-1b-a400m": "granite_moe_1b_a400m",
+    "mamba2-1.3b": "mamba2_1_3b",
+}
+
+SHAPES = {
+    "train_4k":    dict(seq=4096,    batch=256, kind="train"),
+    "prefill_32k": dict(seq=32768,   batch=32,  kind="prefill"),
+    "decode_32k":  dict(seq=32768,   batch=128, kind="decode"),
+    "long_500k":   dict(seq=524288,  batch=1,   kind="decode"),
+}
+
+LONG_WINDOW = 8192  # sliding window used by dense archs for long_500k
+
+# Measured §Perf winners (EXPERIMENTS.md): beyond-paper optimized variants.
+# ``get_optimized(name)`` applies them on top of the faithful config.
+OPTIMIZED = {
+    "smollm-360m": dict(pad_heads_to=16, attention_impl="chunked",
+                        chunked_ce=True),
+    "deepseek-coder-33b": dict(pad_heads_to=64, attention_impl="chunked"),
+    "deepseek-moe-16b": dict(moe_impl="ep", attention_impl="chunked",
+                             chunked_ce=True, moe_capacity_factor=1.25),
+    "granite-moe-1b-a400m": dict(moe_impl="ep", attention_impl="chunked",
+                                 chunked_ce=True),
+    # divisible-head dense archs still gain the memory-term levers
+    "llama3.2-1b": dict(attention_impl="chunked", chunked_ce=True),
+    "yi-9b": dict(attention_impl="chunked", chunked_ce=True),
+    "qwen2-vl-72b": dict(attention_impl="chunked", chunked_ce=True),
+}
+
+
+def get(name: str):
+    mod = importlib.import_module(f"repro.configs.{ALIASES.get(name, name)}")
+    return mod.config()
+
+
+def get_optimized(name: str):
+    """Paper-faithful config + the measured §Perf optimizations (if any)."""
+    cfg = get(name)
+    over = OPTIMIZED.get(name)
+    return dataclasses.replace(cfg, **over) if over else cfg
+
+
+def get_smoke(name: str):
+    """Reduced same-family config, f32 (CPU execution: the CPU backend lacks
+    some bf16 dot kernels; full configs stay bf16 — they are only lowered)."""
+    mod = importlib.import_module(f"repro.configs.{ALIASES.get(name, name)}")
+    cfg = mod.smoke_config()
+    return dataclasses.replace(cfg, dtype=jnp.float32, param_dtype=jnp.float32)
+
+
+def for_shape(cfg, shape: str):
+    """Shape-specialised config (e.g. sliding window for long-context decode)."""
+    spec = SHAPES[shape]
+    if shape == "long_500k" and cfg.arch_type not in ("ssm",):
+        # Dense/GQA/MoE/VLM/audio attention paths serve 500k through the
+        # sliding-window variant; hybrid already windows its attn layers.
+        if cfg.window == 0:
+            cfg = dataclasses.replace(cfg, window=LONG_WINDOW)
+    if cfg.learned_positions:
+        need = spec["seq"] + 1
+        if (cfg.max_positions or 8192) < need:
+            cfg = dataclasses.replace(cfg, max_positions=need)
+    return cfg
+
+
+def cache_len_for(cfg, shape: str) -> int:
+    seq = SHAPES[shape]["seq"]
+    if cfg.window:
+        return min(cfg.window, seq)
+    return seq
+
+
+def input_specs(cfg, shape: str) -> dict:
+    """ShapeDtypeStruct stand-ins for the step function's batch argument."""
+    spec = SHAPES[shape]
+    b, s = spec["batch"], spec["seq"]
+    i32 = jnp.int32
+    sd = jax.ShapeDtypeStruct
+    out = {}
+    if spec["kind"] == "train":
+        out["tokens"] = sd((b, s), i32)
+        out["labels"] = sd((b, s), i32)
+    elif spec["kind"] == "prefill":
+        out["tokens"] = sd((b, s), i32)
+    else:  # decode
+        out["tokens"] = sd((b, 1), i32)
+        out["pos"] = sd((b,), i32)
+    if cfg.is_encoder_decoder and spec["kind"] != "decode":
+        out["frames"] = sd((b, cfg.encoder_seq, cfg.d_model), cfg.dtype)
+    if cfg.arch_type == "vlm":
+        if spec["kind"] == "decode":
+            out["positions3"] = sd((3, b, 1), i32)
+        else:
+            out["vision_embeds"] = sd((b, cfg.num_patches, cfg.d_model), cfg.dtype)
+            out["positions3"] = sd((3, b, s), i32)
+    return out

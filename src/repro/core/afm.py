@@ -1,0 +1,167 @@
+"""AFM — the asynchronously-trained feature map (paper §2), as a JAX module.
+
+``AFMConfig`` holds the paper's hyper-parameters with the §3 defaults.
+``AFMState`` is the trainable pytree. Two train-step flavours:
+
+- ``train_step``      — faithful per-sample dynamics (B = 1 semantics).
+- ``train_step_batch``— B concurrent samples (bulk-asynchronous): B relay-race
+  searches run at once, conflicting GMU updates merge by averaging Eq. (3)
+  applied once per sample, and the batch's threshold crossings seed a single
+  cascade. B = 1 recovers ``train_step`` exactly.
+
+``train`` scans either step over the sample stream.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import cascade as cascade_lib
+from repro.core import links, schedules
+from repro.core import search as search_lib
+
+
+@dataclasses.dataclass(frozen=True)
+class AFMConfig:
+    """Paper §3 'Default configuration' unless overridden."""
+    side: int = 30                 # map is side x side units (N = side^2)
+    dim: int = 784                 # sample-space dimensionality
+    phi: int = 20                  # far links per unit
+    theta: int = 4                 # cascading threshold (= |N_j|, BTW mapping)
+    l_s: float = 0.05              # sample learning rate (Eq. 3)
+    c_o: float = 0.5               # l_c offset (Eq. 5)
+    c_s: float = 0.5               # l_c slope (Eq. 5)
+    c_m: float = 0.1               # early characteristic cascade size (Eq. 6)
+    c_d: float = 100.0             # cascade decay rate (Eq. 6)
+    e_factor: float = 3.0          # exploration iterations e = e_factor * N
+    i_max: int = 0                 # total training samples; 0 -> 600 * N
+    greedy_use_far: bool = True    # §2.1 step 3: compare near AND far neighbours
+    batch: int = 1                 # samples in flight per step
+    max_waves: int | None = None   # cascade safety bound
+
+    @property
+    def n_units(self) -> int:
+        return self.side * self.side
+
+    @property
+    def e(self) -> int:
+        return max(1, int(self.e_factor * self.n_units))
+
+    @property
+    def total_samples(self) -> int:
+        return self.i_max if self.i_max > 0 else 600 * self.n_units
+
+    @property
+    def num_steps(self) -> int:
+        return self.total_samples // self.batch
+
+
+class AFMState(NamedTuple):
+    w: jnp.ndarray      # (N, D) float32 unit weights
+    c: jnp.ndarray      # (N,) int32 cascading counters
+    far: jnp.ndarray    # (N, phi) int32 far-link table
+    near: jnp.ndarray   # (N, 4) int32 near-link table (-1 padded)
+    i: jnp.ndarray      # () int32 — samples consumed so far
+
+
+class StepAux(NamedTuple):
+    gmu: jnp.ndarray           # (B,) int32
+    q2: jnp.ndarray            # (B,) float32
+    cascade_size: jnp.ndarray  # () int32 (a_i for the step)
+    waves: jnp.ndarray         # () int32
+    greedy_steps: jnp.ndarray  # (B,) int32
+
+
+def init(key: jax.Array, cfg: AFMConfig, samples: jnp.ndarray | None = None) -> AFMState:
+    """Initialise weights (uniform in sample bounding box, or N(0, 0.1))."""
+    kw, kf = jax.random.split(key)
+    n = cfg.n_units
+    if samples is not None:
+        lo = samples.min(axis=0)
+        hi = samples.max(axis=0)
+        w = jax.random.uniform(kw, (n, cfg.dim), minval=lo, maxval=hi)
+    else:
+        w = 0.1 * jax.random.normal(kw, (n, cfg.dim))
+    return AFMState(
+        w=w.astype(jnp.float32),
+        c=jnp.zeros((n,), jnp.int32),
+        far=links.far_links(kf, cfg.side, cfg.phi),
+        near=links.near_neighbor_table(cfg.side),
+        i=jnp.int32(0),
+    )
+
+
+def _step(state: AFMState, samples: jnp.ndarray, key: jax.Array,
+          cfg: AFMConfig) -> tuple[AFMState, StepAux]:
+    """Shared body for faithful (B=1) and batched (B>1) steps."""
+    n, side = cfg.n_units, cfg.side
+    b = samples.shape[0]
+    k_search, k_cascade = jax.random.split(key)
+    i = state.i
+    l_c = schedules.cascade_learning_rate(i, cfg.total_samples, cfg.c_o, cfg.c_s)
+    p_i = schedules.cascade_probability(i, cfg.total_samples, n, cfg.c_m, cfg.c_d)
+
+    res = search_lib.heuristic_search(
+        state.w, state.near, state.far, samples, k_search, cfg.e,
+        greedy_use_far=cfg.greedy_use_far,
+    )
+
+    # Eq. (3) — GMU adaptation; conflicting GMUs merge by averaging the
+    # per-sample targets (B=1: exactly Eq. 3).
+    ones = jnp.ones((b,), jnp.float32)
+    counts = jnp.zeros((n,), jnp.float32).at[res.gmu].add(ones)
+    target_sum = jnp.zeros((n, cfg.dim), jnp.float32).at[res.gmu].add(samples)
+    hit = counts > 0
+    mean_target = jnp.where(hit[:, None], target_sum / jnp.maximum(counts, 1.0)[:, None], state.w)
+    w = state.w + cfg.l_s * (mean_target - state.w)
+
+    # Drive + cascade on the lattice view.
+    w_grid = w.reshape(side, side, cfg.dim)
+    c_grid = state.c.reshape(side, side)
+    gmu_counts = counts.astype(jnp.int32).reshape(side, side)
+    out = cascade_lib.drive_and_cascade(
+        w_grid, c_grid, gmu_counts, l_c=l_c, p=p_i, theta=cfg.theta,
+        key=k_cascade, max_waves=cfg.max_waves,
+    )
+    new_state = AFMState(
+        w=out.w.reshape(n, cfg.dim),
+        c=out.c.reshape(n),
+        far=state.far,
+        near=state.near,
+        i=i + b,
+    )
+    aux = StepAux(res.gmu, res.q2, out.size, out.waves, res.greedy_steps)
+    return new_state, aux
+
+
+def train_step(state: AFMState, sample: jnp.ndarray, key: jax.Array,
+               cfg: AFMConfig) -> tuple[AFMState, StepAux]:
+    """Faithful per-sample step. sample: (D,)."""
+    return _step(state, sample[None, :], key, cfg)
+
+
+def train_step_batch(state: AFMState, samples: jnp.ndarray, key: jax.Array,
+                     cfg: AFMConfig) -> tuple[AFMState, StepAux]:
+    """Bulk-asynchronous step over (B, D) samples."""
+    return _step(state, samples, key, cfg)
+
+
+def train(state: AFMState, data: jnp.ndarray, key: jax.Array, cfg: AFMConfig,
+          num_steps: int | None = None) -> tuple[AFMState, StepAux]:
+    """Scan the batched step over a sample stream.
+
+    data: (num_samples, D) — sampled with replacement each step.
+    Returns final state and stacked per-step aux.
+    """
+    num_steps = cfg.num_steps if num_steps is None else num_steps
+
+    def body(state, key):
+        ks, kd = jax.random.split(key)
+        idx = jax.random.randint(kd, (cfg.batch,), 0, data.shape[0])
+        return _step(state, data[idx], ks, cfg)
+
+    keys = jax.random.split(key, num_steps)
+    return jax.lax.scan(body, state, keys)

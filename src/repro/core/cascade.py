@@ -1,0 +1,184 @@
+"""Cascade-driven adaptation (paper §2.2), TPU-adapted as parallel wave toppling.
+
+Paper rules (per unit j, threshold theta shared):
+  Firing:    if c_j reaches theta the unit fires — resets c_j to 0 and
+             broadcasts w_j to its 4 near neighbours.
+  Adapt:     a unit receiving w_k applies  w_j += l_c(i) * (w_k - w_j).
+  Drive:     every adaptation increments c_j with probability p_i.
+
+The paper executes firings asynchronously/recursively. For p_i = 1 and
+theta = |N_j| this is the abelian BTW sandpile: the multiset of topplings and
+the final counters are independent of toppling order, so firing all
+super-threshold units *simultaneously per wave* reaches the same counter fixed
+point. We exploit this: one cascade = a ``lax.while_loop`` over waves; each
+wave is a 4-neighbour stencil on the (side, side) lattice. Weight adaptation
+within a wave applies all incoming broadcasts at once:
+
+    w_j <- w_j + l_c * sum_{fired near neighbours k} (w_k - w_j)
+
+a mean-field merge of the paper's sequential per-message rule (equal up to
+O(l_c^2) ordering terms; validated against the sequential oracle in tests).
+
+Cascade size a_i counts firing incidents (paper's definition); A_i = a_i / N.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class CascadeResult(NamedTuple):
+    w: jnp.ndarray        # (side, side, D) adapted weights
+    c: jnp.ndarray        # (side, side) int32 counters
+    size: jnp.ndarray     # () int32 — number of firing incidents a_i
+    waves: jnp.ndarray    # () int32 — number of parallel waves
+
+
+def _shift_sum(x: jnp.ndarray) -> jnp.ndarray:
+    """Sum of the 4 lattice-neighbour values, zero beyond the boundary.
+
+    Works for x of shape (side, side) or (side, side, D).
+    """
+    z = jnp.zeros_like(x[:1])
+    up = jnp.concatenate([x[1:], z], axis=0)       # neighbour below -> value from r+1
+    dn = jnp.concatenate([z, x[:-1]], axis=0)
+    zc = jnp.zeros_like(x[:, :1])
+    lf = jnp.concatenate([x[:, 1:], zc], axis=1)
+    rt = jnp.concatenate([zc, x[:, :-1]], axis=1)
+    return up + dn + lf + rt
+
+
+def _shift4(x: jnp.ndarray) -> jnp.ndarray:
+    """(4, side, side[, D]) stack of neighbour values (zero-padded edges)."""
+    z = jnp.zeros_like(x[:1])
+    zc = jnp.zeros_like(x[:, :1])
+    return jnp.stack(
+        [
+            jnp.concatenate([x[1:], z], axis=0),
+            jnp.concatenate([z, x[:-1]], axis=0),
+            jnp.concatenate([x[:, 1:], zc], axis=1),
+            jnp.concatenate([zc, x[:, :-1]], axis=1),
+        ],
+        axis=0,
+    )
+
+
+def cascade(w: jnp.ndarray, c: jnp.ndarray, fired0: jnp.ndarray, *,
+            l_c, p, theta: int, key: jax.Array,
+            max_waves: int | None = None) -> CascadeResult:
+    """Run one full cascade to quiescence.
+
+    Args:
+      w:       (side, side, D) float weights.
+      c:       (side, side) int32 counters.
+      fired0:  (side, side) bool — initially firing units (counters already
+               >= theta; typically the GMU(s) whose drive crossed the
+               threshold).
+      l_c:     scalar cascading learning rate l_c(i) (Eq. 5).
+      p:       scalar cascading probability p_i (Eq. 6).
+      theta:   firing threshold (paper/stat-mech mapping: theta = 4).
+      key:     PRNG key for the Bernoulli drive.
+      max_waves: safety bound on wave count (default 8 * side * side).
+    """
+    side = c.shape[0]
+    max_waves = (8 * side * side) if max_waves is None else max_waves
+
+    def body(carry):
+        w, c, fired, key, size, waves = carry
+        key, sub = jax.random.split(key)
+        firedf = fired.astype(w.dtype)
+        # Reset fired counters (Firing rule).
+        c = jnp.where(fired, 0, c)
+        # Receive broadcasts from fired neighbours.
+        n_recv = _shift_sum(fired.astype(jnp.int32))                 # (side, side)
+        sum_wk = _shift_sum(w * firedf[..., None] if w.ndim == 3 else w * firedf)
+        nf = n_recv.astype(w.dtype)
+        w = w + l_c * (sum_wk - nf[..., None] * w if w.ndim == 3 else sum_wk - nf * w)
+        # Drive: one Bernoulli(p) per received broadcast (adaptation).
+        bern = jax.random.uniform(sub, (4, side, side)) < p          # (4, s, s)
+        recv4 = _shift4(fired.astype(jnp.int32))                     # (4, s, s)
+        inc = jnp.sum(bern.astype(jnp.int32) * recv4, axis=0)
+        c = c + inc
+        new_fired = (c >= theta) & (n_recv > 0)
+        return (w, c, new_fired, key,
+                size + fired.sum(dtype=jnp.int32), waves + 1)
+
+    def cond(carry):
+        _, _, fired, _, _, waves = carry
+        return jnp.any(fired) & (waves < max_waves)
+
+    w, c, _, _, size, waves = jax.lax.while_loop(
+        cond, body, (w, c, fired0, key, jnp.int32(0), jnp.int32(0))
+    )
+    return CascadeResult(w, c, size, waves)
+
+
+def drive_and_cascade(w, c, gmu_mask, *, l_c, p, theta: int, key: jax.Array,
+                      max_waves: int | None = None) -> CascadeResult:
+    """Apply the post-sample drive to GMU unit(s), then cascade if triggered.
+
+    gmu_mask: (side, side) int32 — number of sample-adaptations each unit just
+    performed (0/1 in faithful mode; can exceed 1 in batched mode). Each
+    adaptation increments the counter with probability p.
+    """
+    side = c.shape[0]
+    k0, k1 = jax.random.split(key)
+    # Binomial(gmu_mask, p) via per-unit uniform draws against the CDF is
+    # overkill for small counts; use sum of up to max_count Bernoullis.
+    max_count = 8
+    draws = jax.random.uniform(k0, (max_count, side, side)) < p
+    counts = jnp.sum(
+        draws.astype(jnp.int32)
+        * (jnp.arange(max_count)[:, None, None] < jnp.minimum(gmu_mask, max_count)),
+        axis=0,
+    )
+    c = c + counts
+    fired0 = c >= theta
+    return cascade(w, c, fired0, l_c=l_c, p=p, theta=theta, key=k1,
+                   max_waves=max_waves)
+
+
+def sequential_cascade_reference(w, c, fired_queue, *, l_c, p, theta, seed: int):
+    """Pure-Python sequential (depth-first, paper Algorithm 1) oracle.
+
+    Used in tests to validate that wave-parallel toppling matches the
+    recursive formulation: identical counter fixed points / cascade sizes at
+    p=1 (abelian regime) and statistically matching weights for l_c << 1.
+    Operates on numpy-converted copies; NOT jittable.
+    """
+    import numpy as np
+
+    rng = np.random.default_rng(seed)
+    w = np.array(w, dtype=np.float64)
+    c = np.array(c, dtype=np.int64)
+    side = c.shape[0]
+    stack = list(fired_queue)
+    size = 0
+
+    def neighbors(r, cc):
+        out = []
+        if r > 0:
+            out.append((r - 1, cc))
+        if r < side - 1:
+            out.append((r + 1, cc))
+        if cc > 0:
+            out.append((r, cc - 1))
+        if cc < side - 1:
+            out.append((r, cc + 1))
+        return out
+
+    while stack:
+        r, cc = stack.pop()
+        if c[r, cc] < theta:
+            continue
+        c[r, cc] = 0
+        size += 1
+        for (nr, nc) in neighbors(r, cc):
+            w[nr, nc] = w[nr, nc] + l_c * (w[r, cc] - w[nr, nc])
+            if rng.random() < p:
+                c[nr, nc] += 1
+            if c[nr, nc] >= theta:
+                stack.append((nr, nc))
+    return w, c, size

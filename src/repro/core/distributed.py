@@ -1,0 +1,278 @@
+"""Sharded AFM training via shard_map — the paper's scalability claim on a mesh.
+
+Layout (production mesh ``(data, model)`` or ``(pod, data, model)``):
+
+- The unit lattice ``(side, side, D)`` is sharded by **rows of the lattice**
+  over the ``model`` axis and replicated over ``data`` (and ``pod``).
+- The sample batch is sharded over ``data`` (and ``pod``).
+
+Communication per step — deliberately sparse, mirroring the paper's loose
+coupling:
+
+- search: each model shard probes ``e / n_model`` of its *local* units per
+  sample (the far-link walk's stationary distribution is near-uniform thanks
+  to the Kleinberg wiring; probing local units uniformly is the SPMD-native
+  equivalent — see DESIGN.md §3), then one (q, idx) min-reduce over ``model``
+  elects the exploration winner; each greedy hop is one more min-reduce over
+  the candidate set (near + far neighbours of the incumbent).
+- adaptation: GMU scatter-updates are local to the owning shard; the merge
+  over ``data`` is one psum of (count, target) pairs restricted to hit units.
+- cascade: each wave exchanges exactly one boundary row of (fired, w) with
+  each lattice-adjacent shard (collective_permute), plus a scalar any-fired
+  reduction.
+"""
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.core import schedules
+from repro.core.afm import AFMConfig, AFMState
+
+
+class ShardedAux(NamedTuple):
+    cascade_size: jnp.ndarray
+    waves: jnp.ndarray
+    mean_q2: jnp.ndarray
+
+
+def _argmin_over_axis(q, idx, axis_name):
+    """Global (min q, its idx) across a mesh axis. q, idx: (B,)."""
+    qs = jax.lax.all_gather(q, axis_name)        # (M, B)
+    ids = jax.lax.all_gather(idx, axis_name)     # (M, B)
+    k = jnp.argmin(qs, axis=0)                   # (B,)
+    return (jnp.take_along_axis(qs, k[None], axis=0)[0],
+            jnp.take_along_axis(ids, k[None], axis=0)[0])
+
+
+def _halo_rows(x, axis_name, n_shards):
+    """Exchange boundary rows along the sharded lattice-row axis.
+
+    x: (rows_local, side, ...) -> (row_above, row_below) each (side, ...),
+    zeros at the global lattice boundary.
+    """
+    me = jax.lax.axis_index(axis_name)
+    up = [(i, (i - 1) % n_shards) for i in range(n_shards)]     # send my top row up
+    dn = [(i, (i + 1) % n_shards) for i in range(n_shards)]     # send my bottom row down
+    from_below = jax.lax.ppermute(x[:1], axis_name, up)[0]      # row that sits below me
+    from_above = jax.lax.ppermute(x[-1:], axis_name, dn)[0]     # row that sits above me
+    zero = jnp.zeros_like(from_above)
+    from_above = jnp.where(me == 0, zero, from_above)
+    from_below = jnp.where(me == n_shards - 1, zero, from_below)
+    return from_above, from_below
+
+
+def _shift_sum_halo(x, above, below):
+    """4-neighbour sum with explicit halo rows. x: (R, S[, D])."""
+    up = jnp.concatenate([x[1:], below[None]], axis=0)
+    dn = jnp.concatenate([above[None], x[:-1]], axis=0)
+    zc = jnp.zeros_like(x[:, :1])
+    lf = jnp.concatenate([x[:, 1:], zc], axis=1)
+    rt = jnp.concatenate([zc, x[:, :-1]], axis=1)
+    return up + dn + lf + rt
+
+
+def _shift4_halo(x, above, below):
+    up = jnp.concatenate([x[1:], below[None]], axis=0)
+    dn = jnp.concatenate([above[None], x[:-1]], axis=0)
+    zc = jnp.zeros_like(x[:, :1])
+    lf = jnp.concatenate([x[:, 1:], zc], axis=1)
+    rt = jnp.concatenate([zc, x[:, :-1]], axis=1)
+    return jnp.stack([up, dn, lf, rt], axis=0)
+
+
+def sharded_cascade(w, c, fired0, *, l_c, p, theta, key, axis_name, n_shards,
+                    max_waves):
+    """Wave toppling with halo exchange. w: (R, S, D) local rows."""
+    rows, side = c.shape
+
+    def body(carry):
+        w, c, fired, key, size, waves = carry
+        key, sub = jax.random.split(key)
+        firedf = fired.astype(w.dtype)
+        c = jnp.where(fired, 0, c)
+        fa, fb = _halo_rows(firedf, axis_name, n_shards)
+        wa, wb = _halo_rows(w * firedf[..., None], axis_name, n_shards)
+        n_recv = _shift_sum_halo(firedf, fa, fb)
+        sum_wk = _shift_sum_halo(w * firedf[..., None], wa, wb)
+        w = w + l_c * (sum_wk - n_recv[..., None] * w)
+        recv4 = _shift4_halo(fired.astype(jnp.int32), fa.astype(jnp.int32),
+                             fb.astype(jnp.int32))
+        bern = (jax.random.uniform(sub, (4, rows, side)) < p).astype(jnp.int32)
+        c = c + jnp.sum(bern * recv4, axis=0)
+        new_fired = (c >= theta) & (n_recv > 0)
+        size = size + jax.lax.psum(fired.sum(dtype=jnp.int32), axis_name)
+        return w, c, new_fired, key, size, waves + 1
+
+    def cond(carry):
+        _, _, fired, _, _, waves = carry
+        any_fired = jax.lax.psum(fired.any().astype(jnp.int32), axis_name) > 0
+        return any_fired & (waves < max_waves)
+
+    w, c, _, _, size, waves = jax.lax.while_loop(
+        cond, body, (w, c, fired0, key, jnp.int32(0), jnp.int32(0)))
+    return w, c, size, waves
+
+
+def make_sharded_train_step(cfg: AFMConfig, mesh, *, data_axes=("data",),
+                            model_axis: str = "model"):
+    """Build a pjit-able sharded train step.
+
+    Returns (step_fn, state_shardings): step(state, samples, key) -> (state, aux),
+    where state.w/.c are lattice-row-sharded over ``model`` and replicated over
+    the data axes; samples are sharded over the data axes.
+    """
+    n_model = mesh.shape[model_axis]
+    n_data = 1
+    for a in data_axes:
+        n_data *= mesh.shape[a]
+    side = cfg.side
+    assert side % n_model == 0, f"side {side} must divide over model={n_model}"
+    rows = side // n_model
+    e_local = max(1, cfg.e // n_model)
+    data_spec = P(data_axes if len(data_axes) > 1 else data_axes[0])
+
+    def local_search(w_local, samples, row0, key):
+        """Probe e_local random local units + greedy via min-reduces."""
+        b = samples.shape[0]
+        w_flat = w_local.reshape(rows * side, -1)
+        kp, kg = jax.random.split(key)
+        probes = jax.random.randint(kp, (b, e_local), 0, rows * side)
+        del kg
+        wp = w_flat[probes]                              # (B, e_local, D)
+        d = wp - samples[:, None, :]
+        q = jnp.sum(d * d, axis=-1)                      # (B, e_local)
+        k = jnp.argmin(q, axis=-1)
+        q_best = jnp.take_along_axis(q, k[:, None], axis=-1)[:, 0]
+        local_idx = jnp.take_along_axis(probes, k[:, None], axis=-1)[:, 0]
+        gidx = (row0 * side + local_idx).astype(jnp.int32)  # global flat index
+        q_min, j_min = _argmin_over_axis(q_best, gidx, model_axis)
+        return j_min, q_min
+
+    def greedy(w_local, samples, row0, jstar, qstar, near, far):
+        """Min-reduce greedy descent; candidates evaluated by their owner."""
+        def body(carry):
+            j, q, active, steps = carry
+            cands = jnp.concatenate([near[j], far[j]], axis=-1)    # (B, C) global
+            valid = cands >= 0
+            lo = row0 * side
+            local = valid & (cands >= lo) & (cands < lo + rows * side)
+            rows_idx = jnp.clip(cands - lo, 0, rows * side - 1)
+            wc = w_local.reshape(rows * side, -1)[rows_idx]        # (B, C, D)
+            dq = jnp.sum((wc - samples[:, None, :]) ** 2, axis=-1)
+            dq = jnp.where(local, dq, jnp.inf)
+            k = jnp.argmin(dq, axis=-1)
+            q_loc = jnp.take_along_axis(dq, k[:, None], axis=-1)[:, 0]
+            j_loc = jnp.take_along_axis(cands, k[:, None], axis=-1)[:, 0]
+            q_glob, j_glob = _argmin_over_axis(q_loc, j_loc, model_axis)
+            improve = active & (q_glob < q)
+            return (jnp.where(improve, j_glob, j),
+                    jnp.where(improve, q_glob, q),
+                    improve, steps + 1)
+
+        def cond(carry):
+            _, _, active, steps = carry
+            return jnp.any(active) & (steps < side * side)
+
+        b = samples.shape[0]
+        j, q, _, _ = jax.lax.while_loop(
+            cond, body,
+            (jstar, qstar, jnp.ones((b,), bool), jnp.int32(0)))
+        return j, q
+
+    def step(state: AFMState, samples, key):
+        # Per-device views: w (rows, side, D); samples (B_local, D).
+        w_local = state.w
+        c_local = state.c
+        me = jax.lax.axis_index(model_axis)
+        row0 = me * rows
+        # Keys: search key must differ per data shard; cascade key must be
+        # IDENTICAL across data shards (w/c replicated there) but differ per
+        # model shard.
+        didx = jax.lax.axis_index(data_axes[0])
+        for a in data_axes[1:]:
+            didx = didx * mesh.shape[a] + jax.lax.axis_index(a)
+        k_search = jax.random.fold_in(jax.random.fold_in(key, didx), me)
+        k_casc = jax.random.fold_in(jax.random.fold_in(key, 10_000_019), me)
+
+        i = state.i
+        l_c = schedules.cascade_learning_rate(i, cfg.total_samples, cfg.c_o, cfg.c_s)
+        p_i = schedules.cascade_probability(i, cfg.total_samples, cfg.n_units,
+                                            cfg.c_m, cfg.c_d)
+
+        ks, kg = jax.random.split(k_search)
+        jstar, qstar = local_search(w_local, samples, row0, ks)
+        del kg
+        gmu, q2 = greedy(w_local, samples, row0, jstar, qstar, state.near, state.far)
+
+        # Eq. (3) adaptation, merged over the data axes.
+        lo = row0 * side
+        mine = (gmu >= lo) & (gmu < lo + rows * side)
+        loc = jnp.clip(gmu - lo, 0, rows * side - 1)
+        ones = mine.astype(jnp.float32)
+        counts = jnp.zeros((rows * side,), jnp.float32).at[loc].add(ones)
+        tsum = jnp.zeros((rows * side, cfg.dim), jnp.float32).at[loc].add(
+            samples * ones[:, None])
+        for a in data_axes:
+            counts = jax.lax.psum(counts, a)
+            tsum = jax.lax.psum(tsum, a)
+        hit = counts > 0
+        w_flat = w_local.reshape(rows * side, -1)
+        mean_target = jnp.where(hit[:, None],
+                                tsum / jnp.maximum(counts, 1.0)[:, None], w_flat)
+        w_flat = w_flat + cfg.l_s * (mean_target - w_flat)
+        w_local = w_flat.reshape(rows, side, cfg.dim)
+
+        # Drive (identical across data shards by key construction).
+        kd, kc = jax.random.split(k_casc)
+        max_count = 8
+        gmu_counts = counts.astype(jnp.int32).reshape(rows, side)
+        draws = jax.random.uniform(kd, (max_count, rows, side)) < p_i
+        inc = jnp.sum(draws.astype(jnp.int32) *
+                      (jnp.arange(max_count)[:, None, None]
+                       < jnp.minimum(gmu_counts, max_count)), axis=0)
+        c_grid = c_local.reshape(rows, side) + inc
+        fired0 = c_grid >= cfg.theta
+        max_waves = cfg.max_waves or 8 * cfg.n_units
+        w_local, c_grid, size, waves = sharded_cascade(
+            w_local, c_grid, fired0, l_c=l_c, p=p_i, theta=cfg.theta, key=kc,
+            axis_name=model_axis, n_shards=n_model, max_waves=max_waves)
+
+        new_state = AFMState(w=w_local, c=c_grid.reshape(rows * side),
+                             far=state.far, near=state.near,
+                             i=i + jnp.int32(cfg.batch))
+        mean_q2 = q2.mean()
+        for a in data_axes:
+            mean_q2 = jax.lax.pmean(mean_q2, a)
+        return new_state, ShardedAux(size, waves, mean_q2)
+
+    state_specs = AFMState(
+        w=P(model_axis),        # (side, side, D) row-sharded
+        c=P(model_axis),        # (N,) row-sharded (rows*side blocks)
+        far=P(),
+        near=P(),
+        i=P(),
+    )
+    step_fn = jax.shard_map(
+        step, mesh=mesh,
+        in_specs=(state_specs, data_spec, P()),
+        out_specs=(state_specs, ShardedAux(P(), P(), P())),
+        check_vma=False,
+    )
+    return step_fn, state_specs
+
+
+def shard_state_for_mesh(state: AFMState, cfg: AFMConfig, mesh,
+                         model_axis: str = "model") -> AFMState:
+    """Reshape the dense AFMState for the sharded step: w -> (side, side, D)."""
+    return AFMState(
+        w=state.w.reshape(cfg.side, cfg.side, cfg.dim),
+        c=state.c,
+        far=state.far,
+        near=state.near,
+        i=state.i,
+    )

@@ -1,0 +1,130 @@
+"""Link construction for the AFM lattice (paper §2, "Links").
+
+Units live on a ``side x side`` square lattice (unit space). Two link kinds:
+
+- **near links**: the 4-neighbour lattice (Manhattan distance <= 1), used by
+  both the greedy search phase and cascade-driven adaptation.
+- **far links**: ``phi`` long-range links per unit, drawn with probability
+  proportional to ``D_jk^-1`` (Manhattan distance in unit space) — the
+  Kleinberg-style small-world wiring the paper relies on for O(log N)
+  exploration diffusion.
+
+Two exact samplers are provided: a categorical sampler (materialises one
+distance row per unit; fine up to ~10k units) and a ring/rejection sampler
+that is O(phi) per unit and exact, for production-scale maps.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+NEAR_DEGREE = 4  # square lattice
+
+
+def unit_coords(side: int) -> jnp.ndarray:
+    """(N, 2) int32 array of (row, col) for each unit, row-major."""
+    r, c = jnp.meshgrid(jnp.arange(side), jnp.arange(side), indexing="ij")
+    return jnp.stack([r.ravel(), c.ravel()], axis=-1).astype(jnp.int32)
+
+
+def near_neighbor_table(side: int) -> jnp.ndarray:
+    """(N, 4) int32 table of lattice neighbours; -1 pads missing edges.
+
+    Order: up, down, left, right.
+    """
+    n = side * side
+    idx = jnp.arange(n, dtype=jnp.int32)
+    r, c = idx // side, idx % side
+    up = jnp.where(r > 0, idx - side, -1)
+    dn = jnp.where(r < side - 1, idx + side, -1)
+    lf = jnp.where(c > 0, idx - 1, -1)
+    rt = jnp.where(c < side - 1, idx + 1, -1)
+    return jnp.stack([up, dn, lf, rt], axis=-1)
+
+
+def manhattan_row(side: int, j: jnp.ndarray) -> jnp.ndarray:
+    """(N,) Manhattan distances from unit ``j`` to every unit."""
+    idx = jnp.arange(side * side, dtype=jnp.int32)
+    rj, cj = j // side, j % side
+    r, c = idx // side, idx % side
+    return jnp.abs(r - rj) + jnp.abs(c - cj)
+
+
+def far_links_categorical(key: jax.Array, side: int, phi: int) -> jnp.ndarray:
+    """(N, phi) far-link table; P(j -> k) ∝ D_jk^-1, k != j. Exact, O(N^2)."""
+    n = side * side
+
+    def one(key, j):
+        d = manhattan_row(side, j).astype(jnp.float32)
+        logits = jnp.where(d > 0, -jnp.log(d), -jnp.inf)
+        return jax.random.categorical(key, logits, shape=(phi,))
+
+    keys = jax.random.split(key, n)
+    return jax.vmap(one)(keys, jnp.arange(n, dtype=jnp.int32)).astype(jnp.int32)
+
+
+def _ring_point(key: jax.Array, r: jnp.ndarray, c: jnp.ndarray, d: jnp.ndarray):
+    """Uniform point on the (unbounded) Manhattan ring of radius d around (r, c)."""
+    k1, k2 = jax.random.split(key)
+    # Ring has 4d points: parametrise by t in [0, 4d).
+    t = jax.random.randint(k1, (), 0, 4 * d)
+    quad = t // d
+    off = t % d
+    dr = jnp.select(
+        [quad == 0, quad == 1, quad == 2, quad == 3],
+        [off, d - off, -off, -(d - off)],
+    )
+    dc = jnp.select(
+        [quad == 0, quad == 1, quad == 2, quad == 3],
+        [d - off, -off, -(d - off), off],
+    )
+    del k2
+    return r + dr, c + dc
+
+
+def far_links_ring(key: jax.Array, side: int, phi: int, rounds: int = 64) -> jnp.ndarray:
+    """(N, phi) far-link table via exact rejection sampling; O(N * phi * rounds).
+
+    P(d) ∝ (ring size 4d) * d^-1 = const  =>  d ~ Uniform[1, 2(side-1)];
+    point uniform on the ring; reject off-lattice points. Conditional on
+    acceptance this is exactly ∝ D^-1 restricted to the lattice.
+    Falls back to a uniform in-lattice unit if all rounds reject (vanishing
+    probability for rounds ~ 64).
+    """
+    n = side * side
+    dmax = 2 * (side - 1)
+
+    def one_link(key, j):
+        r0, c0 = j // side, j % side
+
+        def body(carry, key):
+            found, res = carry
+            k1, k2, k3 = jax.random.split(key, 3)
+            d = jax.random.randint(k1, (), 1, dmax + 1)
+            rr, cc = _ring_point(k2, r0, c0, d)
+            ok = (rr >= 0) & (rr < side) & (cc >= 0) & (cc < side)
+            cand = rr * side + cc
+            res = jnp.where(~found & ok, cand, res)
+            found = found | ok
+            del k3
+            return (found, res), None
+
+        fallback = (j + 1 + jax.random.randint(key, (), 0, n - 1)) % n
+        (found, res), _ = jax.lax.scan(
+            body, (jnp.bool_(False), fallback), jax.random.split(key, rounds)
+        )
+        return res.astype(jnp.int32)
+
+    keys = jax.random.split(key, n * phi).reshape(n, phi, 2)
+    js = jnp.arange(n, dtype=jnp.int32)
+    return jax.vmap(lambda ks, j: jax.vmap(lambda k: one_link(k, j))(ks))(keys, js)
+
+
+@functools.partial(jax.jit, static_argnums=(1, 2, 3))
+def far_links(key: jax.Array, side: int, phi: int, exact_threshold: int = 10_000) -> jnp.ndarray:
+    """Dispatch: categorical sampler for small maps, ring sampler for large."""
+    if side * side <= exact_threshold:
+        return far_links_categorical(key, side, phi)
+    return far_links_ring(key, side, phi)

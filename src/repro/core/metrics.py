@@ -1,0 +1,40 @@
+"""Map-quality metrics (paper §3, 'Measuring map quality' + §2.1 search error).
+
+- Quantization error Q: mean distance of samples to their BMU weight.
+- Topological error T: fraction of samples whose best and second-best units
+  are not lattice-adjacent (Li et al., 1993 topology-distortion flavour).
+- Search error F: fraction of heuristic searches whose GMU != exact BMU.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.core import search as search_lib
+
+
+def quantization_error(w: jnp.ndarray, samples: jnp.ndarray, chunk: int = 4096):
+    """Q = mean_i min_j |w_j - s_i| (Euclidean, per the paper). Eval-time;
+    chunked host loop to bound the (chunk, N) distance matrix."""
+    total = jnp.float32(0.0)
+    m = samples.shape[0]
+    for lo in range(0, m, chunk):
+        _, q2 = search_lib.exact_bmu(w, samples[lo:lo + chunk])
+        total = total + jnp.sum(jnp.sqrt(q2))
+    return total / m
+
+
+def topological_error(w: jnp.ndarray, samples: jnp.ndarray, side: int):
+    """T = fraction of samples whose BMU and 2nd BMU are not near-linked."""
+    b1, b2 = search_lib.second_bmu(w, samples)
+    r1, c1 = b1 // side, b1 % side
+    r2, c2 = b2 // side, b2 % side
+    manhattan = jnp.abs(r1 - r2) + jnp.abs(c1 - c2)
+    return jnp.mean((manhattan > 1).astype(jnp.float32))
+
+
+def search_error(w, near, far, samples, key, e: int, greedy_use_far: bool = True):
+    """F over a probe batch: GMU (heuristic) vs BMU (exact) disagreement rate."""
+    res = search_lib.heuristic_search(w, near, far, samples, key, e,
+                                      greedy_use_far=greedy_use_far)
+    bmu, _ = search_lib.exact_bmu(w, samples)
+    return jnp.mean((res.gmu != bmu).astype(jnp.float32)), res

@@ -1,0 +1,95 @@
+"""AFMProbe — attach the paper's topographic map to any model's hidden states.
+
+The probe consumes a stream of vectors (pooled hidden states for LM training,
+router logits for MoE cartography) and self-organises them online with the
+paper's cascade mechanics. It is a first-class, composable feature: pure
+function of (probe_state, activations, key), pytree state, no host callbacks,
+negligible FLOPs next to a transformer step — so it can be fused into
+``train_step`` under pjit and sharded with the same mesh.
+
+Search mode:
+- 'heuristic': the paper's far-link walk (faithful, O(e) gathers);
+- 'exact': full BMU matmul (cheap for probe-sized maps; the Pallas
+  ``kernels.bmu`` op is the TPU fast path).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import afm, cascade as cascade_lib, schedules
+from repro.core import search as search_lib
+
+
+@dataclasses.dataclass(frozen=True)
+class ProbeConfig:
+    side: int = 16
+    dim: int = 512                  # feature dim of the tapped activations
+    i_max: int = 100_000            # expected total vectors over training
+    search: str = "exact"           # 'exact' | 'heuristic'
+    l_s: float = 0.05
+    theta: int = 4
+    c_o: float = 0.5
+    c_s: float = 0.5
+    c_m: float = 0.1
+    c_d: float = 100.0
+    phi: int = 8
+    e_factor: float = 0.5
+    max_waves: int = 4096
+
+    def afm_config(self) -> afm.AFMConfig:
+        return afm.AFMConfig(
+            side=self.side, dim=self.dim, phi=self.phi, theta=self.theta,
+            l_s=self.l_s, c_o=self.c_o, c_s=self.c_s, c_m=self.c_m,
+            c_d=self.c_d, e_factor=self.e_factor, i_max=self.i_max,
+            max_waves=self.max_waves,
+        )
+
+
+class ProbeState(NamedTuple):
+    afm: afm.AFMState
+
+
+def init(key: jax.Array, cfg: ProbeConfig) -> ProbeState:
+    return ProbeState(afm.init(key, cfg.afm_config()))
+
+
+def pool_hidden(h: jnp.ndarray) -> jnp.ndarray:
+    """(B, S, D) token activations -> (B, D) mean-pooled probe vectors."""
+    return h.mean(axis=1)
+
+
+def update(state: ProbeState, vectors: jnp.ndarray, key: jax.Array,
+           cfg: ProbeConfig) -> tuple[ProbeState, afm.StepAux]:
+    """Feed (B, dim) vectors through one batched AFM step."""
+    acfg = cfg.afm_config()
+    s = state.afm
+    if cfg.search == "exact":
+        # Same step as afm._step but with the exact BMU (probe fast path).
+        n, side = acfg.n_units, acfg.side
+        b = vectors.shape[0]
+        k_c = key
+        i = s.i
+        l_c = schedules.cascade_learning_rate(i, acfg.total_samples, acfg.c_o, acfg.c_s)
+        p_i = schedules.cascade_probability(i, acfg.total_samples, n, acfg.c_m, acfg.c_d)
+        gmu, q2 = search_lib.exact_bmu(s.w, vectors)
+        ones = jnp.ones((b,), jnp.float32)
+        counts = jnp.zeros((n,), jnp.float32).at[gmu].add(ones)
+        tsum = jnp.zeros((n, acfg.dim), jnp.float32).at[gmu].add(vectors)
+        hit = counts > 0
+        tmean = jnp.where(hit[:, None], tsum / jnp.maximum(counts, 1.0)[:, None], s.w)
+        w = s.w + acfg.l_s * (tmean - s.w)
+        out = cascade_lib.drive_and_cascade(
+            w.reshape(side, side, acfg.dim), s.c.reshape(side, side),
+            counts.astype(jnp.int32).reshape(side, side),
+            l_c=l_c, p=p_i, theta=acfg.theta, key=k_c, max_waves=acfg.max_waves)
+        ns = afm.AFMState(out.w.reshape(n, acfg.dim), out.c.reshape(n),
+                          s.far, s.near, i + b)
+        aux = afm.StepAux(gmu, q2, out.size, out.waves,
+                          jnp.zeros((b,), jnp.int32))
+        return ProbeState(ns), aux
+    ns, aux = afm.train_step_batch(s, vectors, key, acfg)
+    return ProbeState(ns), aux

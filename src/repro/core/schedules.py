@@ -1,0 +1,40 @@
+"""Training schedules from the paper.
+
+- Eq. (5): cascading learning rate l_c(i), a smooth tanh ramp-down in (0, 1).
+- Eq. (6): cascading probability p_i — the scale-invariant parametrisation
+  that decouples fractional cascade size A_i = a_i / N from map size N.
+- SOM baseline schedules (exponentially decaying sigma / lr) for som.py.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def cascade_learning_rate(i, i_max: int, c_o: float, c_s: float):
+    """Eq. (5): l_c(i) = (1 + tanh((c_o - i/i_max) / c_s)) / 2 in (0, 1)."""
+    frac = jnp.asarray(i, jnp.float32) / jnp.float32(i_max)
+    return (1.0 + jnp.tanh((c_o - frac) / c_s)) / 2.0
+
+
+def cascade_probability(i, i_max: int, n_units: int, c_m: float, c_d: float):
+    """Eq. (6): p_i = (1 - 1/sqrt(c_m N)) (1 - i/i_max)^(c_d / N).
+
+    c_m controls the characteristic early-training cascade size (1/N << c_m < 1);
+    c_d controls the decay rate of the characteristic size over training.
+    """
+    frac = jnp.asarray(i, jnp.float32) / jnp.float32(i_max)
+    base = 1.0 - 1.0 / jnp.sqrt(jnp.float32(c_m * n_units))
+    # Guard the power at i = i_max (0^x) — clamp the base of the exponent.
+    decay = jnp.power(jnp.clip(1.0 - frac, 1e-12, 1.0), jnp.float32(c_d) / jnp.float32(n_units))
+    return base * decay
+
+
+def som_sigma(i, i_max: int, sigma0: float, sigma_end: float = 1.0):
+    """Exponential neighbourhood-radius decay for the SOM baseline."""
+    frac = jnp.asarray(i, jnp.float32) / jnp.float32(i_max)
+    return sigma0 * jnp.power(sigma_end / sigma0, frac)
+
+
+def som_lr(i, i_max: int, lr0: float, lr_end: float = 0.01):
+    frac = jnp.asarray(i, jnp.float32) / jnp.float32(i_max)
+    return lr0 * jnp.power(lr_end / lr0, frac)

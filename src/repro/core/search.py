@@ -1,0 +1,129 @@
+"""The distributed heuristic search (paper §2.1).
+
+A sample's search is a relay race over the map:
+
+1. **Random exploration** — for ``e`` iterations the sample hops from its
+   current holder to a uniformly random far neighbour (or stays, each of the
+   ``phi + 1`` choices uniform), tracking the best unit seen so far.
+2. **Greedy exploitation** — from the best unit ``j*``, repeatedly move to the
+   neighbour (near links; optionally also far links, per the §2.1 text) with
+   the smallest distance to the sample, until no neighbour improves.
+
+All functions are batched over B concurrent samples (``vmap`` semantics):
+running B relay races at once is exactly the paper's "more samples processed
+simultaneously" future-work direction, and each race follows the paper's
+per-sample dynamics.
+
+Distances are squared Euclidean internally (argmin-equivalent to Eq. (1)).
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class SearchResult(NamedTuple):
+    gmu: jnp.ndarray          # (B,) int32 — good-matching unit per sample
+    q2: jnp.ndarray           # (B,) float32 — squared distance |w_gmu - s|^2
+    greedy_steps: jnp.ndarray  # (B,) int32 — greedy-descent hop count
+    explored: jnp.ndarray      # (B,) int32 — exploration hops (== e)
+
+
+def _sqdist(w_rows: jnp.ndarray, s: jnp.ndarray) -> jnp.ndarray:
+    d = w_rows - s
+    return jnp.sum(d * d, axis=-1)
+
+
+def exploration_phase(w, far, samples, key, e: int):
+    """Random exploration: (B,) start units hop over far links for e steps."""
+    b = samples.shape[0]
+    n, phi = far.shape
+    k0, k1 = jax.random.split(key)
+    j0 = jax.random.randint(k0, (b,), 0, n)
+    q0 = _sqdist(w[j0], samples)
+
+    def step(carry, key_i):
+        j, jstar, qstar = carry
+        choice = jax.random.randint(key_i, (b,), 0, phi + 1)
+        hop = jnp.where(choice < phi, far[j, jnp.minimum(choice, phi - 1)], j)
+        q = _sqdist(w[hop], samples)
+        better = q < qstar
+        return (hop, jnp.where(better, hop, jstar), jnp.where(better, q, qstar)), None
+
+    (j, jstar, qstar), _ = jax.lax.scan(step, (j0, j0, q0), jax.random.split(k1, e))
+    del j
+    return jstar, qstar
+
+
+def greedy_phase(w, near, far, samples, jstar, qstar, use_far: bool = True,
+                 max_steps: int | None = None):
+    """Greedy exploitation from jstar; returns (gmu, q2, steps)."""
+    b = samples.shape[0]
+    n = w.shape[0]
+    max_steps = n if max_steps is None else max_steps
+
+    def candidates(j):
+        cands = near[j]
+        if use_far:
+            cands = jnp.concatenate([cands, far[j]], axis=-1)
+        return cands
+
+    def body(carry):
+        j, q, active, steps = carry
+        cands = jax.vmap(candidates)(j)                    # (B, C)
+        valid = cands >= 0
+        cq = jax.vmap(_sqdist)(w[jnp.maximum(cands, 0)], samples)
+        cq = jnp.where(valid, cq, jnp.inf)
+        kbest = jnp.argmin(cq, axis=-1)
+        qbest = jnp.take_along_axis(cq, kbest[:, None], axis=-1)[:, 0]
+        jbest = jnp.take_along_axis(cands, kbest[:, None], axis=-1)[:, 0]
+        improve = active & (qbest < q)
+        return (
+            jnp.where(improve, jbest, j),
+            jnp.where(improve, qbest, q),
+            improve,
+            steps + improve.astype(jnp.int32),
+        )
+
+    def cond(carry):
+        _, _, active, steps = carry
+        return jnp.any(active) & (steps.max() < max_steps)
+
+    active0 = jnp.ones((b,), dtype=bool)
+    steps0 = jnp.zeros((b,), dtype=jnp.int32)
+    j, q, _, steps = jax.lax.while_loop(cond, body, (jstar, qstar, active0, steps0))
+    return j, q, steps
+
+
+def heuristic_search(w, near, far, samples, key, e: int,
+                     greedy_use_far: bool = True) -> SearchResult:
+    """Full §2.1 search for a batch of samples. w: (N,D); samples: (B,D)."""
+    jstar, qstar = exploration_phase(w, far, samples, key, e)
+    gmu, q2, steps = greedy_phase(w, near, far, samples, jstar, qstar, greedy_use_far)
+    explored = jnp.full(samples.shape[:1], e, dtype=jnp.int32)
+    return SearchResult(gmu, q2, steps, explored)
+
+
+def exact_bmu(w, samples):
+    """Exact best-matching unit (the search's ground truth). (B,) idx, (B,) q2.
+
+    Chunked over units to bound memory for large maps; the Pallas kernel in
+    ``repro.kernels.bmu`` is the TPU fast path for this same computation.
+    """
+    s2 = jnp.sum(samples * samples, axis=-1)                # (B,)
+    w2 = jnp.sum(w * w, axis=-1)                            # (N,)
+    cross = samples @ w.T                                   # (B, N)
+    q2 = s2[:, None] - 2.0 * cross + w2[None, :]
+    idx = jnp.argmin(q2, axis=-1).astype(jnp.int32)
+    return idx, jnp.maximum(jnp.take_along_axis(q2, idx[:, None], axis=-1)[:, 0], 0.0)
+
+
+def second_bmu(w, samples):
+    """Indices of best and second-best matching units (for topological error)."""
+    s2 = jnp.sum(samples * samples, axis=-1)
+    w2 = jnp.sum(w * w, axis=-1)
+    q2 = s2[:, None] - 2.0 * (samples @ w.T) + w2[None, :]
+    top2 = jax.lax.top_k(-q2, 2)[1]
+    return top2[:, 0].astype(jnp.int32), top2[:, 1].astype(jnp.int32)

@@ -1,0 +1,91 @@
+"""Synchronous SOM baseline (the paper's comparison target, §3.4/Table 2).
+
+Classic online Kohonen SOM with Gaussian neighbourhood on the same square
+lattice, plus a batched variant for speed. Exact (centralised) BMU search —
+precisely the centralisation the AFM removes.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import schedules
+from repro.core import search as search_lib
+
+
+@dataclasses.dataclass(frozen=True)
+class SOMConfig:
+    side: int = 30
+    dim: int = 784
+    lr0: float = 0.5
+    lr_end: float = 0.01
+    sigma0: float = 0.0          # 0 -> side / 2
+    sigma_end: float = 1.0
+    i_max: int = 0               # 0 -> 600 * N (match AFM budget)
+    batch: int = 1
+
+    @property
+    def n_units(self) -> int:
+        return self.side * self.side
+
+    @property
+    def total_samples(self) -> int:
+        return self.i_max if self.i_max > 0 else 600 * self.n_units
+
+    @property
+    def sigma_start(self) -> float:
+        return self.sigma0 if self.sigma0 > 0 else self.side / 2.0
+
+
+class SOMState(NamedTuple):
+    w: jnp.ndarray   # (N, D)
+    i: jnp.ndarray   # () int32
+
+
+def init(key: jax.Array, cfg: SOMConfig, samples: jnp.ndarray | None = None) -> SOMState:
+    if samples is not None:
+        lo, hi = samples.min(axis=0), samples.max(axis=0)
+        w = jax.random.uniform(key, (cfg.n_units, cfg.dim), minval=lo, maxval=hi)
+    else:
+        w = 0.1 * jax.random.normal(key, (cfg.n_units, cfg.dim))
+    return SOMState(w.astype(jnp.float32), jnp.int32(0))
+
+
+def _lattice_dist2(side: int) -> jnp.ndarray:
+    """(N, N) squared lattice distances (built lazily under jit)."""
+    idx = jnp.arange(side * side)
+    r, c = idx // side, idx % side
+    dr = r[:, None] - r[None, :]
+    dc = c[:, None] - c[None, :]
+    return (dr * dr + dc * dc).astype(jnp.float32)
+
+
+def train_step(state: SOMState, samples: jnp.ndarray, cfg: SOMConfig) -> SOMState:
+    """One (batched) online SOM update: every unit moves toward the sample
+    weighted by a Gaussian of its lattice distance to the BMU."""
+    i = state.i
+    lr = schedules.som_lr(i, cfg.total_samples, cfg.lr0, cfg.lr_end)
+    sigma = schedules.som_sigma(i, cfg.total_samples, cfg.sigma_start, cfg.sigma_end)
+    bmu, _ = search_lib.exact_bmu(state.w, samples)          # (B,)
+    d2 = _lattice_dist2(cfg.side)[bmu]                       # (B, N)
+    h = jnp.exp(-d2 / (2.0 * sigma * sigma))                 # (B, N)
+    # batched update: mean over samples of h * (s - w)
+    delta = jnp.einsum("bn,bd->nd", h, samples) - h.sum(0)[:, None] * state.w
+    w = state.w + lr * delta / samples.shape[0]
+    return SOMState(w, i + samples.shape[0])
+
+
+def train(state: SOMState, data: jnp.ndarray, key: jax.Array, cfg: SOMConfig,
+          num_steps: int | None = None) -> SOMState:
+    num_steps = (cfg.total_samples // cfg.batch) if num_steps is None else num_steps
+
+    def body(state, key):
+        idx = jax.random.randint(key, (cfg.batch,), 0, data.shape[0])
+        return train_step(state, data[idx], cfg), None
+
+    keys = jax.random.split(key, num_steps)
+    state, _ = jax.lax.scan(body, state, keys)
+    return state

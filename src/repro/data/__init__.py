@@ -1,0 +1,6 @@
+"""Data substrate: synthetic class-mixture datasets (offline stand-ins for the
+paper's Table 1 datasets), an IDX loader for the real files when present, and
+token pipelines for the LM architectures."""
+from repro.data.synthetic import DATASETS, make_dataset
+
+__all__ = ["DATASETS", "make_dataset"]

@@ -1,0 +1,45 @@
+"""Jitted public wrapper for the BMU kernel: pads to MXU-aligned tiles,
+dispatches to Pallas (TPU) or the jnp oracle (CPU fallback), un-pads."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.bmu import ref
+from repro.kernels.bmu.bmu import bmu_pallas
+
+
+def _pad_to(x, mult, axis, value=0.0):
+    pad = (-x.shape[axis]) % mult
+    if pad == 0:
+        return x
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(x, widths, constant_values=value)
+
+
+@functools.partial(jax.jit, static_argnames=("block_b", "block_n", "use_pallas",
+                                             "interpret"))
+def bmu(w: jnp.ndarray, s: jnp.ndarray, *, block_b: int = 128,
+        block_n: int = 128, use_pallas: bool = True, interpret: bool = True):
+    """argmin_j |w_j - s_i|^2 over units. Returns (idx (B,), q2 (B,)).
+
+    ``interpret=True`` executes the kernel body in Python on CPU (this
+    container); on real TPU pass interpret=False.
+    """
+    if not use_pallas:
+        return ref.bmu_ref(w, s)
+    n, d = w.shape
+    b = s.shape[0]
+    # Pad units with +inf-distance sentinels (huge weights) so padded units
+    # never win the argmin; pad features with zeros (distance-neutral).
+    wp = _pad_to(w, block_n, 0, value=1e9)
+    wp = _pad_to(wp, 128, 1)
+    sp = _pad_to(s, block_b, 0)
+    sp = _pad_to(sp, 128, 1)
+    idx, q2 = bmu_pallas(wp, sp, block_b=block_b,
+                         block_n=min(block_n, wp.shape[0]),
+                         interpret=interpret)
+    return idx[:b], q2[:b]

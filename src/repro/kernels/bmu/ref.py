@@ -1,0 +1,20 @@
+"""Pure-jnp oracle for the BMU (best-matching-unit) search kernel."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def bmu_ref(w: jnp.ndarray, s: jnp.ndarray):
+    """w: (N, D) unit weights; s: (B, D) samples.
+
+    Returns (idx (B,) int32, q2 (B,) float32): argmin_j |w_j - s_i|^2 and the
+    squared distance (paper Eq. 1, squared — argmin-equivalent).
+    """
+    w = w.astype(jnp.float32)
+    s = s.astype(jnp.float32)
+    w2 = jnp.sum(w * w, axis=-1)
+    s2 = jnp.sum(s * s, axis=-1)
+    q2 = s2[:, None] - 2.0 * (s @ w.T) + w2[None, :]
+    idx = jnp.argmin(q2, axis=-1).astype(jnp.int32)
+    best = jnp.take_along_axis(q2, idx[:, None], axis=-1)[:, 0]
+    return idx, jnp.maximum(best, 0.0)

@@ -1,0 +1,18 @@
+"""Jitted wrapper for the cascade-wave kernel (Pallas on TPU, oracle on CPU)."""
+from __future__ import annotations
+
+import functools
+
+import jax
+
+from repro.kernels.cascade import ref
+from repro.kernels.cascade.cascade import cascade_wave_pallas
+
+
+@functools.partial(jax.jit, static_argnames=("theta", "use_pallas", "interpret"))
+def cascade_wave(c, fired, bern, theta: int, *, use_pallas: bool = True,
+                 interpret: bool = True):
+    """One parallel toppling wave. See ref.cascade_wave_ref for semantics."""
+    if not use_pallas:
+        return ref.cascade_wave_ref(c, fired, bern, theta)
+    return cascade_wave_pallas(c, fired, bern, theta, interpret=interpret)

@@ -1,0 +1,38 @@
+"""Pure-jnp oracle for one cascade toppling wave (counters + receive counts).
+
+Matches repro.core.cascade's per-wave counter dynamics exactly:
+  - fired units reset to 0,
+  - every unit receives one broadcast per fired near neighbour,
+  - each receipt increments the counter iff its Bernoulli draw (supplied by
+    the caller as ``bern``) succeeded,
+  - a unit newly fires if its counter reaches theta and it received >= 1.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def _shift4(x):
+    z = jnp.zeros_like(x[:1])
+    zc = jnp.zeros_like(x[:, :1])
+    return jnp.stack([
+        jnp.concatenate([x[1:], z], axis=0),       # from below (row r+1)
+        jnp.concatenate([z, x[:-1]], axis=0),      # from above (row r-1)
+        jnp.concatenate([x[:, 1:], zc], axis=1),   # from right
+        jnp.concatenate([zc, x[:, :-1]], axis=1),  # from left
+    ], axis=0)
+
+
+def cascade_wave_ref(c: jnp.ndarray, fired: jnp.ndarray, bern: jnp.ndarray,
+                     theta: int):
+    """c: (n, n) int32; fired: (n, n) bool; bern: (4, n, n) bool.
+
+    Returns (new_c, new_fired, n_recv) — all (n, n).
+    """
+    c = jnp.where(fired, 0, c)
+    recv4 = _shift4(fired.astype(jnp.int32))
+    n_recv = recv4.sum(axis=0)
+    inc = jnp.sum(bern.astype(jnp.int32) * recv4, axis=0)
+    new_c = c + inc
+    new_fired = (new_c >= theta) & (n_recv > 0)
+    return new_c, new_fired, n_recv

@@ -1,0 +1,24 @@
+"""Jitted wrapper for sliding-window decode attention."""
+from __future__ import annotations
+
+import functools
+
+import jax
+
+from repro.kernels.swa import ref
+from repro.kernels.swa.swa import swa_decode_pallas
+
+
+@functools.partial(jax.jit, static_argnames=("block_s", "use_pallas", "interpret"))
+def swa_decode(q, k, v, pos, *, block_s: int = 512, use_pallas: bool = True,
+               interpret: bool = True):
+    """Flash decode over a ring-buffer cache. q: (B, H, hd);
+    k/v: (B, W, Hkv, hd); pos: (B,). Returns (B, H, hd)."""
+    if not use_pallas:
+        return ref.swa_decode_ref(q, k, v, pos, window=k.shape[1])
+    s = k.shape[1]
+    bs = min(block_s, s)
+    while s % bs:
+        bs //= 2
+    return swa_decode_pallas(q, k, v, pos, block_s=max(bs, 1),
+                             interpret=interpret)

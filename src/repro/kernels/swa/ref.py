@@ -1,0 +1,31 @@
+"""Pure-jnp oracle for sliding-window single-token decode attention."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def swa_decode_ref(q, k, v, pos, window: int):
+    """q: (B, H, hd); k/v: (B, S, Hkv, hd) ring-buffer cache (slot = t % S,
+    S == cache length); pos: (B,) absolute position of the current token
+    (its K/V already written at slot pos % S). window <= S.
+
+    Returns (B, H, hd) attention output (f32 math, cast to q.dtype).
+    """
+    b, h, hd = q.shape
+    s = k.shape[1]
+    hkv = k.shape[2]
+    rep = h // hkv
+    kk = jnp.repeat(k, rep, axis=2).astype(jnp.float32)   # (B, S, H, hd)
+    vv = jnp.repeat(v, rep, axis=2).astype(jnp.float32)
+    logits = jnp.einsum("bhd,bshd->bhs", q.astype(jnp.float32), kk)
+    logits = logits / jnp.sqrt(jnp.float32(hd))
+    j = jnp.arange(s)[None, :]
+    age = (pos[:, None] - j) % s
+    valid = (age < jnp.minimum(pos[:, None] + 1, window))
+    logits = jnp.where(valid[:, None, :], logits, NEG_INF)
+    probs = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bhs,bshd->bhd", probs, vv)
+    return out.astype(q.dtype)

@@ -1,0 +1,99 @@
+"""Pallas TPU kernel: flash-decode attention over a sliding-window KV cache.
+
+Serving path for the dense architectures' ``long_500k`` shape: one query
+token against a ring-buffer cache of length W (window). Grid =
+(B, Hkv, W // bs): for each (batch row, kv head) the kernel streams cache
+tiles through VMEM keeping an online-softmax accumulator (running max m,
+denominator l, weighted accumulator acc) in f32 scratch — the classic
+flash-attention recurrence, specialised to a single query row where the
+GQA group (rep = H/Hkv query heads) forms the sublane dimension of the MXU
+matmuls.
+
+Ring-buffer validity (slot j holds position p ≡ j mod W, valid iff
+age(j) < min(pos+1, W)) is evaluated per tile with 2-D iota — no gather, no
+cache reshuffling at decode time.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _swa_kernel(pos_ref, q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref,
+                *, block_s: int, window: int):
+    t = pl.program_id(2)
+
+    @pl.when(t == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q = q_ref[0, 0]                                  # (rep, hd)
+    k = k_ref[0, 0]                                  # (bs, hd)
+    v = v_ref[0, 0]                                  # (bs, hd)
+    pos = pos_ref[0]
+    hd = q.shape[-1]
+    logits = jax.lax.dot_general(
+        q.astype(jnp.float32), k.astype(jnp.float32),
+        (((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32) / jnp.sqrt(jnp.float32(hd))
+    # validity of this tile's slots (ring buffer): age(j) = (pos - j) mod W
+    j = t * block_s + jax.lax.broadcasted_iota(jnp.int32, logits.shape, 1)
+    age = jax.lax.rem(pos - j + jnp.int32(2 * window), jnp.int32(window))
+    valid = age < jnp.minimum(pos + 1, jnp.int32(window))
+    logits = jnp.where(valid, logits, NEG_INF)
+
+    m_prev = m_ref[...]                              # (rep, 1)
+    m_new = jnp.maximum(m_prev, jnp.max(logits, axis=1, keepdims=True))
+    alpha = jnp.exp(m_prev - m_new)
+    p = jnp.exp(logits - m_new)                      # (rep, bs)
+    l_ref[...] = l_ref[...] * alpha + jnp.sum(p, axis=1, keepdims=True)
+    acc_ref[...] = acc_ref[...] * alpha + jax.lax.dot_general(
+        p, v.astype(jnp.float32), (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)
+    m_ref[...] = m_new
+
+    @pl.when(t == pl.num_programs(2) - 1)
+    def _fini():
+        o_ref[0, 0] = (acc_ref[...] / jnp.maximum(l_ref[...], 1e-30)).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("block_s", "interpret"))
+def swa_decode_pallas(q, k, v, pos, *, block_s: int = 512,
+                      interpret: bool = False):
+    """q: (B, H, hd); k/v: (B, S, Hkv, hd) ring cache (S == window);
+    pos: (B,) int32. Returns (B, H, hd)."""
+    b, h, hd = q.shape
+    s, hkv = k.shape[1], k.shape[2]
+    rep = h // hkv
+    assert s % block_s == 0, (s, block_s)
+    qg = q.reshape(b, hkv, rep, hd)
+    kg = jnp.moveaxis(k, 2, 1)                       # (B, Hkv, S, hd)
+    vg = jnp.moveaxis(v, 2, 1)
+    grid = (b, hkv, s // block_s)
+    out = pl.pallas_call(
+        functools.partial(_swa_kernel, block_s=block_s, window=s),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1,), lambda ib, ih, t: (ib,)),
+            pl.BlockSpec((1, 1, rep, hd), lambda ib, ih, t: (ib, ih, 0, 0)),
+            pl.BlockSpec((1, 1, block_s, hd), lambda ib, ih, t: (ib, ih, t, 0)),
+            pl.BlockSpec((1, 1, block_s, hd), lambda ib, ih, t: (ib, ih, t, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, rep, hd), lambda ib, ih, t: (ib, ih, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, hkv, rep, hd), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((rep, 1), jnp.float32),
+            pltpu.VMEM((rep, 1), jnp.float32),
+            pltpu.VMEM((rep, hd), jnp.float32),
+        ],
+        interpret=interpret,
+    )(pos.astype(jnp.int32), qg, kg, vg)
+    return out.reshape(b, h, hd)

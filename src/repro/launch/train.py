@@ -1,0 +1,100 @@
+"""Training launcher.
+
+Runs end-to-end training of any registered architecture (full or smoke
+variant) on the available devices, with optional AFM probe and
+checkpointing. On the production mesh this is the same step the dry-run
+lowers; on CPU it actually executes (use --smoke).
+
+    PYTHONPATH=src python -m repro.launch.train --arch llama3.2-1b --smoke \
+        --steps 50 --batch 8 --seq 128
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro import configs
+from repro.data import tokens as tokens_lib
+from repro.training import AdamWConfig, init_train_state, make_train_step
+from repro.training import checkpoint as ckpt_lib
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--smoke", action="store_true",
+                    help="use the reduced same-family config (CPU-sized)")
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--lr", type=float, default=1e-3)
+    ap.add_argument("--probe", action="store_true",
+                    help="attach the AFM topographic probe to hidden states")
+    ap.add_argument("--probe-side", type=int, default=8)
+    ap.add_argument("--checkpoint", default=None)
+    ap.add_argument("--log-every", type=int, default=10)
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+
+    cfg = configs.get_smoke(args.arch) if args.smoke else configs.get(args.arch)
+    if cfg.arch_type == "ssm" and args.seq % cfg.ssm_chunk:
+        cfg = dataclasses.replace(cfg, ssm_chunk=min(cfg.ssm_chunk, args.seq))
+    key = jax.random.PRNGKey(args.seed)
+
+    probe_cfg = None
+    if args.probe:
+        from repro.core.probe import ProbeConfig
+        probe_cfg = ProbeConfig(side=args.probe_side, dim=cfg.d_model,
+                                i_max=args.steps * args.batch)
+
+    opt_cfg = AdamWConfig(lr=args.lr, total_steps=args.steps,
+                          warmup_steps=max(args.steps // 20, 5))
+    state = init_train_state(key, cfg, probe_cfg)
+    step_fn = jax.jit(make_train_step(cfg, opt_cfg, probe_cfg))
+
+    n_params = sum(x.size for x in jax.tree.leaves(state.params))
+    print(f"arch={cfg.name} params={n_params/1e6:.1f}M devices={len(jax.devices())}")
+
+    t0 = time.time()
+    losses = []
+    for i, batch in enumerate(tokens_lib.batches(
+            jax.random.fold_in(key, 1), cfg.vocab_size, args.batch, args.seq,
+            args.steps)):
+        extra = {}
+        if cfg.is_encoder_decoder:
+            extra["frames"] = jnp.zeros((args.batch, cfg.encoder_seq,
+                                         cfg.d_model), cfg.dtype)
+        if cfg.arch_type == "vlm":
+            npatch = min(cfg.num_patches, args.seq // 2)
+            extra["vision_embeds"] = jnp.zeros(
+                (args.batch, npatch, cfg.d_model), cfg.dtype)
+            pos = jnp.broadcast_to(jnp.arange(args.seq)[None],
+                                   (args.batch, args.seq))
+            extra["positions3"] = jnp.broadcast_to(pos[None], (3,) + pos.shape)
+        state, metrics = step_fn(state, {**batch, **extra},
+                                 jax.random.fold_in(key, 1000 + i))
+        losses.append(float(metrics["loss"]))
+        if i % args.log_every == 0 or i == args.steps - 1:
+            extra_s = ""
+            if "probe_cascade" in metrics:
+                extra_s = f" probe_cascade={int(metrics['probe_cascade'])}"
+            print(f"step {i:5d}  loss {losses[-1]:.4f}  "
+                  f"lr {float(metrics['lr']):.2e}  "
+                  f"gnorm {float(metrics['grad_norm']):.3f}"
+                  f"{extra_s}  ({time.time()-t0:.1f}s)", flush=True)
+
+    first = sum(losses[:5]) / max(len(losses[:5]), 1)
+    last = sum(losses[-5:]) / max(len(losses[-5:]), 1)
+    print(f"done: loss {first:.4f} -> {last:.4f} "
+          f"({'improved' if last < first else 'NO IMPROVEMENT'})")
+    if args.checkpoint:
+        ckpt_lib.save(args.checkpoint, state.params)
+        print(f"saved params to {args.checkpoint}")
+
+
+if __name__ == "__main__":
+    main()

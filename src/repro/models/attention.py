@@ -1,0 +1,215 @@
+"""Attention layers: GQA/MQA/MHA, causal or sliding-window, cross-attention,
+and single-token decode over a KV cache.
+
+All einsums accumulate in f32. Head layout: projections are stored flattened
+(d_model, heads*head_dim) so weight sharding never depends on head-count
+divisibility; activations are reshaped to (B, S, H, hd) internally and XLA
+repartitions as it sees fit.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import rope as rope_lib
+from repro.models.common import ModelConfig, dense, init_dense
+
+NEG_INF = -1e30
+
+
+def init_attn(key, cfg: ModelConfig, cross: bool = False) -> dict:
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    d = cfg.d_model
+    p = {
+        "wq": init_dense(k1, d, cfg.q_dim, cfg.param_dtype),
+        "wk": init_dense(k2, d, cfg.kv_dim, cfg.param_dtype),
+        "wv": init_dense(k3, d, cfg.kv_dim, cfg.param_dtype),
+        "wo": init_dense(k4, cfg.q_dim, d, cfg.param_dtype,
+                         scale=1.0 / jnp.sqrt(cfg.q_dim * 2 * cfg.num_layers)),
+    }
+    del cross
+    return p
+
+
+def _split_heads(x, n_heads, hd):
+    return x.reshape(x.shape[:-1] + (n_heads, hd))
+
+
+def _repeat_kv(k, n_rep):
+    if n_rep == 1:
+        return k
+    return jnp.repeat(k, n_rep, axis=2)
+
+
+def _causal_mask(s_q: int, s_k: int, window: int, q_offset: int = 0):
+    """(s_q, s_k) additive mask. window=0 -> plain causal."""
+    qi = jnp.arange(s_q)[:, None] + q_offset
+    ki = jnp.arange(s_k)[None, :]
+    ok = ki <= qi
+    if window > 0:
+        ok &= ki > qi - window
+    return jnp.where(ok, 0.0, NEG_INF).astype(jnp.float32)
+
+
+def attend(q, k, v, mask):
+    """q: (B,Sq,H,hd), k/v: (B,Sk,H,hd); mask broadcastable to (B,H,Sq,Sk)."""
+    scale = 1.0 / jnp.sqrt(q.shape[-1])
+    logits = jnp.einsum("bqhd,bkhd->bhqk", q, k,
+                        preferred_element_type=jnp.float32) * scale
+    logits = logits + mask
+    probs = jax.nn.softmax(logits.astype(jnp.float32), axis=-1).astype(q.dtype)
+    out = jnp.einsum("bhqk,bkhd->bqhd", probs, v,
+                     preferred_element_type=jnp.float32).astype(q.dtype)
+    return out
+
+
+def attend_chunked(q, k, v, *, causal: bool, window: int, chunk: int,
+                   q_offset: int = 0, probs_bf16: bool = False):
+    """Flash-style attention: scan over KV chunks with an online-softmax
+    accumulator; peak buffer is (B, H, Sq, chunk) instead of (B, H, Sq, Sk).
+    The chunk body is rematerialised in the backward pass (jax.checkpoint),
+    trading ~2x attention FLOPs for O(S * chunk) memory — the classic
+    flash-attention trade, in pure JAX (the Pallas ``swa`` kernel is the
+    decode-path equivalent)."""
+    b, sq, h, hd = q.shape
+    sk = k.shape[1]
+    assert sk % chunk == 0, (sk, chunk)
+    scale = 1.0 / jnp.sqrt(hd)
+    qf = q.astype(jnp.float32) * scale
+    nchunks = sk // chunk
+    kc = jnp.moveaxis(k.reshape(b, nchunks, chunk, h, hd), 1, 0)
+    vc = jnp.moveaxis(v.reshape(b, nchunks, chunk, h, hd), 1, 0)
+    qi = jnp.arange(sq)[:, None] + q_offset
+
+    @functools.partial(jax.checkpoint, prevent_cse=False)
+    def body(carry, inp):
+        m, l, acc = carry
+        idx, kk, vv = inp
+        ki = idx * chunk + jnp.arange(chunk)[None, :]
+        ok = ki <= qi
+        if window > 0:
+            ok &= ki > qi - window
+        blk_mask = jnp.where(ok, 0.0, NEG_INF)[None, :, None, :]  # (1,Sq,1,C)
+        logits = jnp.einsum("bqhd,bkhd->bqhk", qf, kk.astype(jnp.float32))
+        logits = logits + blk_mask                                 # (B,Sq,H,C)
+        m_new = jnp.maximum(m, logits.max(axis=-1))
+        alpha = jnp.exp(m - m_new)
+        p = jnp.exp(logits - m_new[..., None])
+        l = l * alpha + p.sum(axis=-1)
+        if probs_bf16:
+            pv = jnp.einsum("bqhk,bkhd->bqhd", p.astype(jnp.bfloat16),
+                            vv.astype(jnp.bfloat16),
+                            preferred_element_type=jnp.float32)
+        else:
+            pv = jnp.einsum("bqhk,bkhd->bqhd", p, vv.astype(jnp.float32))
+        acc = acc * alpha[..., None] + pv
+        return (m_new, l, acc), None
+
+    m0 = jnp.full((b, sq, h), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((b, sq, h), jnp.float32)
+    acc0 = jnp.zeros((b, sq, h, hd), jnp.float32)
+    (m, l, acc), _ = jax.lax.scan(
+        body, (m0, l0, acc0), (jnp.arange(nchunks), kc, vc))
+    del causal
+    return (acc / jnp.maximum(l, 1e-30)[..., None]).astype(q.dtype)
+
+
+def self_attention(params, x, positions, cfg: ModelConfig, *,
+                   causal: bool = True, window: int | None = None,
+                   positions3=None):
+    """Full-sequence self-attention (training / prefill). x: (B, S, D)."""
+    b, s, _ = x.shape
+    window = cfg.window if window is None else window
+    q = _split_heads(dense(x, params["wq"]), cfg.num_heads, cfg.hd)
+    k = _split_heads(dense(x, params["wk"]), cfg.num_kv_heads, cfg.hd)
+    v = _split_heads(dense(x, params["wv"]), cfg.num_kv_heads, cfg.hd)
+    if cfg.mrope_sections:
+        p3 = positions3 if positions3 is not None else rope_lib.text_positions3(positions)
+        q = rope_lib.apply_mrope(q, p3, cfg.rope_theta, cfg.mrope_sections)
+        k = rope_lib.apply_mrope(k, p3, cfg.rope_theta, cfg.mrope_sections)
+    elif not cfg.learned_positions:
+        q = rope_lib.apply_rope(q, positions, cfg.rope_theta)
+        k = rope_lib.apply_rope(k, positions, cfg.rope_theta)
+    k_pre, v_pre = k, v
+    k = _repeat_kv(k, cfg.num_heads // cfg.num_kv_heads)
+    v = _repeat_kv(v, cfg.num_heads // cfg.num_kv_heads)
+    wo = params["wo"]
+    n_pad = 0
+    if cfg.pad_heads_to > cfg.num_heads:
+        # Exact zero-padding of the head axis (padded heads attend to zero
+        # values and write through zero wo rows) to restore shardability.
+        n_pad = cfg.pad_heads_to - cfg.num_heads
+        pads = ((0, 0), (0, 0), (0, n_pad), (0, 0))
+        q = jnp.pad(q, pads)
+        k = jnp.pad(k, pads)
+        v = jnp.pad(v, pads)
+        wo = jnp.pad(wo, ((0, n_pad * cfg.hd), (0, 0)))
+    if cfg.attention_impl == "chunked" and causal:
+        out = attend_chunked(q, k, v, causal=True, window=window or 0,
+                             chunk=min(cfg.attention_chunk, s),
+                             probs_bf16=cfg.attention_probs_bf16)
+    else:
+        if causal:
+            mask = _causal_mask(s, s, window or 0)[None, None]
+        else:
+            mask = jnp.zeros((1, 1, s, s), jnp.float32)
+        out = attend(q, k, v, mask)
+    out = out.reshape(b, s, (cfg.num_heads + n_pad) * cfg.hd)
+    return dense(out, wo, bf16_out=cfg.bf16_partials), (k_pre, v_pre)
+
+
+def cross_attention(params, x, kv_src, cfg: ModelConfig):
+    """Decoder cross-attention (no RoPE, bidirectional). kv_src: (B, Se, D)."""
+    b, s, _ = x.shape
+    q = _split_heads(dense(x, params["wq"]), cfg.num_heads, cfg.hd)
+    k = _split_heads(dense(kv_src, params["wk"]), cfg.num_kv_heads, cfg.hd)
+    v = _split_heads(dense(kv_src, params["wv"]), cfg.num_kv_heads, cfg.hd)
+    k = _repeat_kv(k, cfg.num_heads // cfg.num_kv_heads)
+    v = _repeat_kv(v, cfg.num_heads // cfg.num_kv_heads)
+    mask = jnp.zeros((1, 1, s, k.shape[1]), jnp.float32)
+    out = attend(q, k, v, mask)
+    return dense(out.reshape(b, s, cfg.q_dim), params["wo"])
+
+
+def decode_attention(params, x, cache_k, cache_v, pos, cfg: ModelConfig, *,
+                     window: int | None = None, positions3=None):
+    """Single-token decode. x: (B, 1, D); cache_k/v: (B, S_cache, Hkv, hd);
+    pos: (B,) int32 absolute position of the new token.
+
+    With ``window > 0`` the cache is a ring buffer of length S_cache == window
+    (slot = pos % window, all slots < pos valid). Returns (out, new_k, new_v).
+    """
+    b = x.shape[0]
+    s_cache = cache_k.shape[1]
+    window = cfg.window if window is None else window
+    q = _split_heads(dense(x, params["wq"]), cfg.num_heads, cfg.hd)
+    k = _split_heads(dense(x, params["wk"]), cfg.num_kv_heads, cfg.hd)
+    v = _split_heads(dense(x, params["wv"]), cfg.num_kv_heads, cfg.hd)
+    if cfg.mrope_sections:
+        p3 = (positions3 if positions3 is not None
+              else rope_lib.text_positions3(pos[:, None]))
+        q = rope_lib.apply_mrope(q, p3, cfg.rope_theta, cfg.mrope_sections)
+        k = rope_lib.apply_mrope(k, p3, cfg.rope_theta, cfg.mrope_sections)
+    elif not cfg.learned_positions:
+        q = rope_lib.apply_rope(q, pos[:, None], cfg.rope_theta)
+        k = rope_lib.apply_rope(k, pos[:, None], cfg.rope_theta)
+    slot = pos % s_cache if window else jnp.minimum(pos, s_cache - 1)
+    bidx = jnp.arange(b)
+    new_k = cache_k.at[bidx, slot].set(k[:, 0].astype(cache_k.dtype))
+    new_v = cache_v.at[bidx, slot].set(v[:, 0].astype(cache_v.dtype))
+    kk = _repeat_kv(new_k.astype(q.dtype), cfg.num_heads // cfg.num_kv_heads)
+    vv = _repeat_kv(new_v.astype(q.dtype), cfg.num_heads // cfg.num_kv_heads)
+    # Validity: cache index j holds absolute position j (full) or the most
+    # recent position ≡ j (mod window); valid iff that position <= pos and
+    # within the window.
+    j = jnp.arange(s_cache)[None, :]                          # (1, S)
+    if window:
+        age = (pos[:, None] - j) % s_cache                    # distance back
+        valid = age < jnp.minimum(pos[:, None] + 1, s_cache)
+    else:
+        valid = j <= pos[:, None]
+    mask = jnp.where(valid, 0.0, NEG_INF)[:, None, None, :]   # (B,1,1,S)
+    out = attend(q, kk, vv, mask)
+    return dense(out.reshape(b, 1, cfg.q_dim), params["wo"]), new_k, new_v

@@ -1,0 +1,171 @@
+"""Shared model configuration + primitive layers (pure JAX, no framework).
+
+Conventions:
+- Params are plain nested dicts of jnp arrays; layer stacks carry a leading
+  layer axis and are consumed with ``jax.lax.scan`` so lowering cost is O(1)
+  in depth.
+- Params are stored in ``cfg.param_dtype`` (bf16 by default — production
+  serving/training layout); matmuls run in bf16 with f32 accumulation via
+  ``preferred_element_type``; norms/softmax in f32.
+- Every param has a logical-axes tag (see ``repro.sharding.rules``) used to
+  derive PartitionSpecs for any mesh.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+# ---------------------------------------------------------------------------
+# Config
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    name: str = "model"
+    arch_type: str = "dense"      # dense | moe | ssm | hybrid | audio | vlm
+    num_layers: int = 2
+    d_model: int = 256
+    num_heads: int = 4
+    num_kv_heads: int = 4
+    d_ff: int = 1024
+    vocab_size: int = 1024
+    head_dim: int = 0             # 0 -> d_model // num_heads
+    # MoE
+    num_experts: int = 0
+    num_shared_experts: int = 0
+    experts_per_token: int = 0
+    moe_d_ff: int = 0
+    first_dense_layers: int = 0   # leading dense FFN layers (deepseek-moe)
+    first_dense_d_ff: int = 0
+    moe_impl: str = "dense"       # dense (all-experts einsum) | ragged
+                                  # (ragged_dot) | ep (shard_map expert par.)
+    moe_capacity_factor: float = 2.0
+    router_aux_coef: float = 0.01
+    # SSM (mamba2 / SSD)
+    ssm_state: int = 0
+    ssm_head_dim: int = 64
+    ssm_expand: int = 2
+    ssm_chunk: int = 256
+    conv_width: int = 4
+    # hybrid (recurrentgemma): pattern over a repeating block
+    block_pattern: tuple = ()     # e.g. ("rglru", "rglru", "attn")
+    pattern_tail: tuple = ()      # leftover layers after full pattern repeats
+    lru_width: int = 0            # 0 -> d_model
+    # attention windowing (local attention / long-context serving)
+    window: int = 0               # 0 = full causal; >0 = sliding window
+    # encoder-decoder (whisper)
+    is_encoder_decoder: bool = False
+    encoder_layers: int = 0
+    encoder_seq: int = 1500
+    learned_positions: bool = False
+    max_positions: int = 0        # learned-position table size (0 -> 8192)
+    # vlm (qwen2-vl)
+    mrope_sections: tuple = ()    # e.g. (16, 24, 24) halves of head_dim/2
+    num_patches: int = 0          # vision token count fed by the stub frontend
+    rope_theta: float = 10_000.0
+    mlp_kind: str = "swiglu"      # swiglu | gelu (whisper-style)
+    # naive: materialise (S, S) scores; chunked: flash-style online softmax
+    # over KV blocks (no quadratic buffer; rematerialised in backward)
+    attention_impl: str = "naive"
+    # Zero-pad the (post-GQA-repeat) head axis up to this count inside the
+    # attention computation. Exact (padded heads have zero V and zero wo
+    # rows) and restores head-axis shardability when num_heads does not
+    # divide the model-parallel degree (e.g. 15 or 56 heads on 16-way TP).
+    pad_heads_to: int = 0
+    attention_chunk: int = 512
+    # store attention probabilities in bf16 between softmax and the PV matmul
+    # (max/denominator stay f32) — halves the largest attention intermediate
+    attention_probs_bf16: bool = False
+    # bf16 row-parallel partial sums: all-reduce wire bytes halve
+    bf16_partials: bool = False
+    # compute the LM cross-entropy over sequence chunks (never materialise
+    # the full (B, S, V) f32 logits tensor)
+    chunked_ce: bool = False
+    ce_chunk: int = 512
+    norm_eps: float = 1e-6
+    tie_embeddings: bool = False
+    dtype: Any = jnp.bfloat16     # activation/compute dtype
+    param_dtype: Any = jnp.bfloat16
+    remat: bool = True            # checkpoint each scanned block in training
+    # Unroll the layer stack instead of lax.scan. Production lowering keeps
+    # scan (O(1) HLO in depth); the dry-run unrolls so that
+    # compiled.cost_analysis() counts every layer (XLA does not multiply
+    # while-loop bodies by trip count).
+    unroll_layers: bool = False
+
+    @property
+    def hd(self) -> int:
+        return self.head_dim or (self.d_model // self.num_heads)
+
+    @property
+    def q_dim(self) -> int:
+        return self.num_heads * self.hd
+
+    @property
+    def kv_dim(self) -> int:
+        return self.num_kv_heads * self.hd
+
+    @property
+    def d_inner(self) -> int:          # mamba2 inner width
+        return self.ssm_expand * self.d_model
+
+    @property
+    def ssm_heads(self) -> int:
+        return self.d_inner // self.ssm_head_dim
+
+    @property
+    def rnn_width(self) -> int:
+        return self.lru_width or self.d_model
+
+
+# ---------------------------------------------------------------------------
+# Primitive ops
+
+
+def rms_norm(x: jnp.ndarray, scale: jnp.ndarray, eps: float) -> jnp.ndarray:
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    out = xf * jax.lax.rsqrt(var + eps) * (1.0 + scale.astype(jnp.float32))
+    return out.astype(x.dtype)
+
+
+def dense(x: jnp.ndarray, w: jnp.ndarray, bf16_out: bool = False) -> jnp.ndarray:
+    """x @ w with f32 accumulation, output in x.dtype.
+
+    ``bf16_out=True`` sets the dot's output element type to x.dtype directly
+    (TPU MXU still accumulates f32 internally): for row-parallel projections
+    under tensor parallelism this makes the SPMD-inserted all-reduce run on
+    bf16 partials instead of f32 — half the wire bytes (Megatron-style).
+    """
+    out_t = x.dtype if bf16_out else jnp.float32
+    return jax.lax.dot_general(
+        x, w.astype(x.dtype),
+        (((x.ndim - 1,), (0,)), ((), ())),
+        preferred_element_type=out_t,
+    ).astype(x.dtype)
+
+
+def init_dense(key, d_in: int, d_out: int, dtype, scale: float | None = None):
+    scale = scale if scale is not None else 1.0 / jnp.sqrt(d_in)
+    return (scale * jax.random.truncated_normal(key, -2.0, 2.0, (d_in, d_out))).astype(dtype)
+
+
+def softmax_cross_entropy(logits: jnp.ndarray, labels: jnp.ndarray,
+                          mask: jnp.ndarray | None = None):
+    """Mean next-token CE in f32. logits: (..., V); labels int32 (...)."""
+    logits = logits.astype(jnp.float32)
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    nll = logz - gold
+    if mask is not None:
+        mask = mask.astype(jnp.float32)
+        return jnp.sum(nll * mask) / jnp.maximum(jnp.sum(mask), 1.0)
+    return jnp.mean(nll)
+
+
+def with_logical_axes(params: dict, axes: dict) -> dict:
+    """Attach logical-axes metadata (kept as a parallel pytree)."""
+    return {"params": params, "axes": axes}

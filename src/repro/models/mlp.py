@@ -1,0 +1,214 @@
+"""Feed-forward layers: SwiGLU dense MLP and Mixture-of-Experts.
+
+MoE follows DeepSeekMoE (arXiv:2401.06066) structure: optional shared experts
+(always active) + fine-grained routed experts with top-k softmax gating and a
+load-balance auxiliary loss. Two execution paths:
+
+- ``dense``: every expert runs on every token, outputs combined by the gate
+  mask. Always lowers on every backend; FLOP-inflated by E/k (visible in the
+  roofline's MODEL_FLOPS/HLO_FLOPs ratio — see EXPERIMENTS.md §Perf).
+- ``ragged``: tokens sorted by expert, ``jax.lax.ragged_dot`` per group —
+  compute proportional to active experts only (dropless).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import ModelConfig, dense, init_dense
+
+
+def init_mlp(key, d_model: int, d_ff: int, num_layers: int, dtype,
+             kind: str = "swiglu") -> dict:
+    k1, k2, k3 = jax.random.split(key, 3)
+    p = {
+        "wg": init_dense(k1, d_model, d_ff, dtype),
+        "wd": init_dense(k3, d_ff, d_model, dtype,
+                         scale=1.0 / jnp.sqrt(d_ff * 2 * num_layers)),
+    }
+    if kind == "swiglu":
+        p["wu"] = init_dense(k2, d_model, d_ff, dtype)
+    return p
+
+
+def mlp(params, x, bf16_partials: bool = False):
+    """SwiGLU: wd( silu(x wg) * (x wu) ); GELU (no wu): wd( gelu(x wg) )."""
+    h = dense(x, params["wg"])
+    if "wu" in params:
+        h = jax.nn.silu(h) * dense(x, params["wu"])
+    else:
+        h = jax.nn.gelu(h.astype(jnp.float32)).astype(x.dtype)
+    return dense(h, params["wd"], bf16_out=bf16_partials)
+
+
+def init_moe(key, cfg: ModelConfig) -> dict:
+    kr, ke1, ke2, ke3, ks = jax.random.split(key, 5)
+    d, fe, e = cfg.d_model, cfg.moe_d_ff or cfg.d_ff, cfg.num_experts
+    scale_in = 1.0 / jnp.sqrt(d)
+    scale_out = 1.0 / jnp.sqrt(fe * 2 * cfg.num_layers)
+    p = {
+        "router": init_dense(kr, d, e, jnp.float32),  # router kept in f32
+        "wg": (scale_in * jax.random.truncated_normal(ke1, -2, 2, (e, d, fe))).astype(cfg.param_dtype),
+        "wu": (scale_in * jax.random.truncated_normal(ke2, -2, 2, (e, d, fe))).astype(cfg.param_dtype),
+        "wd": (scale_out * jax.random.truncated_normal(ke3, -2, 2, (e, fe, d))).astype(cfg.param_dtype),
+    }
+    if cfg.num_shared_experts:
+        p["shared"] = init_mlp(ks, d, fe * cfg.num_shared_experts,
+                               cfg.num_layers, cfg.param_dtype)
+    return p
+
+
+def _routing(params, x, cfg: ModelConfig):
+    """x: (T, D) -> gates (T, E) (zero outside top-k), aux loss scalar."""
+    logits = x.astype(jnp.float32) @ params["router"]          # (T, E)
+    probs = jax.nn.softmax(logits, axis=-1)
+    k = cfg.experts_per_token
+    top_p, top_i = jax.lax.top_k(probs, k)                    # (T, k)
+    # Renormalise selected gates (deepseek-moe style).
+    top_p = top_p / jnp.maximum(top_p.sum(-1, keepdims=True), 1e-9)
+    gates = jnp.zeros_like(probs).at[jnp.arange(x.shape[0])[:, None], top_i].set(top_p)
+    # Switch-style load balance loss: E * sum_e f_e * P_e.
+    f = (gates > 0).astype(jnp.float32).mean(0)               # fraction routed
+    pbar = probs.mean(0)
+    aux = cfg.num_experts * jnp.sum(f * pbar)
+    return gates, top_i, top_p, aux
+
+
+def moe_dense_path(params, x2d, gates, dtype):
+    """All-experts einsum; combine by gates. x2d: (T, D); gates: (T, E)."""
+    h_g = jnp.einsum("td,edf->tef", x2d, params["wg"].astype(dtype),
+                     preferred_element_type=jnp.float32).astype(dtype)
+    h_u = jnp.einsum("td,edf->tef", x2d, params["wu"].astype(dtype),
+                     preferred_element_type=jnp.float32).astype(dtype)
+    h = jax.nn.silu(h_g) * h_u                                 # (T, E, Fe)
+    y = jnp.einsum("tef,efd->ted", h, params["wd"].astype(dtype),
+                   preferred_element_type=jnp.float32)
+    return jnp.einsum("ted,te->td", y, gates.astype(jnp.float32)).astype(dtype)
+
+
+def moe_ragged_path(params, x2d, top_i, top_p, cfg: ModelConfig, dtype):
+    """Sort-by-expert + ragged_dot (dropless). x2d: (T, D)."""
+    t, d = x2d.shape
+    k = cfg.experts_per_token
+    e = cfg.num_experts
+    flat_e = top_i.reshape(-1)                                 # (T*k,)
+    flat_t = jnp.repeat(jnp.arange(t), k)
+    flat_p = top_p.reshape(-1)
+    order = jnp.argsort(flat_e)
+    xs = x2d[flat_t[order]]                                    # (T*k, D)
+    group_sizes = jnp.bincount(flat_e, length=e).astype(jnp.int32)
+    hg = jax.lax.ragged_dot(xs, params["wg"].astype(dtype), group_sizes)
+    hu = jax.lax.ragged_dot(xs, params["wu"].astype(dtype), group_sizes)
+    h = (jax.nn.silu(hg.astype(jnp.float32)) * hu.astype(jnp.float32)).astype(dtype)
+    ys = jax.lax.ragged_dot(h, params["wd"].astype(dtype), group_sizes)
+    # Un-sort and combine.
+    y = jnp.zeros((t, d), jnp.float32)
+    y = y.at[flat_t[order]].add(ys.astype(jnp.float32) * flat_p[order][:, None])
+    return y.astype(dtype)
+
+
+def moe_ep_path(params, x2d, top_i, top_p, cfg: ModelConfig, dtype,
+                model_axis: str = "model", capacity_factor: float = 2.0):
+    """Manual expert parallelism (shard_map body): runs per-device with the
+    expert dim of the weights sharded over ``model_axis`` and the tokens
+    replicated along it (they are sharded over the data axes).
+
+    Each shard: select the (token, k) assignments routed to ITS experts,
+    dispatch into per-expert capacity buffers (Switch-style, capacity_factor x
+    the even share), run the expert FFNs as dense (E_loc, C, .) batched
+    matmuls on the MXU, scatter back weighted by the gates, and psum over the
+    model axis to combine shards. Compute is proportional to ACTIVE experts
+    (vs the all-experts einsum path) — E/k times fewer FLOPs.
+    """
+    t, d = x2d.shape
+    k = cfg.experts_per_token
+    e = cfg.num_experts
+    e_loc = params["wg"].shape[0]            # experts owned by this shard
+    n_shards = e // e_loc
+    cap = max(8, int(capacity_factor * t * k / e))
+    me = jax.lax.axis_index(model_axis)
+    e0 = me * e_loc
+
+    flat_e = top_i.reshape(-1)               # (T*k,) global expert ids
+    flat_p = top_p.reshape(-1)
+    flat_t = jnp.repeat(jnp.arange(t), k)
+    local = (flat_e >= e0) & (flat_e < e0 + e_loc)
+    el = jnp.clip(flat_e - e0, 0, e_loc - 1)
+    # position of each assignment within its expert's capacity buffer
+    onehot = (jax.nn.one_hot(el, e_loc, dtype=jnp.int32)
+              * local[:, None].astype(jnp.int32))          # (T*k, E_loc)
+    pos = jnp.cumsum(onehot, axis=0) - onehot              # pre-count
+    slot = jnp.sum(pos * onehot, axis=1)                   # (T*k,)
+    keep = local & (slot < cap)
+    # dispatch: scatter token rows into (E_loc, cap, D); dropped/non-local
+    # assignments land in a trash slot (index cap) so they cannot clobber
+    # legitimate rows.
+    src = jnp.where(keep, flat_t, t)                       # t = zero row
+    xpad = jnp.concatenate([x2d.astype(dtype), jnp.zeros((1, d), dtype)], 0)
+    slot_w = jnp.where(keep, slot, cap)
+    buf = jnp.zeros((e_loc, cap + 1, d), dtype)
+    buf = buf.at[el, slot_w].set(xpad[src])[:, :cap]
+    # expert FFN: (E_loc, cap, D) x (E_loc, D, F)
+    hg = jnp.einsum("ecd,edf->ecf", buf, params["wg"].astype(dtype),
+                    preferred_element_type=jnp.float32)
+    hu = jnp.einsum("ecd,edf->ecf", buf, params["wu"].astype(dtype),
+                    preferred_element_type=jnp.float32)
+    h = (jax.nn.silu(hg) * hu).astype(dtype)
+    yb = jnp.einsum("ecf,efd->ecd", h, params["wd"].astype(dtype),
+                    preferred_element_type=jnp.float32)    # (E_loc, cap, D)
+    # combine: gather back each kept assignment, weight by gate, sum per token
+    vals = yb[el, jnp.minimum(slot, cap - 1)]              # (T*k, D) f32
+    vals = vals * (flat_p * keep.astype(jnp.float32))[:, None]
+    y = jnp.zeros((t, d), jnp.float32).at[flat_t].add(vals)
+    return jax.lax.psum(y, model_axis).astype(dtype)
+
+
+def moe(params, x, cfg: ModelConfig):
+    """x: (B, S, D) -> (B, S, D), aux loss."""
+    b, s, d = x.shape
+    x2d = x.reshape(b * s, d)
+    if cfg.moe_impl == "ep":
+        y, aux = _moe_ep_shardmap(params, x2d, cfg, x.dtype)
+    else:
+        gates, top_i, top_p, aux = _routing(params, x2d, cfg)
+        if cfg.moe_impl == "ragged":
+            y = moe_ragged_path(params, x2d, top_i, top_p, cfg, x.dtype)
+        else:
+            y = moe_dense_path(params, x2d, gates, x.dtype)
+    if cfg.num_shared_experts:
+        y = y + mlp(params["shared"], x2d)
+    return y.reshape(b, s, d), aux
+
+
+def _moe_ep_shardmap(params, x2d, cfg: ModelConfig, dtype):
+    """Wrap moe_ep_path in shard_map over the ambient mesh (set via
+    jax.set_mesh). Tokens stay sharded over the data axes and replicated over
+    ``model``; expert weights shard over ``model``; outputs come back with
+    the tokens' sharding."""
+    from jax.sharding import PartitionSpec as P
+    mesh = jax.sharding.get_abstract_mesh()
+    if (mesh is None or not getattr(mesh, "shape", None)
+            or "model" not in mesh.shape):
+        # no mesh (single-host tests): single-shard semantics
+        gates, top_i, top_p, aux = _routing(params, x2d, cfg)
+        return moe_dense_path(params, x2d, gates, dtype), aux
+
+    daxes = tuple(a for a in ("pod", "data") if a in mesh.shape)
+    dspec = daxes if len(daxes) > 1 else daxes[0]
+
+    def body(router, wg, wu, wd, x_loc):
+        gates, top_i, top_p, aux = _routing({"router": router}, x_loc, cfg)
+        y = moe_ep_path({"wg": wg, "wu": wu, "wd": wd}, x_loc, top_i, top_p,
+                        cfg, dtype, capacity_factor=cfg.moe_capacity_factor)
+        aux = jax.lax.pmean(aux, "model")
+        for a in daxes:
+            aux = jax.lax.pmean(aux, a)
+        return y, aux
+
+    fn = jax.shard_map(
+        body, mesh=mesh,
+        in_specs=(P(), P("model"), P("model"), P("model"), P(dspec)),
+        out_specs=(P(dspec), P()),
+        check_vma=False,
+    )
+    return fn(params["router"], params["wg"], params["wu"], params["wd"], x2d)

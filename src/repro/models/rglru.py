@@ -1,0 +1,103 @@
+"""RG-LRU recurrent block (RecurrentGemma / Griffin, arXiv:2402.19427).
+
+Recurrence (per channel):
+    r_t = sigmoid(W_a x_t + b_a)            (recurrence gate)
+    i_t = sigmoid(W_x x_t + b_x)            (input gate)
+    a_t = a ** (c * r_t),  a = sigmoid(lambda)   (c = 8)
+    h_t = a_t * h_{t-1} + sqrt(1 - a_t^2) * (i_t * x_t)
+
+Training runs the linear recurrence with ``jax.lax.associative_scan``
+(log-depth on TPU); decode carries (B, W) state. The full residual block is
+conv1d + RG-LRU inside a gated (GeLU) branch pair, per the Griffin paper.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import ModelConfig, dense, init_dense
+
+RG_LRU_C = 8.0
+
+
+def init_rglru(key, cfg: ModelConfig) -> dict:
+    d, w = cfg.d_model, cfg.rnn_width
+    k1, k2, k3, k4, k5, k6, k7 = jax.random.split(key, 7)
+    # lambda init so a = sigmoid(lambda) in [0.9, 0.999]
+    u = jax.random.uniform(k1, (w,), minval=0.9, maxval=0.999)
+    return {
+        "w_x": init_dense(k2, d, w, cfg.param_dtype),       # conv branch in
+        "w_gate": init_dense(k3, d, w, cfg.param_dtype),    # gelu gate branch
+        "conv_w": (0.1 * jax.random.normal(k4, (cfg.conv_width, w))).astype(cfg.param_dtype),
+        "conv_b": jnp.zeros((w,), cfg.param_dtype),
+        "w_a": init_dense(k5, w, w, jnp.float32),
+        "b_a": jnp.zeros((w,), jnp.float32),
+        "w_i": init_dense(k6, w, w, jnp.float32),
+        "b_i": jnp.zeros((w,), jnp.float32),
+        "lam": jnp.log(u / (1.0 - u)).astype(jnp.float32),  # logit(a)
+        "w_out": init_dense(k7, w, d, cfg.param_dtype,
+                            scale=1.0 / jnp.sqrt(w * 2 * cfg.num_layers)),
+    }
+
+
+def _gates(params, xc):
+    """xc: (..., W) f32 -> (a_t, beta*i*x) coefficients of the recurrence."""
+    r = jax.nn.sigmoid(xc @ params["w_a"] + params["b_a"])
+    i = jax.nn.sigmoid(xc @ params["w_i"] + params["b_i"])
+    log_a = RG_LRU_C * r * jax.nn.log_sigmoid(params["lam"])   # log a_t <= 0
+    a = jnp.exp(log_a)
+    beta = jnp.sqrt(jnp.maximum(1.0 - jnp.exp(2.0 * log_a), 1e-12))
+    return a, beta * i * xc
+
+
+def _conv(params, x, cfg: ModelConfig):
+    s = x.shape[1]
+    xp = jnp.pad(x, ((0, 0), (cfg.conv_width - 1, 0), (0, 0)))
+    out = sum(
+        xp[:, i:i + s, :] * params["conv_w"][i][None, None, :]
+        for i in range(cfg.conv_width)
+    )
+    return out + params["conv_b"][None, None, :]
+
+
+def rglru_forward(params, u, cfg: ModelConfig, return_state: bool = False):
+    """Training/prefill. u: (B, S, D) -> (B, S, D)."""
+    x = dense(u, params["w_x"])
+    gate = jax.nn.gelu(dense(u, params["w_gate"]).astype(jnp.float32))
+    xc = _conv(params, x, cfg).astype(jnp.float32)
+    a, b = _gates(params, xc)                      # (B, S, W) each
+
+    def combine(lhs, rhs):
+        a1, b1 = lhs
+        a2, b2 = rhs
+        return a1 * a2, a2 * b1 + b2
+
+    _, h = jax.lax.associative_scan(combine, (a, b), axis=1)
+    y = (h * gate).astype(u.dtype)
+    out = dense(y, params["w_out"])
+    if return_state:
+        cache = {"conv": x[:, x.shape[1] - (cfg.conv_width - 1):, :].astype(u.dtype),
+                 "h": h[:, -1]}
+        return out, cache
+    return out
+
+
+def init_rglru_cache(cfg: ModelConfig, batch: int, dtype):
+    return {
+        "conv": jnp.zeros((batch, cfg.conv_width - 1, cfg.rnn_width), dtype),
+        "h": jnp.zeros((batch, cfg.rnn_width), jnp.float32),
+    }
+
+
+def rglru_decode_step(params, u, cache, cfg: ModelConfig):
+    """u: (B, 1, D). Returns (y, new_cache)."""
+    x = dense(u, params["w_x"])                    # (B, 1, W)
+    gate = jax.nn.gelu(dense(u, params["w_gate"]).astype(jnp.float32))
+    hist = jnp.concatenate([cache["conv"], x.astype(cache["conv"].dtype)], axis=1)
+    xc = (jnp.einsum("btw,tw->bw", hist.astype(jnp.float32),
+                     params["conv_w"].astype(jnp.float32))
+          + params["conv_b"].astype(jnp.float32))  # (B, W)
+    a, b = _gates(params, xc)
+    h = a * cache["h"] + b
+    y = (h[:, None, :] * gate).astype(u.dtype)
+    return dense(y, params["w_out"]), {"conv": hist[:, 1:], "h": h}

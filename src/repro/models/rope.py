@@ -1,0 +1,51 @@
+"""Rotary position embeddings — standard RoPE and Qwen2-VL's M-RoPE.
+
+M-RoPE (multimodal rotary, arXiv:2409.12191): the head_dim/2 frequency slots
+are partitioned into (temporal, height, width) sections; each section rotates
+by the corresponding coordinate of a 3-D position id. Text tokens carry equal
+(t, h, w) coordinates, so M-RoPE over text degenerates to standard RoPE.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def rope_freqs(head_dim: int, theta: float) -> jnp.ndarray:
+    """(head_dim/2,) inverse frequencies."""
+    half = head_dim // 2
+    return 1.0 / (theta ** (jnp.arange(0, half, dtype=jnp.float32) / half))
+
+
+def apply_rope(x: jnp.ndarray, positions: jnp.ndarray, theta: float) -> jnp.ndarray:
+    """x: (B, S, H, hd); positions: (B, S) int32."""
+    half = x.shape[-1] // 2
+    freqs = rope_freqs(x.shape[-1], theta)                     # (half,)
+    angles = positions[..., None].astype(jnp.float32) * freqs  # (B, S, half)
+    cos = jnp.cos(angles)[:, :, None, :]
+    sin = jnp.sin(angles)[:, :, None, :]
+    x1, x2 = x[..., :half].astype(jnp.float32), x[..., half:].astype(jnp.float32)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+def apply_mrope(x: jnp.ndarray, positions3: jnp.ndarray, theta: float,
+                sections: tuple) -> jnp.ndarray:
+    """x: (B, S, H, hd); positions3: (3, B, S) int32 (t, h, w); sections sum
+    to hd/2."""
+    half = x.shape[-1] // 2
+    assert sum(sections) == half, (sections, half)
+    freqs = rope_freqs(x.shape[-1], theta)                     # (half,)
+    # Pick which coordinate drives each frequency slot.
+    sec_id = jnp.repeat(jnp.arange(3), jnp.array(sections), total_repeat_length=half)
+    pos = positions3[sec_id, :, :]                             # (half, B, S)
+    angles = jnp.moveaxis(pos, 0, -1).astype(jnp.float32) * freqs  # (B, S, half)
+    cos = jnp.cos(angles)[:, :, None, :]
+    sin = jnp.sin(angles)[:, :, None, :]
+    x1, x2 = x[..., :half].astype(jnp.float32), x[..., half:].astype(jnp.float32)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+def text_positions3(positions: jnp.ndarray) -> jnp.ndarray:
+    """Text-only M-RoPE positions: (B, S) -> (3, B, S) with equal coords."""
+    return jnp.broadcast_to(positions[None], (3,) + positions.shape)

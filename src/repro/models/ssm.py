@@ -1,0 +1,160 @@
+"""Mamba2 / SSD layer (arXiv:2405.21060 — state-space duality).
+
+Training uses the chunked SSD algorithm: the sequence is split into chunks of
+length Q; within a chunk the quadratic ("attention-like") form runs on the
+MXU, and a single inter-chunk linear recurrence over the (H, P, N) states is
+carried by ``jax.lax.scan``(chunks) — the TPU-native blocking of the paper's
+algorithm (HBM-resident states touched once per chunk).
+
+Decode keeps a constant-size recurrent state: conv ring buffer (B, d_inner,
+conv_w) + SSM state (B, H, P, N) — O(1) per token, which is what makes the
+``long_500k`` shape tractable for this family.
+
+Head layout: x is split into H heads of dim P (= ssm_head_dim); B/C are shared
+across heads (n_groups = 1); A is a per-head scalar; dt a per-head rate.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import ModelConfig, dense, init_dense
+
+
+def init_ssm(key, cfg: ModelConfig) -> dict:
+    d, di, n, h = cfg.d_model, cfg.d_inner, cfg.ssm_state, cfg.ssm_heads
+    k1, k2, k3, k4, k5, k6 = jax.random.split(key, 6)
+    return {
+        # fused input projection: [x (di), z gate (di), B (n), C (n), dt (h)]
+        "w_in": init_dense(k1, d, 2 * di + 2 * n + h, cfg.param_dtype),
+        "conv_w": (0.1 * jax.random.normal(k2, (cfg.conv_width, di))).astype(cfg.param_dtype),
+        "conv_b": jnp.zeros((di,), cfg.param_dtype),
+        "a_log": jnp.log(jnp.linspace(1.0, 16.0, h)).astype(jnp.float32),
+        "dt_bias": jax.random.uniform(k4, (h,), minval=-4.0, maxval=-1.0).astype(jnp.float32),
+        "d_skip": jnp.ones((h,), jnp.float32),
+        "norm_scale": jnp.zeros((di,), jnp.float32),
+        "w_out": init_dense(k5, di, d, cfg.param_dtype,
+                            scale=1.0 / jnp.sqrt(di * 2 * cfg.num_layers)),
+    }
+
+
+def _split_in(params, u, cfg: ModelConfig):
+    di, n, h = cfg.d_inner, cfg.ssm_state, cfg.ssm_heads
+    proj = dense(u, params["w_in"])
+    x, z, bmat, cmat, dt = jnp.split(proj, [di, 2 * di, 2 * di + n, 2 * di + 2 * n], axis=-1)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + params["dt_bias"])   # (..., h)
+    return x, z, bmat.astype(jnp.float32), cmat.astype(jnp.float32), dt
+
+
+def _gated_out(params, y, z, cfg: ModelConfig):
+    yf = y.astype(jnp.float32)
+    # grouped RMSNorm over the inner dim, gated by z (mamba2 norm placement)
+    var = jnp.mean(yf * yf, axis=-1, keepdims=True)
+    yf = yf * jax.lax.rsqrt(var + cfg.norm_eps) * (1.0 + params["norm_scale"])
+    yf = yf * jax.nn.silu(z.astype(jnp.float32))
+    return dense(yf.astype(y.dtype), params["w_out"])
+
+
+def ssd_forward(params, u, cfg: ModelConfig, return_state: bool = False):
+    """Training/prefill forward. u: (B, S, D) -> (B, S, D).
+
+    S must be divisible by cfg.ssm_chunk (pad upstream if needed).
+    With ``return_state``, also returns the decode cache after consuming u.
+    """
+    b, s_orig, _ = u.shape
+    q = cfg.ssm_chunk
+    pad = (-s_orig) % q
+    if pad:
+        # Front-pad with zeros: zero inputs leave the (zero-initialised) state
+        # untouched, so real tokens are unaffected; padded outputs are dropped.
+        u = jnp.pad(u, ((0, 0), (pad, 0), (0, 0)))
+    b, s, _ = u.shape
+    di, n, h, p = cfg.d_inner, cfg.ssm_state, cfg.ssm_heads, cfg.ssm_head_dim
+    nc = s // q
+    x, z, bmat, cmat, dt = _split_in(params, u, cfg)
+
+    # causal depthwise conv over sequence
+    xp = jnp.pad(x, ((0, 0), (cfg.conv_width - 1, 0), (0, 0)))
+    xc = sum(
+        xp[:, i:i + s, :] * params["conv_w"][i][None, None, :]
+        for i in range(cfg.conv_width)
+    ) + params["conv_b"][None, None, :]
+    xc = jax.nn.silu(xc.astype(jnp.float32))
+
+    xh = xc.reshape(b, nc, q, h, p)                       # chunked heads
+    bt = bmat.reshape(b, nc, q, n)
+    ct = cmat.reshape(b, nc, q, n)
+    dtc = dt.reshape(b, nc, q, h)
+    a = -jnp.exp(params["a_log"])                         # (h,) negative
+    dA = dtc * a                                          # (b, nc, q, h) log-decay
+    # cumulative decays within chunk
+    seg = jnp.cumsum(dA, axis=2)                          # (b, nc, q, h)
+
+    def chunk_step(state, inp):
+        """state: (b, h, p, n); one chunk."""
+        xk, bk, ck, dAk, segk, dtk = inp
+        # intra-chunk quadratic form: L masked decay matrix
+        # att[i,j] = exp(seg_i - seg_j) * dt_j * (c_i . b_j), j <= i
+        rel = segk[:, :, None, :] - segk[:, None, :, :]    # (b, q, q, h)
+        causal = jnp.tril(jnp.ones((q, q), bool))
+        gamma = jnp.where(causal[None, :, :, None], jnp.exp(rel), 0.0)
+        cb = jnp.einsum("bin,bjn->bij", ck, bk)            # (b, q, q)
+        w = gamma * cb[..., None] * dtk[:, None, :, :]     # (b, q, q, h)
+        y_intra = jnp.einsum("bijh,bjhp->bihp", w, xk)
+        # contribution of carried-in state
+        decay_in = jnp.exp(segk)                           # (b, q, h)
+        y_state = jnp.einsum("bin,bhpn,bih->bihp", ck, state, decay_in)
+        # update state for next chunk
+        decay_out = jnp.exp(segk[:, -1:, :] - segk)        # (b, q, h)
+        contrib = jnp.einsum("bjn,bjhp,bjh,bjh->bhpn", bk, xk, dtk, decay_out)
+        state = state * jnp.exp(segk[:, -1])[:, :, None, None] + contrib
+        return state, y_intra + y_state
+
+    # reorder chunk axis to scan over it
+    inputs = (
+        jnp.moveaxis(xh, 1, 0), jnp.moveaxis(bt, 1, 0), jnp.moveaxis(ct, 1, 0),
+        jnp.moveaxis(dA, 1, 0), jnp.moveaxis(seg, 1, 0), jnp.moveaxis(dtc, 1, 0),
+    )
+    state0 = jnp.zeros((b, h, p, n), jnp.float32)
+    state_f, ys = jax.lax.scan(lambda st, inp: chunk_step(st, inp), state0, inputs)
+    y = jnp.moveaxis(ys, 0, 1).reshape(b, s, h, p)
+    y = y + params["d_skip"][None, None, :, None] * xc.reshape(b, s, h, p)
+    y = y.reshape(b, s, di).astype(u.dtype)
+    out = _gated_out(params, y, z, cfg)
+    if pad:
+        out = out[:, pad:]
+    if return_state:
+        cache = {"conv": x[:, s - (cfg.conv_width - 1):, :].astype(u.dtype),
+                 "state": state_f}
+        return out, cache
+    return out
+
+
+def init_ssm_cache(cfg: ModelConfig, batch: int, dtype):
+    return {
+        "conv": jnp.zeros((batch, cfg.conv_width - 1, cfg.d_inner), dtype),
+        "state": jnp.zeros((batch, cfg.ssm_heads, cfg.ssm_head_dim, cfg.ssm_state),
+                           jnp.float32),
+    }
+
+
+def ssd_decode_step(params, u, cache, cfg: ModelConfig):
+    """u: (B, 1, D); cache from init_ssm_cache. Returns (y, new_cache)."""
+    b = u.shape[0]
+    di, n, h, p = cfg.d_inner, cfg.ssm_state, cfg.ssm_heads, cfg.ssm_head_dim
+    x, z, bmat, cmat, dt = _split_in(params, u, cfg)       # x: (B,1,di)
+    hist = jnp.concatenate([cache["conv"], x.astype(cache["conv"].dtype)], axis=1)
+    xc = jnp.einsum("btd,td->bd", hist.astype(jnp.float32),
+                    params["conv_w"].astype(jnp.float32)) + params["conv_b"].astype(jnp.float32)
+    xc = jax.nn.silu(xc)                                   # (B, di)
+    xhp = xc.reshape(b, h, p)
+    dt1 = dt[:, 0]                                         # (B, h)
+    a = -jnp.exp(params["a_log"])
+    decay = jnp.exp(dt1 * a)                               # (B, h)
+    state = cache["state"] * decay[:, :, None, None] + jnp.einsum(
+        "bn,bhp,bh->bhpn", bmat[:, 0], xhp, dt1)
+    y = jnp.einsum("bn,bhpn->bhp", cmat[:, 0], state)
+    y = y + params["d_skip"][None, :, None] * xhp
+    y = y.reshape(b, 1, di).astype(u.dtype)
+    out = _gated_out(params, y, z, cfg)
+    return out, {"conv": hist[:, 1:], "state": state}

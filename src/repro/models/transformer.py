@@ -1,0 +1,483 @@
+"""Model assembly for all assigned architecture families.
+
+One homogeneous block stack per family, scanned with ``jax.lax.scan`` over
+stacked params (lowering cost O(1) in depth; optional ``jax.checkpoint`` per
+block for training). Families:
+
+- dense / vlm:  L x (GQA attn + SwiGLU MLP); vlm adds M-RoPE + patch embeds
+- moe:          L x (GQA attn + MoE FFN), optional leading dense-FFN layers
+- ssm:          L x Mamba2/SSD block
+- hybrid:       repeating (rglru, rglru, attn) pattern + tail, each + MLP
+- audio:        whisper enc-dec — encoder L x (bidir attn + MLP), decoder
+                L x (causal self-attn + cross-attn + MLP), stub conv frontend
+
+Public entry points (all pure):
+    init_params(key, cfg)
+    forward_train(params, batch, cfg)          -> (logits, aux_losses)
+    prefill(params, batch, cfg)                -> (last_logits, cache)
+    decode_step(params, tokens, pos, cache, cfg[, batch]) -> (logits, cache)
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import attention, mlp as mlp_lib, rglru as rglru_lib, ssm as ssm_lib
+from repro.models.common import ModelConfig, dense, init_dense, rms_norm
+
+# ---------------------------------------------------------------------------
+# Init
+
+
+def _stack_init(fn, key, n: int):
+    """vmap an init fn over n layer keys -> stacked param dict."""
+    return jax.vmap(fn)(jax.random.split(key, n))
+
+
+def _scan(body, carry, xs, unroll: bool):
+    """lax.scan, or a python unroll (dry-run cost-analysis mode)."""
+    if not unroll:
+        return jax.lax.scan(body, carry, xs)
+    length = jax.tree.leaves(xs)[0].shape[0]
+    ys = []
+    for i in range(length):
+        carry, y = body(carry, jax.tree.map(lambda a: a[i], xs))
+        ys.append(y)
+    if not ys or ys[0] is None:
+        return carry, None
+    ys = jax.tree.map(lambda *zs: jnp.stack(zs), *ys)
+    return carry, ys
+
+
+def _init_block(key, cfg: ModelConfig, kind: str, cross: bool = False) -> dict:
+    ks = jax.random.split(key, 8)
+    p = {"ln1": jnp.zeros((cfg.d_model,), jnp.float32)}
+    if kind == "attn":
+        p["attn"] = attention.init_attn(ks[0], cfg)
+    elif kind == "rglru":
+        p["rec"] = rglru_lib.init_rglru(ks[0], cfg)
+    elif kind == "ssm":
+        p["ssm"] = ssm_lib.init_ssm(ks[0], cfg)
+        return p  # mamba2 block has no separate MLP sublayer
+    if cross:
+        p["ln_cross"] = jnp.zeros((cfg.d_model,), jnp.float32)
+        p["cross"] = attention.init_attn(ks[1], cfg, cross=True)
+    p["ln2"] = jnp.zeros((cfg.d_model,), jnp.float32)
+    if kind == "moe":
+        p["attn"] = attention.init_attn(ks[0], cfg)
+        p["moe"] = mlp_lib.init_moe(ks[2], cfg)
+    elif kind == "dense_ffn":
+        p["attn"] = attention.init_attn(ks[0], cfg)
+        p["mlp"] = mlp_lib.init_mlp(ks[2], cfg.d_model,
+                                    cfg.first_dense_d_ff or cfg.d_ff,
+                                    cfg.num_layers, cfg.param_dtype)
+    else:
+        p["mlp"] = mlp_lib.init_mlp(ks[2], cfg.d_model, cfg.d_ff,
+                                    cfg.num_layers, cfg.param_dtype,
+                                    kind=cfg.mlp_kind)
+    return p
+
+
+def _layer_plan(cfg: ModelConfig):
+    """Returns (stacks, tail) — lists of (name, kind, count, cross)."""
+    if cfg.arch_type == "ssm":
+        return [("blocks", "ssm", cfg.num_layers, False)], []
+    if cfg.arch_type == "hybrid":
+        pat = cfg.block_pattern or ("rglru", "rglru", "attn")
+        reps = cfg.num_layers // len(pat)
+        tail = cfg.pattern_tail or tuple(
+            pat[i] for i in range(cfg.num_layers - reps * len(pat)))
+        stacks = [(f"pat{i}_{k}", k, reps, False) for i, k in enumerate(pat)]
+        tails = [(f"tail{i}_{k}", k, 1, False) for i, k in enumerate(tail)]
+        return stacks, tails
+    if cfg.arch_type == "moe":
+        nd = cfg.first_dense_layers
+        stacks = []
+        if nd:
+            stacks.append(("dense_blocks", "dense_ffn", nd, False))
+        stacks.append(("blocks", "moe", cfg.num_layers - nd, False))
+        return stacks, []
+    if cfg.arch_type == "audio":
+        return ([("enc_blocks", "attn", cfg.encoder_layers or cfg.num_layers, False),
+                 ("dec_blocks", "attn", cfg.num_layers, True)], [])
+    # dense / vlm
+    return [("blocks", "attn", cfg.num_layers, False)], []
+
+
+def init_params(key, cfg: ModelConfig) -> dict:
+    keys = jax.random.split(key, 16)
+    params = {
+        "embed": (jax.random.normal(keys[0], (cfg.vocab_size, cfg.d_model))
+                  * 0.02).astype(cfg.param_dtype),
+        "ln_f": jnp.zeros((cfg.d_model,), jnp.float32),
+    }
+    if not cfg.tie_embeddings:
+        params["unembed"] = init_dense(keys[1], cfg.d_model, cfg.vocab_size,
+                                       cfg.param_dtype)
+    if cfg.learned_positions:
+        npos = cfg.max_positions or 8192
+        params["pos_embed"] = (jax.random.normal(keys[2], (npos, cfg.d_model))
+                               * 0.02).astype(cfg.param_dtype)
+        if cfg.is_encoder_decoder:
+            params["enc_pos_embed"] = (
+                jax.random.normal(keys[3], (cfg.encoder_seq, cfg.d_model))
+                * 0.02).astype(cfg.param_dtype)
+    stacks, tail = _layer_plan(cfg)
+    for i, (name, kind, count, cross) in enumerate(stacks):
+        params[name] = _stack_init(
+            lambda k, kind=kind, cross=cross: _init_block(k, cfg, kind, cross),
+            keys[4 + i], count)
+    for i, (name, kind, count, cross) in enumerate(tail):
+        params[name] = _init_block(keys[10 + i], cfg, kind, cross)
+    if cfg.is_encoder_decoder:
+        params["enc_ln_f"] = jnp.zeros((cfg.d_model,), jnp.float32)
+    return params
+
+
+# ---------------------------------------------------------------------------
+# Blocks (full-sequence)
+
+
+def _block_fwd(p, x, positions, cfg: ModelConfig, kind: str, *,
+               causal=True, window=None, positions3=None, enc_out=None):
+    """One block, full sequence. Returns (x, aux)."""
+    aux = jnp.float32(0.0)
+    h = rms_norm(x, p["ln1"], cfg.norm_eps)
+    if kind in ("attn", "moe", "dense_ffn"):
+        att, _ = attention.self_attention(
+            p["attn"], h, positions, cfg, causal=causal,
+            window=window, positions3=positions3)
+        x = x + att
+    elif kind == "rglru":
+        x = x + rglru_lib.rglru_forward(p["rec"], h, cfg)
+    elif kind == "ssm":
+        return x + ssm_lib.ssd_forward(p["ssm"], h, cfg), aux
+    if enc_out is not None and "cross" in p:
+        hc = rms_norm(x, p["ln_cross"], cfg.norm_eps)
+        x = x + attention.cross_attention(p["cross"], hc, enc_out, cfg)
+    h2 = rms_norm(x, p["ln2"], cfg.norm_eps)
+    if kind == "moe":
+        y, aux = mlp_lib.moe(p["moe"], h2, cfg)
+        x = x + y
+    else:
+        x = x + mlp_lib.mlp(p["mlp"], h2, cfg.bf16_partials)
+    return x, aux
+
+
+def _scan_stack(params_stack, x, positions, cfg, kind, *, causal=True,
+                window=None, positions3=None, enc_out=None, remat=False):
+    fn = functools.partial(_block_fwd, cfg=cfg, kind=kind, causal=causal,
+                           window=window, positions3=positions3)
+
+    def body(carry, p):
+        x, aux = carry
+        if enc_out is not None:
+            x2, a = fn(p, x, positions, enc_out=enc_out)
+        else:
+            x2, a = fn(p, x, positions)
+        return (x2, aux + a), None
+
+    if remat:
+        body = jax.checkpoint(body)
+    (x, aux), _ = _scan(body, (x, jnp.float32(0.0)), params_stack,
+                        cfg.unroll_layers)
+    return x, aux
+
+
+# ---------------------------------------------------------------------------
+# Embedding / heads
+
+
+def _embed(params, tokens, cfg: ModelConfig, positions=None):
+    x = params["embed"][tokens].astype(cfg.dtype)
+    if cfg.learned_positions and positions is not None:
+        x = x + params["pos_embed"][positions].astype(cfg.dtype)
+    return x
+
+
+def _logits(params, x, cfg: ModelConfig):
+    h = rms_norm(x, params["ln_f"], cfg.norm_eps)
+    w = params["embed"].T if cfg.tie_embeddings else params["unembed"]
+    return dense(h, w).astype(jnp.float32)
+
+
+def _encode(params, frames, cfg: ModelConfig):
+    """Whisper encoder over stub frame embeddings (B, Se, D)."""
+    x = frames.astype(cfg.dtype)
+    if cfg.learned_positions:
+        pos = jnp.arange(frames.shape[1])
+        x = x + params["enc_pos_embed"][pos][None].astype(cfg.dtype)
+    positions = jnp.broadcast_to(jnp.arange(frames.shape[1])[None],
+                                 frames.shape[:2])
+    x, _ = _scan_stack(params["enc_blocks"], x, positions, cfg, "attn",
+                       causal=False, remat=cfg.remat)
+    return rms_norm(x, params["enc_ln_f"], cfg.norm_eps)
+
+
+# ---------------------------------------------------------------------------
+# Full-sequence forward (training and prefill share this path)
+
+
+def forward_hidden(params, batch: dict, cfg: ModelConfig):
+    """Full forward up to (pre-ln_f) hidden states. Returns (x, aux)."""
+    tokens = batch["tokens"]
+    b, s = tokens.shape
+    positions = jnp.broadcast_to(jnp.arange(s)[None], (b, s))
+    x = _embed(params, tokens, cfg, positions)
+    positions3 = None
+    if cfg.arch_type == "vlm":
+        if "vision_embeds" in batch:
+            npatch = batch["vision_embeds"].shape[1]
+            x = jnp.concatenate(
+                [batch["vision_embeds"].astype(cfg.dtype), x[:, npatch:]], axis=1)
+        positions3 = batch.get("positions3")
+    enc_out = None
+    if cfg.is_encoder_decoder:
+        enc_out = _encode(params, batch["frames"], cfg)
+
+    aux = jnp.float32(0.0)
+    stacks, tail = _layer_plan(cfg)
+    for (name, kind, count, cross) in stacks:
+        if name == "enc_blocks":
+            continue
+        x, a = _scan_stack(params[name], x, positions, cfg, kind,
+                           causal=True, positions3=positions3,
+                           enc_out=enc_out if cross else None,
+                           remat=cfg.remat)
+        aux = aux + a
+    for (name, kind, count, cross) in tail:
+        x, a = _block_fwd(params[name], x, positions, cfg, kind,
+                          positions3=positions3,
+                          enc_out=enc_out if cross else None)
+        aux = aux + a
+    return x, aux
+
+
+def forward_train(params, batch: dict, cfg: ModelConfig,
+                  return_hidden: bool = False):
+    """batch: tokens (B, S) [+ frames | vision_embeds, positions3].
+
+    Returns (logits (B, S, V) f32, aux_losses scalar)
+    [, final hidden (B, S, D) when return_hidden].
+    """
+    x, aux = forward_hidden(params, batch, cfg)
+    if return_hidden:
+        return _logits(params, x, cfg), aux, x
+    return _logits(params, x, cfg), aux
+
+
+def chunked_ce_loss(params, hidden, labels, cfg: ModelConfig):
+    """Next-token CE without materialising (B, S, V) logits: scan over
+    sequence chunks, computing each chunk's logits + CE inside a checkpointed
+    body (recomputed in backward)."""
+    from repro.models.common import softmax_cross_entropy
+    b, s, d = hidden.shape
+    h = rms_norm(hidden, params["ln_f"], cfg.norm_eps)
+    w = params["embed"].T if cfg.tie_embeddings else params["unembed"]
+    # predict labels[t+1] from hidden[t]
+    h = h[:, :-1]
+    y = labels[:, 1:]
+    chunk = min(cfg.ce_chunk, h.shape[1])
+    n = (h.shape[1] // chunk) * chunk
+    hc = jnp.moveaxis(h[:, :n].reshape(b, -1, chunk, d), 1, 0)
+    yc = jnp.moveaxis(y[:, :n].reshape(b, -1, chunk), 1, 0)
+
+    @functools.partial(jax.checkpoint, prevent_cse=False)
+    def body(tot, inp):
+        hh, yy = inp
+        logits = dense(hh, w).astype(jnp.float32)
+        return tot + softmax_cross_entropy(logits, yy) * (chunk * b), None
+
+    tot, _ = jax.lax.scan(body, jnp.float32(0.0), (hc, yc))
+    count = n * b
+    if n < h.shape[1]:  # ragged tail
+        logits = dense(h[:, n:], w).astype(jnp.float32)
+        tot = tot + softmax_cross_entropy(logits, y[:, n:]) * ((h.shape[1] - n) * b)
+        count = h.shape[1] * b
+    return tot / count
+
+
+# ---------------------------------------------------------------------------
+# Serving: cache init / prefill / decode
+
+def _stack_sizes(cfg: ModelConfig):
+    return _layer_plan(cfg)
+
+
+def init_cache(cfg: ModelConfig, batch: int, cache_len: int, dtype=None):
+    """Nested dict of per-stack caches (stacked leading layer axis)."""
+    dtype = dtype or cfg.dtype
+    cache = {}
+    stacks, tail = _layer_plan(cfg)
+
+    def one(kind, count):
+        if kind in ("attn", "moe", "dense_ffn"):
+            shape = (count, batch, cache_len, cfg.num_kv_heads, cfg.hd)
+            return {"k": jnp.zeros(shape, dtype), "v": jnp.zeros(shape, dtype)}
+        if kind == "rglru":
+            return jax.tree.map(lambda x: jnp.broadcast_to(x, (count,) + x.shape),
+                                rglru_lib.init_rglru_cache(cfg, batch, dtype))
+        if kind == "ssm":
+            return jax.tree.map(lambda x: jnp.broadcast_to(x, (count,) + x.shape),
+                                ssm_lib.init_ssm_cache(cfg, batch, dtype))
+        raise ValueError(kind)
+
+    for (name, kind, count, cross) in stacks:
+        if name == "enc_blocks":
+            continue
+        cache[name] = one(kind, count)
+        if cross:
+            shape = (count, batch, cfg.encoder_seq, cfg.num_kv_heads, cfg.hd)
+            cache[name]["cross_k"] = jnp.zeros(shape, dtype)
+            cache[name]["cross_v"] = jnp.zeros(shape, dtype)
+    for (name, kind, count, cross) in tail:
+        c = one(kind, 1)
+        cache[name] = jax.tree.map(lambda x: x[0], c)
+    return cache
+
+
+def _decode_block(p, x, pos, cache, cfg: ModelConfig, kind, *, window=None,
+                  positions3=None, enc_out=None):
+    h = rms_norm(x, p["ln1"], cfg.norm_eps)
+    if kind in ("attn", "moe", "dense_ffn"):
+        att, nk, nv = attention.decode_attention(
+            p["attn"], h, cache["k"], cache["v"], pos, cfg,
+            window=window, positions3=positions3)
+        cache = dict(cache, k=nk, v=nv)
+        x = x + att
+    elif kind == "rglru":
+        y, nc = rglru_lib.rglru_decode_step(p["rec"], h, cache, cfg)
+        cache = dict(cache, **nc)
+        x = x + y
+    elif kind == "ssm":
+        y, nc = ssm_lib.ssd_decode_step(p["ssm"], h, cache, cfg)
+        return x + y, dict(cache, **nc)
+    if "cross" in p and "cross_k" in cache:
+        hc = rms_norm(x, p["ln_cross"], cfg.norm_eps)
+        b = x.shape[0]
+        q = attention._split_heads(dense(hc, p["cross"]["wq"]), cfg.num_heads, cfg.hd)
+        kk = attention._repeat_kv(cache["cross_k"].astype(x.dtype),
+                                  cfg.num_heads // cfg.num_kv_heads)
+        vv = attention._repeat_kv(cache["cross_v"].astype(x.dtype),
+                                  cfg.num_heads // cfg.num_kv_heads)
+        mask = jnp.zeros((1, 1, 1, kk.shape[1]), jnp.float32)
+        att = attention.attend(q, kk, vv, mask)
+        x = x + dense(att.reshape(b, 1, cfg.q_dim), p["cross"]["wo"])
+    h2 = rms_norm(x, p["ln2"], cfg.norm_eps)
+    if kind == "moe":
+        y, _ = mlp_lib.moe(p["moe"], h2, cfg)
+        x = x + y
+    else:
+        x = x + mlp_lib.mlp(p["mlp"], h2, cfg.bf16_partials)
+    return x, cache
+
+
+def decode_step(params, tokens, pos, cache, cfg: ModelConfig, *,
+                window: int | None = None, positions3=None):
+    """One decode step. tokens: (B, 1); pos: (B,). Returns (logits, cache)."""
+    x = _embed(params, tokens, cfg, pos[:, None])
+    stacks, tail = _layer_plan(cfg)
+    new_cache = {}
+    for (name, kind, count, cross) in stacks:
+        if name == "enc_blocks":
+            continue
+
+        def body(x, pc):
+            p, c = pc
+            x2, c2 = _decode_block(p, x, pos, c, cfg, kind, window=window,
+                                   positions3=positions3)
+            return x2, c2
+
+        x, new_cache[name] = _scan(body, x, (params[name], cache[name]),
+                                   cfg.unroll_layers)
+    for (name, kind, count, cross) in tail:
+        x, new_cache[name] = _decode_block(
+            params[name], x, pos, cache[name], cfg, kind, window=window,
+            positions3=positions3)
+    return _logits(params, x, cfg)[:, 0], new_cache
+
+
+def prefill(params, batch: dict, cfg: ModelConfig, cache_len: int | None = None):
+    """Run the full-sequence forward and materialise the KV cache.
+
+    Returns (last_logits (B, V), cache). For recurrent stacks the cache holds
+    the final state (recomputed via a short scan of decode steps is avoided —
+    states are produced by the chunked/assoc-scan forwards).
+    """
+    tokens = batch["tokens"]
+    b, s = tokens.shape
+    cache_len = cache_len or s
+    positions = jnp.broadcast_to(jnp.arange(s)[None], (b, s))
+    x = _embed(params, tokens, cfg, positions)
+    positions3 = None
+    if cfg.arch_type == "vlm":
+        if "vision_embeds" in batch:
+            npatch = batch["vision_embeds"].shape[1]
+            x = jnp.concatenate(
+                [batch["vision_embeds"].astype(cfg.dtype), x[:, npatch:]], axis=1)
+        positions3 = batch.get("positions3")
+    enc_out = _encode(params, batch["frames"], cfg) if cfg.is_encoder_decoder else None
+    cache = init_cache(cfg, b, cache_len)
+    stacks, tail = _layer_plan(cfg)
+
+    def prefill_block(p, c, x, kind):
+        """One block over the full prompt; returns (x, new_cache)."""
+        h = rms_norm(x, p["ln1"], cfg.norm_eps)
+        if kind in ("attn", "moe", "dense_ffn"):
+            att, (k, v) = attention.self_attention(
+                p["attn"], h, positions, cfg, causal=True,
+                window=cfg.window, positions3=positions3)
+            x = x + att
+            c = dict(c)
+            if cache_len >= s:
+                # Linear layout: slot = position.
+                c["k"] = jax.lax.dynamic_update_slice(
+                    c["k"], k.astype(c["k"].dtype), (0, 0, 0, 0))
+                c["v"] = jax.lax.dynamic_update_slice(
+                    c["v"], v.astype(c["v"].dtype), (0, 0, 0, 0))
+            else:
+                # Ring buffer: position t lives at slot t % cache_len.
+                c["k"] = jnp.roll(k[:, -cache_len:], s % cache_len,
+                                  axis=1).astype(c["k"].dtype)
+                c["v"] = jnp.roll(v[:, -cache_len:], s % cache_len,
+                                  axis=1).astype(c["v"].dtype)
+            if enc_out is not None and "cross" in p:
+                hc = rms_norm(x, p["ln_cross"], cfg.norm_eps)
+                x = x + attention.cross_attention(p["cross"], hc, enc_out, cfg)
+                ck = attention._split_heads(dense(enc_out, p["cross"]["wk"]),
+                                            cfg.num_kv_heads, cfg.hd)
+                cv = attention._split_heads(dense(enc_out, p["cross"]["wv"]),
+                                            cfg.num_kv_heads, cfg.hd)
+                c["cross_k"] = ck.astype(c["cross_k"].dtype)
+                c["cross_v"] = cv.astype(c["cross_v"].dtype)
+        elif kind == "ssm":
+            y, nc = ssm_lib.ssd_forward(p["ssm"], h, cfg, return_state=True)
+            return x + y, jax.tree.map(
+                lambda old, new: new.astype(old.dtype), c, nc)
+        elif kind == "rglru":
+            y, nc = rglru_lib.rglru_forward(p["rec"], h, cfg, return_state=True)
+            x = x + y
+            c = jax.tree.map(lambda old, new: new.astype(old.dtype), c, nc)
+        h2 = rms_norm(x, p["ln2"], cfg.norm_eps)
+        if kind == "moe":
+            y, _ = mlp_lib.moe(p["moe"], h2, cfg)
+            x = x + y
+        else:
+            x = x + mlp_lib.mlp(p["mlp"], h2, cfg.bf16_partials)
+        return x, c
+
+    for (name, kind, count, cross) in stacks:
+        if name == "enc_blocks":
+            continue
+
+        def body(x, pc, kind=kind):
+            p, c = pc
+            return prefill_block(p, c, x, kind)
+
+        x, cache[name] = _scan(body, x, (params[name], cache[name]),
+                                cfg.unroll_layers)
+    for (name, kind, count, cross) in tail:
+        x, cache[name] = prefill_block(params[name], cache[name], x, kind)
+    return _logits(params, x[:, -1:], cfg)[:, 0], cache

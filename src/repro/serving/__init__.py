@@ -1,0 +1,3 @@
+from repro.serving.serve_step import make_decode_step, make_prefill, init_serving_cache
+
+__all__ = ["make_decode_step", "make_prefill", "init_serving_cache"]

@@ -1,0 +1,68 @@
+"""Serving steps: batched prefill and single-token decode over a KV cache.
+
+``decode_32k`` / ``long_500k`` dry-run shapes lower exactly these functions:
+one new token per request against a cache of the assigned sequence length.
+Greedy and temperature sampling are provided; the decode loop (examples/
+serve driver) scans ``decode_step``.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import transformer
+from repro.models.common import ModelConfig
+
+
+def init_serving_cache(cfg: ModelConfig, batch: int, cache_len: int):
+    return transformer.init_cache(cfg, batch, cache_len)
+
+
+def make_prefill(cfg: ModelConfig, cache_len: int | None = None):
+    def prefill(params, batch: dict):
+        return transformer.prefill(params, batch, cfg, cache_len=cache_len)
+    return prefill
+
+
+def make_decode_step(cfg: ModelConfig, temperature: float = 0.0):
+    """Returns step(params, batch, cache) -> (next_token (B,), logits, cache).
+
+    batch: {tokens (B, 1), pos (B,)[, positions3 (3, B, 1)]}.
+    """
+
+    def step(params, batch: dict, cache, key=None):
+        logits, cache = transformer.decode_step(
+            params, batch["tokens"], batch["pos"], cache, cfg,
+            positions3=batch.get("positions3"))
+        if temperature > 0.0 and key is not None:
+            nxt = jax.random.categorical(key, logits / temperature, axis=-1)
+        else:
+            nxt = jnp.argmax(logits, axis=-1)
+        return nxt.astype(jnp.int32), logits, cache
+
+    return step
+
+
+def generate(params, cfg: ModelConfig, prompt_tokens, max_new: int,
+             cache_len: int, key, temperature: float = 0.0,
+             extra_batch: dict | None = None):
+    """Greedy/temperature generation: prefill + scan of decode steps."""
+    b, s = prompt_tokens.shape
+    batch = {"tokens": prompt_tokens}
+    if extra_batch:
+        batch.update(extra_batch)
+    last_logits, cache = transformer.prefill(params, batch, cfg,
+                                             cache_len=cache_len)
+    first = jnp.argmax(last_logits, axis=-1).astype(jnp.int32)
+    step = make_decode_step(cfg, temperature)
+
+    def body(carry, k):
+        tok, pos, cache = carry
+        nxt, _, cache = step(params, {"tokens": tok[:, None], "pos": pos},
+                             cache, k)
+        return (nxt, pos + 1, cache), nxt
+
+    pos0 = jnp.full((b,), s, jnp.int32)
+    (_, _, cache), toks = jax.lax.scan(
+        body, (first, pos0, cache), jax.random.split(key, max_new - 1))
+    return jnp.concatenate([first[:, None], toks.T], axis=1)

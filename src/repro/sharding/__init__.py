@@ -1,0 +1,4 @@
+from repro.sharding.rules import (batch_specs, cache_specs, param_specs,
+                                  train_state_specs)
+
+__all__ = ["param_specs", "batch_specs", "cache_specs", "train_state_specs"]

@@ -1,0 +1,180 @@
+"""Logical-axis -> PartitionSpec rules for the production meshes.
+
+Megatron-style tensor parallelism over the ``model`` axis, batch parallelism
+over ``data`` (and ``pod``): column-parallel in-projections, row-parallel
+out-projections, expert-parallel MoE weights, vocab-sharded embeddings.
+Rules are name-based on the last dims of each leaf; leading (layer-stack)
+dims are padded with None, so the same table covers scanned stacks and tail
+blocks. Divisibility is checked against the mesh — a dim that does not divide
+falls back to replication (never an invalid sharding).
+"""
+from __future__ import annotations
+
+import jax
+from jax.sharding import PartitionSpec as P
+
+# rule: leaf-name -> spec for its trailing dims (None entries replicate)
+_PARAM_RULES = {
+    # embeddings / heads
+    "embed": ("model", None),          # (V, D) vocab-sharded
+    "unembed": (None, "model"),        # (D, V)
+    "pos_embed": (None, None),
+    "enc_pos_embed": (None, None),
+    # attention
+    "wq": (None, "model"),
+    "wk": (None, "model"),
+    "wv": (None, "model"),
+    "wo": ("model", None),
+    # mlp
+    "wg": (None, "model"),
+    "wu": (None, "model"),
+    "wd": ("model", None),
+    # moe (expert-parallel; per-leaf 3D)
+    "router": (None, None),
+    # ssm
+    "w_in": (None, "model"),
+    "conv_w": (None, "model"),
+    "conv_b": ("model",),
+    "a_log": (None,),
+    "dt_bias": (None,),
+    "d_skip": (None,),
+    "norm_scale": ("model",),
+    "w_out": ("model", None),
+    # rglru
+    "w_x": (None, "model"),
+    "w_gate": (None, "model"),
+    "w_a": (None, "model"),
+    "b_a": ("model",),
+    "w_i": (None, "model"),
+    "b_i": ("model",),
+    "lam": ("model",),
+}
+
+_MOE_EXPERT_LEAVES = {"wg", "wu", "wd"}  # 3D (E, ., .) under a "moe" subtree
+
+
+def _divides(total: int, mesh, axes) -> bool:
+    if axes is None:
+        return True
+    if isinstance(axes, str):
+        axes = (axes,)
+    size = 1
+    for a in axes:
+        size *= mesh.shape[a]
+    return total % size == 0
+
+
+def _spec_for(path, leaf, mesh, model_axis):
+    names = [p.key for p in path if hasattr(p, "key")]
+    name = names[-1] if names else ""
+    in_moe = "moe" in names and "shared" not in names
+    shape = leaf.shape
+    if in_moe and name in _MOE_EXPERT_LEAVES and len(shape) >= 3:
+        # (..., E, d_in, d_out): expert-parallel on E
+        rule = (model_axis, None, None)
+    elif name in _PARAM_RULES:
+        rule = tuple(model_axis if r == "model" else r for r in _PARAM_RULES[name])
+    else:
+        rule = ()
+    # pad with leading None for layer-stack dims
+    pad = len(shape) - len(rule)
+    if pad < 0:
+        rule = rule[-len(shape):] if len(shape) else ()
+        pad = 0
+    full = (None,) * pad + rule
+    # divisibility fallback
+    full = tuple(
+        ax if (ax is None or _divides(shape[i], mesh, ax)) else None
+        for i, ax in enumerate(full)
+    )
+    return P(*full)
+
+
+def param_specs(params, mesh, model_axis: str = "model"):
+    """Tree of PartitionSpec matching ``params`` (works on abstract trees)."""
+    return jax.tree_util.tree_map_with_path(
+        lambda path, leaf: _spec_for(path, leaf, mesh, model_axis), params)
+
+
+def train_state_specs(state_abs, mesh, model_axis: str = "model"):
+    """TrainState specs: params and both Adam moments share param specs."""
+    from repro.training.train_step import TrainState
+    p_specs = param_specs(state_abs.params, mesh, model_axis)
+    mu = param_specs(state_abs.opt.mu, mesh, model_axis)
+    nu = param_specs(state_abs.opt.nu, mesh, model_axis)
+    probe = None
+    if state_abs.probe is not None:
+        probe = jax.tree.map(lambda _: P(), state_abs.probe)
+    return TrainState(
+        params=p_specs,
+        opt=type(state_abs.opt)(mu=mu, nu=nu, step=P()),
+        step=P(),
+        probe=probe,
+    )
+
+
+def batch_specs(batch_abs: dict, mesh, *, data_axes=("data",)):
+    """Input batch specs: leading batch dim over the data axes (replicated if
+    it does not divide); positions3 has batch second."""
+    dp = tuple(a for a in data_axes if a in mesh.shape)
+    dp_spec = dp if len(dp) > 1 else (dp[0] if dp else None)
+
+    def one(path, leaf):
+        names = [p.key for p in path if hasattr(p, "key")]
+        name = names[-1] if names else ""
+        if name == "positions3":
+            if _divides(leaf.shape[1], mesh, dp_spec):
+                return P(None, dp_spec)
+            return P()
+        if leaf.ndim >= 1 and _divides(leaf.shape[0], mesh, dp_spec):
+            return P(dp_spec)
+        return P()
+
+    return jax.tree_util.tree_map_with_path(one, batch_abs)
+
+
+def cache_specs(cache_abs, mesh, *, data_axes=("data",), model_axis="model"):
+    """KV/recurrent cache specs.
+
+    Per-leaf preference order (first that divides): batch over data axes,
+    then one more axis over ``model`` — heads if divisible, else the
+    sequence/state axis. Leaves that fit nothing replicate.
+    """
+    dp = tuple(a for a in data_axes if a in mesh.shape)
+    dp_spec = dp if len(dp) > 1 else (dp[0] if dp else None)
+
+    # unstacked (tail-block) cache ranks per leaf kind
+    tail_ndim = {"k": 4, "v": 4, "cross_k": 4, "cross_v": 4,
+                 "conv": 3, "state": 4, "h": 2}
+
+    def one(path, leaf):
+        names = [p.key for p in path if hasattr(p, "key")]
+        name = names[-1] if names else ""
+        shape = leaf.shape
+        spec = [None] * len(shape)
+        # layer-stacked caches carry a leading L dim over the tail rank
+        bdim = 1 if (name in tail_ndim and len(shape) > tail_ndim[name]) else 0
+        if len(shape) > bdim and _divides(shape[bdim], mesh, dp_spec):
+            spec[bdim] = dp_spec
+        if name in ("k", "v", "cross_k", "cross_v"):
+            # (L, B, S, Hkv, hd) or (B, S, Hkv, hd)
+            hdim, sdim = len(shape) - 2, len(shape) - 3
+            if _divides(shape[hdim], mesh, model_axis):
+                spec[hdim] = model_axis
+            elif _divides(shape[sdim], mesh, model_axis):
+                spec[sdim] = model_axis
+        elif name == "conv":
+            ddim = len(shape) - 1
+            if _divides(shape[ddim], mesh, model_axis):
+                spec[ddim] = model_axis
+        elif name == "state":
+            hdim = len(shape) - 3
+            if _divides(shape[hdim], mesh, model_axis):
+                spec[hdim] = model_axis
+        elif name == "h":
+            wdim = len(shape) - 1
+            if _divides(shape[wdim], mesh, model_axis):
+                spec[wdim] = model_axis
+        return P(*spec)
+
+    return jax.tree_util.tree_map_with_path(one, cache_abs)

@@ -1,0 +1,5 @@
+from repro.training.adamw import AdamWConfig, adamw_init, adamw_update
+from repro.training.train_step import TrainState, make_train_step, init_train_state
+
+__all__ = ["AdamWConfig", "adamw_init", "adamw_update",
+           "TrainState", "make_train_step", "init_train_state"]

@@ -1,0 +1,57 @@
+"""Checkpointing: msgpack-serialised pytrees with dtype/shape manifest.
+
+No orbax in this container; this is a compact, dependency-light format:
+a manifest (tree structure + dtypes + shapes) and raw little-endian buffers.
+Works for TrainState, AFMState, or any pytree of arrays/scalars.
+"""
+from __future__ import annotations
+
+import os
+
+import jax
+import jax.numpy as jnp
+import msgpack
+import numpy as np
+
+
+def _flatten(tree):
+    leaves, treedef = jax.tree.flatten(tree)
+    return leaves, treedef
+
+
+def save(path: str, tree) -> None:
+    leaves, treedef = _flatten(tree)
+    payload = {
+        "treedef": str(treedef),
+        "leaves": [
+            {
+                "dtype": str(np.asarray(leaf).dtype),
+                "shape": list(np.asarray(leaf).shape),
+                "data": np.ascontiguousarray(
+                    np.asarray(leaf).astype(np.asarray(leaf).dtype)).tobytes(),
+            }
+            for leaf in leaves
+        ],
+    }
+    tmp = path + ".tmp"
+    os.makedirs(os.path.dirname(os.path.abspath(path)), exist_ok=True)
+    with open(tmp, "wb") as f:
+        f.write(msgpack.packb(payload, use_bin_type=True))
+    os.replace(tmp, path)
+
+
+def restore(path: str, like):
+    """Restore into the structure of ``like`` (shapes/dtypes must match)."""
+    with open(path, "rb") as f:
+        payload = msgpack.unpackb(f.read(), raw=False)
+    leaves, treedef = _flatten(like)
+    assert len(leaves) == len(payload["leaves"]), "structure mismatch"
+    out = []
+    for ref, rec in zip(leaves, payload["leaves"]):
+        arr = np.frombuffer(rec["data"], dtype=np.dtype(rec["dtype"]))
+        arr = arr.reshape(rec["shape"])
+        ref_arr = np.asarray(ref)
+        assert list(ref_arr.shape) == rec["shape"], (
+            f"shape mismatch {ref_arr.shape} vs {rec['shape']}")
+        out.append(jnp.asarray(arr).astype(ref_arr.dtype))
+    return jax.tree.unflatten(treedef, out)

@@ -1,0 +1,71 @@
+"""Train step: LM cross-entropy + MoE aux loss + AdamW, optionally with an
+AFMProbe (the paper's topographic map tapping pooled hidden states).
+
+The step is a pure function built once per (model config, optimizer config)
+and jitted/pjitted by the caller with the sharding rules from
+``repro.sharding``.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import transformer
+from repro.models.common import ModelConfig, softmax_cross_entropy
+from repro.training.adamw import AdamWConfig, AdamWState, adamw_init, adamw_update
+
+
+class TrainState(NamedTuple):
+    params: dict
+    opt: AdamWState
+    step: jnp.ndarray
+    probe: tuple | None = None     # ProbeState when the AFM probe is attached
+
+
+def init_train_state(key, cfg: ModelConfig, probe_cfg=None) -> TrainState:
+    params = transformer.init_params(key, cfg)
+    probe = None
+    if probe_cfg is not None:
+        from repro.core import probe as probe_lib
+        probe = probe_lib.init(jax.random.fold_in(key, 1), probe_cfg)
+    return TrainState(params=params, opt=adamw_init(params),
+                      step=jnp.zeros((), jnp.int32), probe=probe)
+
+
+def make_train_step(cfg: ModelConfig, opt_cfg: AdamWConfig, probe_cfg=None):
+    """Returns step(state, batch, key) -> (state, metrics)."""
+
+    def loss_fn(params, batch):
+        labels = batch["labels"]
+        if cfg.chunked_ce:
+            hidden, aux = transformer.forward_hidden(params, batch, cfg)
+            ce = transformer.chunked_ce_loss(params, hidden, labels, cfg)
+        else:
+            out = transformer.forward_train(params, batch, cfg,
+                                            return_hidden=probe_cfg is not None)
+            if probe_cfg is not None:
+                logits, aux, hidden = out
+            else:
+                (logits, aux), hidden = out, None
+            ce = softmax_cross_entropy(logits[:, :-1], labels[:, 1:])
+        loss = ce + cfg.router_aux_coef * aux
+        return loss, (ce, aux, hidden if probe_cfg is not None else None)
+
+    def step(state: TrainState, batch: dict, key) -> tuple[TrainState, dict]:
+        (loss, (ce, aux, hidden)), grads = jax.value_and_grad(
+            loss_fn, has_aux=True)(state.params, batch)
+        params, opt, m = adamw_update(state.params, grads, state.opt, opt_cfg)
+        metrics = {"loss": loss, "ce": ce, "moe_aux": aux, **m}
+        probe = state.probe
+        if probe is not None and probe_cfg is not None:
+            from repro.core import probe as probe_lib
+            # Tap: final hidden states, mean-pooled per sequence.
+            vecs = probe_lib.pool_hidden(
+                jax.lax.stop_gradient(hidden).astype(jnp.float32))
+            probe, paux = probe_lib.update(probe, vecs, key, probe_cfg)
+            metrics["probe_cascade"] = paux.cascade_size
+        return TrainState(params, opt, state.step + 1, probe), metrics
+
+    return step

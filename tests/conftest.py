@@ -1,0 +1,11 @@
+import jax
+import pytest
+
+# Tests run on the single real CPU device (the dry-run, and only the dry-run,
+# forces 512 placeholder devices in its own process).
+jax.config.update("jax_platform_name", "cpu")
+
+
+@pytest.fixture(scope="session")
+def rng():
+    return jax.random.PRNGKey(0)

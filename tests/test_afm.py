@@ -1,0 +1,54 @@
+"""AFM end-to-end invariants on synthetic data."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import afm, metrics, som
+from repro.data import make_dataset
+
+
+def test_training_improves_quality(rng):
+    xtr, ytr, xte, yte = make_dataset("satimage", train_size=1500, test_size=400)
+    cfg = afm.AFMConfig(side=8, dim=36, i_max=2400, batch=8, e_factor=1.0)
+    state = afm.init(rng, cfg, xtr)
+    q_before = float(metrics.quantization_error(state.w, xte))
+    state2, aux = jax.jit(lambda s, k: afm.train(s, xtr, k, cfg))(state, rng)
+    q_after = float(metrics.quantization_error(state2.w, xte))
+    t_after = float(metrics.topological_error(state2.w, xte, cfg.side))
+    assert q_after < 0.7 * q_before
+    assert t_after < 0.9
+    assert int(aux.cascade_size.max()) >= 1          # cascading actually occurs
+    assert not np.any(np.isnan(np.asarray(state2.w)))
+
+
+def test_counters_stay_below_theta_after_step(rng):
+    """No unit may end a step at/above threshold (all firing relaxed)."""
+    xtr, _, _, _ = make_dataset("satimage", train_size=500, test_size=10)
+    cfg = afm.AFMConfig(side=6, dim=36, i_max=400, batch=4, e_factor=0.5)
+    state = afm.init(rng, cfg, xtr)
+    state2, _ = jax.jit(lambda s, k: afm.train(s, xtr, k, cfg, num_steps=50))(state, rng)
+    assert int(jnp.max(state2.c)) < cfg.theta
+
+
+def test_batch1_is_faithful_per_sample_step(rng):
+    """train_step (B=1 semantics) == train_step_batch with one sample."""
+    cfg = afm.AFMConfig(side=6, dim=12, i_max=100)
+    state = afm.init(rng, cfg)
+    s = jax.random.normal(jax.random.fold_in(rng, 9), (cfg.dim,))
+    out1, aux1 = afm.train_step(state, s, rng, cfg)
+    out2, aux2 = afm.train_step_batch(state, s[None], rng, cfg)
+    np.testing.assert_allclose(np.asarray(out1.w), np.asarray(out2.w), rtol=1e-6)
+    assert int(aux1.gmu[0]) == int(aux2.gmu[0])
+
+
+def test_som_baseline_improves(rng):
+    xtr, _, xte, _ = make_dataset("satimage", train_size=1000, test_size=300)
+    cfg = som.SOMConfig(side=8, dim=36, i_max=2000, batch=8)
+    state = som.init(rng, cfg, xtr)
+    from repro.core import metrics as m
+    q0 = float(m.quantization_error(state.w, xte))
+    state2 = jax.jit(lambda s, k: som.train(s, xtr, k, cfg))(state, rng)
+    q1 = float(m.quantization_error(state2.w, xte))
+    assert q1 < 0.7 * q0

@@ -1,0 +1,79 @@
+"""Cascade dynamics: wave-parallel vs the paper's sequential recursion."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import cascade as cas
+
+
+def test_abelian_counters_match_sequential():
+    """At p=1 (BTW regime) the wave-parallel cascade reaches the sequential
+    recursion's counter fixed point and cascade size (abelian property)."""
+    side, theta = 12, 4
+    key = jax.random.PRNGKey(3)
+    c0 = jax.random.randint(key, (side, side), 0, theta)  # subcritical
+    # overload one site to trigger
+    c0 = c0.at[5, 5].set(theta)
+    w0 = jnp.zeros((side, side, 2))
+    fired0 = c0 >= theta
+    out = cas.cascade(w0, c0, fired0, l_c=0.0, p=1.0, theta=theta, key=key)
+    w_ref, c_ref, size_ref = cas.sequential_cascade_reference(
+        w0, c0, [(5, 5)], l_c=0.0, p=1.0, theta=theta, seed=0)
+    assert int(out.size) == size_ref
+    np.testing.assert_array_equal(np.asarray(out.c), c_ref)
+
+
+def test_dissipative_smaller_cascades():
+    """Lower p (more dissipation) must produce stochastically smaller
+    cascades — the paper's chi ~ (1-p)^-1 scaling, directionally."""
+    side, theta = 16, 4
+    key = jax.random.PRNGKey(0)
+    c0 = jnp.full((side, side), theta - 1, jnp.int32)
+    c0 = c0.at[8, 8].set(theta)
+    fired0 = c0 >= theta
+    w0 = jnp.zeros((side, side, 1))
+    sizes = {}
+    for p in (1.0, 0.5, 0.1):
+        tot = 0
+        for s in range(8):
+            out = cas.cascade(w0, c0, fired0, l_c=0.0, p=p, theta=theta,
+                              key=jax.random.PRNGKey(s))
+            tot += int(out.size)
+        sizes[p] = tot
+    assert sizes[1.0] >= sizes[0.5] >= sizes[0.1]
+
+
+def test_weight_attraction():
+    """A firing unit attracts its near neighbours in sample space (Eq. 4)."""
+    side, theta = 5, 4
+    c0 = jnp.zeros((side, side), jnp.int32).at[2, 2].set(theta)
+    w0 = jnp.zeros((side, side, 3)).at[2, 2].set(jnp.ones(3))
+    out = cas.cascade(w0, c0, c0 >= theta, l_c=0.5, p=0.0, theta=theta,
+                      key=jax.random.PRNGKey(0))
+    w = np.asarray(out.w)
+    for (r, c) in [(1, 2), (3, 2), (2, 1), (2, 3)]:
+        np.testing.assert_allclose(w[r, c], 0.5, rtol=1e-6)
+    np.testing.assert_allclose(w[0, 0], 0.0)        # non-neighbour untouched
+    np.testing.assert_allclose(w[2, 2], 1.0)        # firing unit keeps w
+
+
+def test_drive_and_cascade_counts():
+    """Drive with p=1 increments the GMU counter; firing resets it."""
+    side, theta = 4, 4
+    c0 = jnp.full((side, side), theta - 1, jnp.int32)
+    w0 = jnp.zeros((side, side, 1))
+    gmu = jnp.zeros((side, side), jnp.int32).at[1, 1].set(1)
+    out = cas.drive_and_cascade(w0, c0, gmu, l_c=0.1, p=1.0, theta=theta,
+                                key=jax.random.PRNGKey(0))
+    assert int(out.size) >= 1                        # the GMU fired
+    assert int(out.c[1, 1]) < theta
+
+
+def test_max_waves_bound():
+    side, theta = 6, 4
+    c0 = jnp.full((side, side), theta, jnp.int32)
+    out = cas.cascade(jnp.zeros((side, side, 1)), c0, c0 >= theta,
+                      l_c=0.0, p=1.0, theta=theta, key=jax.random.PRNGKey(0),
+                      max_waves=3)
+    assert int(out.waves) <= 3

@@ -1,0 +1,60 @@
+"""Sharded AFM (shard_map) — runs in a subprocess with 8 virtual devices so
+the main test process keeps the single real device."""
+import json
+import os
+import subprocess
+import sys
+
+SCRIPT = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+import json
+import jax, jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding
+from repro.core import afm, distributed, metrics
+from repro.data import make_dataset
+
+mesh = jax.make_mesh((2, 4), ("data", "model"),
+                     axis_types=(jax.sharding.AxisType.Auto,) * 2)
+cfg = afm.AFMConfig(side=8, dim=36, i_max=1600, batch=8, e_factor=1.0)
+xtr, ytr, xte, yte = make_dataset("satimage", train_size=800, test_size=200)
+key = jax.random.PRNGKey(0)
+state = afm.init(key, cfg, xtr)
+q0 = float(metrics.quantization_error(state.w, xte))
+sstate = distributed.shard_state_for_mesh(state, cfg, mesh)
+step_fn, specs = distributed.make_sharded_train_step(cfg, mesh)
+sstate = jax.device_put(sstate, jax.tree.map(lambda s: NamedSharding(mesh, s), specs))
+
+@jax.jit
+def many(state, key):
+    def body(s, k):
+        ks, kd = jax.random.split(k)
+        idx = jax.random.randint(kd, (cfg.batch,), 0, xtr.shape[0])
+        return step_fn(s, xtr[idx], ks)
+    return jax.lax.scan(body, state, jax.random.split(key, 200))
+
+with jax.set_mesh(mesh):
+    out, aux = many(sstate, key)
+w = jnp.asarray(np.array(out.w)).reshape(cfg.n_units, cfg.dim)
+q1 = float(metrics.quantization_error(w, xte))
+print(json.dumps({
+    "q0": q0, "q1": q1,
+    "cascades": int(np.array(aux.cascade_size).sum()),
+    "nan": bool(np.any(np.isnan(np.array(out.w)))),
+    "counters_ok": bool(int(np.array(out.c).max()) < cfg.theta),
+}))
+"""
+
+
+def test_sharded_afm_trains():
+    env = dict(os.environ,
+               PYTHONPATH=os.path.join(os.path.dirname(__file__), "..", "src"))
+    out = subprocess.run([sys.executable, "-c", SCRIPT], capture_output=True,
+                         text=True, env=env, timeout=500)
+    assert out.returncode == 0, out.stderr[-2000:]
+    res = json.loads(out.stdout.strip().splitlines()[-1])
+    assert not res["nan"]
+    assert res["q1"] < 0.8 * res["q0"], res
+    assert res["cascades"] >= 1
+    assert res["counters_ok"]

@@ -1,0 +1,49 @@
+"""Dry-run internals that don't need 512 devices: the collective parser and
+the analytic param counter (validated against real param trees)."""
+import jax
+import jax.numpy as jnp
+
+from repro import configs
+from repro.launch.dryrun import parse_collectives, param_count
+from repro.models import transformer
+
+HLO_SAMPLE = """
+  %ar = f32[256,1024] all-reduce(%x), replica_groups={}
+  %ag.1 = bf16[8,512]{1,0} all-gather(%y), dimensions={0}
+  %rs = f32[16,16] reduce-scatter(%z), dimensions={0}
+  %cp = bf16[4,4]{1,0:T(8)} collective-permute(%w)
+  %a2a-start = f32[32] all-to-all-start(%v)
+  %dot.5 = f32[128,128] dot(%a, %b)
+"""
+
+
+def test_parse_collectives_kinds_and_bytes():
+    out = parse_collectives(HLO_SAMPLE)
+    k = out["by_kind"]
+    assert k["all-reduce"]["result_bytes"] == 256 * 1024 * 4
+    assert k["all-gather"]["result_bytes"] == 8 * 512 * 2
+    assert k["reduce-scatter"]["result_bytes"] == 16 * 16 * 4
+    assert k["collective-permute"]["result_bytes"] == 4 * 4 * 2
+    assert k["all-to-all"]["result_bytes"] == 32 * 4
+    assert "dot" not in k
+    # wire model: AR counts 2x
+    expected = (2 * 256 * 1024 * 4 + 8 * 512 * 2 + 16 * 16 * 4
+                + 4 * 4 * 2 + 32 * 4)
+    assert out["wire_bytes"] == expected
+
+
+def test_param_count_matches_real_tree():
+    key = jax.ShapeDtypeStruct((2,), jnp.uint32)
+    for arch in ["smollm-360m", "llama3.2-1b", "granite-moe-1b-a400m",
+                 "mamba2-1.3b", "recurrentgemma-2b"]:
+        cfg = configs.get(arch)
+        tree = jax.eval_shape(lambda k, c=cfg: transformer.init_params(k, c), key)
+        real = sum(x.size for x in jax.tree.leaves(tree))
+        approx = param_count(cfg)
+        # analytic count ignores norm scales / small biases: within 2%
+        assert abs(real - approx) / real < 0.02, (arch, real, approx)
+
+
+def test_active_params_less_than_total_for_moe():
+    cfg = configs.get("deepseek-moe-16b")
+    assert param_count(cfg, active_only=True) < 0.35 * param_count(cfg)

@@ -1,0 +1,71 @@
+"""Per-kernel allclose vs ref.py oracles + hypothesis shape/dtype sweeps."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.kernels.bmu import ops as bmu_ops, ref as bmu_ref
+from repro.kernels.cascade import ops as cas_ops, ref as cas_ref
+from repro.kernels.swa import ops as swa_ops, ref as swa_ref
+
+
+@given(n=st.integers(3, 400), b=st.integers(1, 80), d=st.integers(1, 300),
+       dtype=st.sampled_from([jnp.float32, jnp.bfloat16]))
+@settings(max_examples=12, deadline=None)
+def test_bmu_matches_oracle(n, b, d, dtype):
+    key = jax.random.PRNGKey(n * 7919 + b * 31 + d)
+    kw, ks = jax.random.split(key)
+    w = jax.random.normal(kw, (n, d), jnp.float32).astype(dtype).astype(jnp.float32)
+    s = jax.random.normal(ks, (b, d), jnp.float32).astype(dtype).astype(jnp.float32)
+    i1, q1 = bmu_ops.bmu(w, s, interpret=True)
+    i2, q2 = bmu_ref.bmu_ref(w, s)
+    np.testing.assert_array_equal(np.asarray(i1), np.asarray(i2))
+    np.testing.assert_allclose(np.asarray(q1), np.asarray(q2), rtol=1e-3, atol=1e-3)
+
+
+@given(n=st.integers(4, 48), p=st.floats(0.0, 1.0), theta=st.integers(2, 6))
+@settings(max_examples=10, deadline=None)
+def test_cascade_wave_matches_oracle(n, p, theta):
+    key = jax.random.PRNGKey(int(n + theta * 101 + p * 997))
+    k1, k2, k3 = jax.random.split(key, 3)
+    c = jax.random.randint(k1, (n, n), 0, theta + 2)
+    fired = jax.random.uniform(k2, (n, n)) < 0.25
+    bern = jax.random.uniform(k3, (4, n, n)) < p
+    a = cas_ops.cascade_wave(c, fired, bern, theta, interpret=True)
+    b = cas_ref.cascade_wave_ref(c, fired, bern, theta)
+    np.testing.assert_array_equal(np.asarray(a[0]), np.asarray(b[0]))
+    np.testing.assert_array_equal(np.asarray(a[1]), np.asarray(b[1]))
+    np.testing.assert_array_equal(np.asarray(a[2]), np.asarray(b[2]))
+
+
+@pytest.mark.parametrize("b,h,hkv,hd,w,pos", [
+    (2, 8, 2, 64, 512, 100),
+    (1, 4, 1, 128, 1024, 70_000),
+    (3, 16, 8, 64, 256, 255),
+    (2, 4, 4, 128, 128, 4),
+])
+def test_swa_decode_matches_oracle(b, h, hkv, hd, w, pos):
+    key = jax.random.PRNGKey(b * h + w)
+    kq, kk, kv = jax.random.split(key, 3)
+    q = jax.random.normal(kq, (b, h, hd), jnp.float32)
+    k = jax.random.normal(kk, (b, w, hkv, hd), jnp.float32)
+    v = jax.random.normal(kv, (b, w, hkv, hd), jnp.float32)
+    posv = jnp.full((b,), pos, jnp.int32)
+    o1 = swa_ops.swa_decode(q, k, v, posv, interpret=True)
+    o2 = swa_ref.swa_decode_ref(q, k, v, posv, window=w)
+    np.testing.assert_allclose(np.asarray(o1), np.asarray(o2), rtol=2e-4, atol=2e-4)
+
+
+def test_swa_early_positions_mask():
+    """pos < window: only pos+1 slots are attendable."""
+    b, h, hkv, hd, w = 1, 2, 1, 64, 128
+    key = jax.random.PRNGKey(0)
+    kq, kk, kv = jax.random.split(key, 3)
+    q = jax.random.normal(kq, (b, h, hd))
+    k = jax.random.normal(kk, (b, w, hkv, hd))
+    v = jax.random.normal(kv, (b, w, hkv, hd))
+    pos = jnp.array([3], jnp.int32)
+    o1 = swa_ops.swa_decode(q, k, v, pos, interpret=True)
+    o2 = swa_ref.swa_decode_ref(q, k, v, pos, window=w)
+    np.testing.assert_allclose(np.asarray(o1), np.asarray(o2), rtol=2e-4, atol=2e-4)

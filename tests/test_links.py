@@ -1,0 +1,52 @@
+"""Link-construction invariants + the Kleinberg far-link distribution."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import links
+
+
+@given(side=st.integers(min_value=2, max_value=12))
+@settings(max_examples=10, deadline=None)
+def test_near_table_valid(side):
+    tbl = np.asarray(links.near_neighbor_table(side))
+    n = side * side
+    assert tbl.shape == (n, 4)
+    for j in range(n):
+        r, c = divmod(j, side)
+        expect = 4 - (r == 0) - (r == side - 1) - (c == 0) - (c == side - 1)
+        nbrs = tbl[j][tbl[j] >= 0]
+        assert len(nbrs) == expect
+        for k in nbrs:
+            rk, ck = divmod(int(k), side)
+            assert abs(rk - r) + abs(ck - c) == 1
+
+
+@pytest.mark.parametrize("sampler", ["categorical", "ring"])
+def test_far_links_distribution(sampler, rng):
+    """Empirical far-link frequencies follow P ∝ D^-1 (chi-square-ish)."""
+    side, phi = 9, 64
+    fn = (links.far_links_categorical if sampler == "categorical"
+          else links.far_links_ring)
+    tbl = np.asarray(fn(rng, side, phi))
+    n = side * side
+    assert tbl.shape == (n, phi)
+    assert np.all((tbl >= 0) & (tbl < n))
+    # no self-links (categorical excludes; ring has d >= 1)
+    assert not np.any(tbl == np.arange(n)[:, None])
+    # distance distribution for the centre unit ~ uniform over d (since ring
+    # size ~ 4d and P(unit) ~ 1/d)
+    j = (side // 2) * side + side // 2
+    d = np.asarray(links.manhattan_row(side, jnp.int32(j)))
+    counts = np.bincount(d[tbl[j]], minlength=side)
+    # mass at small d should not dominate: compare d=1 vs d=4 ring masses
+    mass_near = counts[1:3].sum()
+    mass_far = counts[3:7].sum()
+    assert mass_far >= mass_near * 0.3  # long-range links exist in force
+
+
+def test_far_links_dispatch(rng):
+    tbl = links.far_links(rng, 6, 5)
+    assert tbl.shape == (36, 5)

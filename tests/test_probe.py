@@ -1,0 +1,38 @@
+"""AFMProbe: the paper's map as a composable feature on activation streams."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import metrics, probe
+
+
+def test_probe_organizes_clustered_activations(rng):
+    cfg = probe.ProbeConfig(side=6, dim=16, i_max=2000, search="exact")
+    st = probe.init(rng, cfg)
+    # three activation clusters
+    centers = jax.random.normal(rng, (3, 16)) * 3.0
+    q_first = None
+    for i in range(60):
+        k = jax.random.fold_in(rng, i)
+        cls = jax.random.randint(k, (32,), 0, 3)
+        vecs = centers[cls] + 0.3 * jax.random.normal(k, (32, 16))
+        st, aux = probe.update(st, vecs, k, cfg)
+        if i == 0:
+            q_first = float(jnp.sqrt(aux.q2).mean())
+    q_last = float(jnp.sqrt(aux.q2).mean())
+    assert q_last < q_first
+    assert not np.any(np.isnan(np.asarray(st.afm.w)))
+
+
+def test_probe_heuristic_mode_runs(rng):
+    cfg = probe.ProbeConfig(side=4, dim=8, i_max=100, search="heuristic",
+                            e_factor=1.0)
+    st = probe.init(rng, cfg)
+    vecs = jax.random.normal(rng, (8, 8))
+    st, aux = probe.update(st, vecs, rng, cfg)
+    assert aux.gmu.shape == (8,)
+
+
+def test_pool_hidden():
+    h = jnp.ones((2, 5, 7))
+    assert probe.pool_hidden(h).shape == (2, 7)

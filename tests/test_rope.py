@@ -1,0 +1,53 @@
+"""RoPE / M-RoPE properties."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import rope
+
+
+def test_rope_preserves_norm():
+    key = jax.random.PRNGKey(0)
+    x = jax.random.normal(key, (2, 8, 4, 64))
+    pos = jnp.broadcast_to(jnp.arange(8)[None], (2, 8))
+    y = rope.apply_rope(x, pos, 10_000.0)
+    np.testing.assert_allclose(np.linalg.norm(np.asarray(x), axis=-1),
+                               np.linalg.norm(np.asarray(y), axis=-1),
+                               rtol=1e-5)
+
+
+def test_rope_relative_property():
+    """<q_m, k_n> depends only on (m - n)."""
+    key = jax.random.PRNGKey(1)
+    q = jax.random.normal(key, (1, 1, 1, 32))
+    k = jax.random.normal(jax.random.fold_in(key, 1), (1, 1, 1, 32))
+
+    def dot_at(m, n):
+        qm = rope.apply_rope(q, jnp.array([[m]]), 10_000.0)
+        kn = rope.apply_rope(k, jnp.array([[n]]), 10_000.0)
+        return float(jnp.sum(qm * kn))
+
+    np.testing.assert_allclose(dot_at(5, 3), dot_at(12, 10), rtol=1e-4)
+    np.testing.assert_allclose(dot_at(100, 90), dot_at(20, 10), rtol=1e-4)
+
+
+def test_mrope_text_degenerates_to_rope():
+    """Equal (t, h, w) coordinates == standard RoPE (arXiv:2409.12191)."""
+    key = jax.random.PRNGKey(2)
+    x = jax.random.normal(key, (2, 6, 4, 64))
+    pos = jnp.broadcast_to(jnp.arange(6)[None], (2, 6))
+    y1 = rope.apply_rope(x, pos, 10_000.0)
+    y2 = rope.apply_mrope(x, rope.text_positions3(pos), 10_000.0, (8, 12, 12))
+    np.testing.assert_allclose(np.asarray(y1), np.asarray(y2), rtol=1e-5,
+                               atol=1e-6)
+
+
+def test_mrope_distinct_coordinates_differ():
+    key = jax.random.PRNGKey(3)
+    x = jax.random.normal(key, (1, 4, 2, 64))
+    pos = jnp.broadcast_to(jnp.arange(4)[None], (1, 4))
+    p3 = rope.text_positions3(pos)
+    p3b = p3.at[1].add(7)   # different height coordinate
+    y1 = rope.apply_mrope(x, p3, 10_000.0, (8, 12, 12))
+    y2 = rope.apply_mrope(x, p3b, 10_000.0, (8, 12, 12))
+    assert float(jnp.abs(y1 - y2).max()) > 1e-3

@@ -1,0 +1,32 @@
+"""Sandpile statistics: the stat-mech backbone of the cascade parametrization."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import sandpile
+
+
+def test_sandpile_reaches_stationarity_and_conserves_bounds():
+    sizes = np.asarray(sandpile.run_chain(jax.random.PRNGKey(0), side=12,
+                                          steps=1200, p=1.0))
+    # BTW regime: cascades of many scales appear after loading
+    tail = sizes[600:]
+    assert tail.max() >= 10
+    assert (tail == 0).mean() < 0.95
+
+
+def test_characteristic_size_grows_with_p():
+    """chi ~ (1 - p)^-1: mean cascade size increases with p."""
+    means = []
+    for p in (0.5, 0.8, 0.95):
+        sizes = np.asarray(sandpile.run_chain(jax.random.PRNGKey(1), side=12,
+                                              steps=1000, p=p))
+        means.append(sizes[500:].mean())
+    assert means[0] <= means[1] <= means[2]
+
+
+def test_counters_below_theta_after_relaxation():
+    out = sandpile.topple(jnp.full((8, 8), 4, jnp.int32),
+                          jnp.ones((8, 8), bool), p=1.0, theta=4,
+                          key=jax.random.PRNGKey(0))
+    assert int(out.c.max()) < 4

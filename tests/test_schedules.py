@@ -1,0 +1,43 @@
+"""Eq. (5)/(6) schedule properties."""
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import schedules
+
+
+@given(co=st.floats(0.0, 1.0), cs=st.floats(0.05, 5.0),
+       frac=st.floats(0.0, 1.0))
+@settings(max_examples=60, deadline=None)
+def test_lc_bounds_eq5(co, cs, frac):
+    i_max = 1000
+    lc = float(schedules.cascade_learning_rate(int(frac * i_max), i_max, co, cs))
+    # mathematically in (0, 1); f32 may round the tails to exactly 0/1
+    assert 0.0 <= lc <= 1.0
+
+
+def test_lc_monotone_decreasing():
+    i_max = 1000
+    vals = [float(schedules.cascade_learning_rate(i, i_max, 0.5, 0.5))
+            for i in range(0, i_max, 50)]
+    assert all(a >= b for a, b in zip(vals, vals[1:]))
+    # c_o controls where l_c crosses 0.5
+    assert abs(float(schedules.cascade_learning_rate(500, 1000, 0.5, 0.5)) - 0.5) < 1e-6
+
+
+@given(n=st.integers(100, 10_000), cm=st.floats(0.01, 1.0),
+       cd=st.floats(1.0, 1e4), frac=st.floats(0.0, 0.999))
+@settings(max_examples=60, deadline=None)
+def test_p_bounds_eq6(n, cm, cd, frac):
+    i_max = 10_000
+    p = float(schedules.cascade_probability(int(frac * i_max), i_max, n, cm, cd))
+    assert 0.0 <= p < 1.0
+    # early-training value approaches 1 - 1/sqrt(cm N)
+    p0 = float(schedules.cascade_probability(0, i_max, n, cm, cd))
+    assert abs(p0 - (1.0 - 1.0 / np.sqrt(cm * n))) < 1e-5
+
+
+def test_p_decreasing_in_time():
+    vals = [float(schedules.cascade_probability(i, 1000, 900, 0.1, 100.0))
+            for i in range(0, 1000, 100)]
+    assert all(a >= b for a, b in zip(vals, vals[1:]))

@@ -1,0 +1,54 @@
+"""Heuristic search (§2.1): greedy descent + accuracy-vs-e behaviour."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import afm, links, metrics
+from repro.core import search as search_lib
+
+
+def _setup(rng, side=8, dim=8):
+    cfg = afm.AFMConfig(side=side, dim=dim, phi=10, i_max=10)
+    state = afm.init(rng, cfg)
+    return cfg, state
+
+
+def test_exact_bmu_matches_bruteforce(rng):
+    cfg, state = _setup(rng)
+    s = jax.random.normal(jax.random.fold_in(rng, 1), (17, cfg.dim))
+    idx, q2 = search_lib.exact_bmu(state.w, s)
+    d = np.linalg.norm(np.asarray(s)[:, None, :] - np.asarray(state.w)[None], axis=-1)
+    np.testing.assert_array_equal(np.asarray(idx), d.argmin(1))
+    np.testing.assert_allclose(np.asarray(q2), d.min(1) ** 2, rtol=1e-4, atol=1e-4)
+
+
+def test_greedy_never_worsens(rng):
+    cfg, state = _setup(rng)
+    s = jax.random.normal(jax.random.fold_in(rng, 2), (9, cfg.dim))
+    j0, q0 = search_lib.exploration_phase(state.w, state.far, s, rng, e=5)
+    j, q, steps = search_lib.greedy_phase(state.w, state.near, state.far, s, j0, q0)
+    assert np.all(np.asarray(q) <= np.asarray(q0) + 1e-6)
+    assert np.all(np.asarray(steps) >= 0)
+
+
+def test_search_error_decreases_with_e(rng):
+    """Fig. 2: increasing exploration iterations e reduces search error F."""
+    cfg, state = _setup(rng, side=10, dim=6)
+    s = jax.random.normal(jax.random.fold_in(rng, 3), (128, cfg.dim))
+    errs = []
+    for e in (1, 20, 300):
+        f, _ = metrics.search_error(state.w, state.near, state.far, s,
+                                    jax.random.fold_in(rng, e), e)
+        errs.append(float(f))
+    assert errs[0] >= errs[-1]
+    # e=3N regime is highly accurate; on an UNTRAINED (disordered) map the
+    # greedy phase helps less than at end-of-training, so the bound is loose
+    # here (the trained-map >99% claim is validated in benchmarks/fig2).
+    assert errs[-1] <= 0.12 + 1e-9
+
+
+def test_search_result_valid_indices(rng):
+    cfg, state = _setup(rng)
+    s = jax.random.normal(jax.random.fold_in(rng, 4), (5, cfg.dim))
+    res = search_lib.heuristic_search(state.w, state.near, state.far, s, rng, e=10)
+    assert np.all((np.asarray(res.gmu) >= 0) & (np.asarray(res.gmu) < cfg.n_units))

@@ -1,0 +1,61 @@
+"""End-to-end behaviour tests for the paper's system: train an AFM on a
+Table-1-shaped dataset, classify, compare with the SOM baseline, and check
+the cascade-driven mechanics' global invariants (the paper's core claims at
+reduced scale)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import afm, classifier, metrics, som
+from repro.data import make_dataset
+
+
+def test_afm_end_to_end_vs_som(rng):
+    """AFM performs comparably to a same-budget SOM (paper Table 2 claim,
+    reduced scale, identical synthetic data)."""
+    xtr, ytr, xte, yte = make_dataset("satimage", train_size=2000, test_size=500)
+    side = 8
+    acfg = afm.AFMConfig(side=side, dim=36, i_max=4000, batch=8, e_factor=1.0)
+    astate = afm.init(rng, acfg, xtr)
+    astate, aux = jax.jit(lambda s, k: afm.train(s, xtr, k, acfg))(astate, rng)
+
+    scfg = som.SOMConfig(side=side, dim=36, i_max=4000, batch=8)
+    sstate = som.init(rng, scfg, xtr)
+    sstate = jax.jit(lambda s, k: som.train(s, xtr, k, scfg))(sstate, rng)
+
+    def accuracy(w):
+        labels = classifier.label_units(w, xtr, ytr)
+        pred = classifier.predict(w, labels, xte)
+        return float((pred == yte).mean())
+
+    acc_afm = accuracy(astate.w)
+    acc_som = accuracy(sstate.w)
+    # comparable: AFM within 15 accuracy points of SOM, both well above chance
+    assert acc_afm > 1 / 6 * 1.5
+    assert acc_afm > acc_som - 0.15, (acc_afm, acc_som)
+
+
+def test_cascade_sizes_shrink_over_training(rng):
+    """Eq. (6): characteristic cascade size decays as training progresses."""
+    xtr, _, _, _ = make_dataset("satimage", train_size=1000, test_size=10)
+    cfg = afm.AFMConfig(side=8, dim=36, i_max=3200, batch=8, e_factor=0.5,
+                        c_m=0.5, c_d=100.0)
+    state = afm.init(rng, cfg, xtr)
+    _, aux = jax.jit(lambda s, k: afm.train(s, xtr, k, cfg))(state, rng)
+    sizes = np.asarray(aux.cascade_size, dtype=np.float64)
+    n = len(sizes)
+    early = sizes[: n // 4].mean()
+    late = sizes[-n // 4:].mean()
+    assert late <= early + 1e-9, (early, late)
+
+
+def test_number_of_weight_updates_per_sample_order(rng):
+    """Table 3: a handful of weight updates per sample under the default
+    configuration (not O(N))."""
+    xtr, _, _, _ = make_dataset("letters", train_size=1000, test_size=10)
+    cfg = afm.AFMConfig(side=8, dim=16, i_max=3200, batch=8, e_factor=0.5)
+    state = afm.init(rng, cfg, xtr)
+    _, aux = jax.jit(lambda s, k: afm.train(s, xtr, k, cfg))(state, rng)
+    # per sample: 1 GMU update + 4 x firings (each fire touches <= 4 nbrs)
+    upd_per_sample = 1.0 + 4.0 * float(aux.cascade_size.sum()) / cfg.total_samples
+    assert upd_per_sample < 0.5 * cfg.n_units

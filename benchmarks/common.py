@@ -11,9 +11,7 @@ import json
 import os
 import time
 
-import jax
-
-from repro.core import afm, metrics
+from repro.api import AFMConfig, TopoMap
 from repro.data import make_dataset
 
 RESULTS_DIR = os.path.join(os.path.dirname(__file__), "..", "results", "bench")
@@ -27,19 +25,18 @@ def save(name: str, payload: dict) -> str:
     return path
 
 
-def train_afm(key, cfg: afm.AFMConfig, data):
-    state = afm.init(key, cfg, data)
+def train_afm(key, cfg: AFMConfig, data, backend: str = "batched",
+              backend_options: dict | None = None):
+    """Fit a TopoMap on ``data``; returns (estimator, stacked aux, seconds)."""
+    tm = TopoMap(cfg, backend=backend, backend_options=backend_options)
     t0 = time.time()
-    state, aux = jax.jit(
-        lambda s, k: afm.train(s, data, k, cfg))(state, key)
-    jax.block_until_ready(state.w)
-    return state, aux, time.time() - t0
+    tm.fit(data, key=key)
+    return tm, tm.fit_aux_, time.time() - t0
 
 
-def map_quality(state, samples, side):
-    q = float(metrics.quantization_error(state.w, samples))
-    t = float(metrics.topological_error(state.w, samples, side))
-    return q, t
+def map_quality(tm: TopoMap, samples, side=None):
+    del side  # the estimator knows its own lattice
+    return tm.quantization_error(samples), tm.topographic_error(samples)
 
 
 def dataset(name: str, train_size: int, test_size: int):

@@ -10,7 +10,7 @@ import jax
 import numpy as np
 
 from benchmarks import common
-from repro.core import afm
+from repro.api import AFMConfig
 
 
 def run(quick: bool = True):
@@ -19,9 +19,9 @@ def run(quick: bool = True):
     rows = []
     for side in sides:
         n = side * side
-        cfg = afm.AFMConfig(side=side, dim=16, i_max=20 * n, batch=16,
-                            e_factor=1.0)
-        state, aux, dt = common.train_afm(jax.random.PRNGKey(7), cfg, xtr)
+        cfg = AFMConfig(side=side, dim=16, i_max=20 * n, batch=16,
+                        e_factor=1.0)
+        tm, aux, dt = common.train_afm(jax.random.PRNGKey(7), cfg, xtr)
         greedy = float(np.asarray(aux.greedy_steps, np.float64).mean())
         casc = float(np.asarray(aux.cascade_size, np.float64).mean())
         per_sample = cfg.e + greedy + casc

@@ -11,7 +11,7 @@ import time
 import jax
 
 from benchmarks import common
-from repro.core import afm, metrics
+from repro.api import AFMConfig
 
 
 def run(quick: bool = True):
@@ -21,17 +21,16 @@ def run(quick: bool = True):
     e_factors = (0.05, 0.5, 1.0, 3.0) if quick else (0.01, 0.05, 0.1, 0.5, 1, 2, 3, 5)
     rows = []
     for ef in e_factors:
-        cfg = afm.AFMConfig(side=side, dim=784, i_max=30 * side * side,
-                            batch=16, e_factor=ef)
+        cfg = AFMConfig(side=side, dim=784, i_max=30 * side * side,
+                        batch=16, e_factor=ef)
         t0 = time.time()
-        state, aux, dt = common.train_afm(key, cfg, xtr)
-        f, _ = metrics.search_error(state.w, state.near, state.far, xte[:256],
-                                    jax.random.fold_in(key, int(ef * 100)),
-                                    cfg.e)
-        q, t = common.map_quality(state, xte, side)
-        rows.append({"e_factor": ef, "e": cfg.e, "F": float(f), "T": t, "Q": q,
+        tm, aux, dt = common.train_afm(key, cfg, xtr)
+        f = tm.search_error(xte[:256],
+                            key=jax.random.fold_in(key, int(ef * 100)))
+        q, t = common.map_quality(tm, xte)
+        rows.append({"e_factor": ef, "e": cfg.e, "F": f, "T": t, "Q": q,
                      "train_s": round(dt, 1)})
-        print(f"  e={ef:5.2f}N F={float(f):.4f} T={t:.4f} Q={q:.4f} "
+        print(f"  e={ef:5.2f}N F={f:.4f} T={t:.4f} Q={q:.4f} "
               f"({time.time()-t0:.0f}s)", flush=True)
     # paper claim: F decreases monotonically-ish with e
     derived = {"F_at_min_e": rows[0]["F"], "F_at_max_e": rows[-1]["F"],

@@ -10,7 +10,7 @@ import jax
 import numpy as np
 
 from benchmarks import common
-from repro.core import afm
+from repro.api import AFMConfig
 
 
 def _upper_quantile_traj(sizes, n_units, windows: int = 10):
@@ -25,9 +25,9 @@ def run(quick: bool = True):
     xtr, _, _, _ = common.dataset("mnist", train_size=3000, test_size=100)
     trajs = {}
     for side in sides:
-        cfg = afm.AFMConfig(side=side, dim=784, i_max=40 * side * side,
-                            batch=16, e_factor=0.5)
-        state, aux, dt = common.train_afm(key, cfg, xtr)
+        cfg = AFMConfig(side=side, dim=784, i_max=40 * side * side,
+                        batch=16, e_factor=0.5)
+        tm, aux, dt = common.train_afm(key, cfg, xtr)
         trajs[side * side] = _upper_quantile_traj(aux.cascade_size, cfg.n_units)
         print(f"  N={side*side}: traj={['%.3f' % v for v in trajs[side*side]]} "
               f"({dt:.0f}s)", flush=True)

@@ -8,7 +8,7 @@ from __future__ import annotations
 import jax
 
 from benchmarks import common
-from repro.core import afm
+from repro.api import AFMConfig
 
 
 def run(quick: bool = True):
@@ -20,10 +20,10 @@ def run(quick: bool = True):
     rows = []
     for cm in cms:
         for cd in cds:
-            cfg = afm.AFMConfig(side=side, dim=784, i_max=30 * side * side,
-                                batch=16, e_factor=0.5, c_m=cm, c_d=cd)
-            state, aux, dt = common.train_afm(key, cfg, xtr)
-            q, t = common.map_quality(state, xte, side)
+            cfg = AFMConfig(side=side, dim=784, i_max=30 * side * side,
+                            batch=16, e_factor=0.5, c_m=cm, c_d=cd)
+            tm, aux, dt = common.train_afm(key, cfg, xtr)
+            q, t = common.map_quality(tm, xte)
             rows.append({"c_m": cm, "c_d": cd, "Q": q, "T": t,
                          "mean_cascade": float(aux.cascade_size.mean())})
             print(f"  c_m={cm:4.2f} c_d={cd:7.0f} Q={q:.4f} T={t:.4f} "

@@ -6,7 +6,7 @@ from __future__ import annotations
 import jax
 
 from benchmarks import common
-from repro.core import afm, metrics
+from repro.api import AFMConfig
 
 
 def run(quick: bool = True):
@@ -15,15 +15,14 @@ def run(quick: bool = True):
     xtr, _, xte, _ = common.dataset("mnist", train_size=4000, test_size=400)
     rows = []
     for side in sides:
-        cfg = afm.AFMConfig(side=side, dim=784, i_max=40 * side * side,
-                            batch=16, e_factor=1.0)
-        state, aux, dt = common.train_afm(key, cfg, xtr)
-        q, t = common.map_quality(state, xte, side)
-        f, _ = metrics.search_error(state.w, state.near, state.far, xte[:256],
-                                    jax.random.fold_in(key, side), cfg.e)
-        rows.append({"N": cfg.n_units, "Q": q, "T": t, "F": float(f),
+        cfg = AFMConfig(side=side, dim=784, i_max=40 * side * side,
+                        batch=16, e_factor=1.0)
+        tm, aux, dt = common.train_afm(key, cfg, xtr)
+        q, t = common.map_quality(tm, xte)
+        f = tm.search_error(xte[:256], key=jax.random.fold_in(key, side))
+        rows.append({"N": cfg.n_units, "Q": q, "T": t, "F": f,
                      "train_s": round(dt, 1)})
-        print(f"  N={cfg.n_units:5d} Q={q:.4f} T={t:.4f} F={float(f):.4f} "
+        print(f"  N={cfg.n_units:5d} Q={q:.4f} T={t:.4f} F={f:.4f} "
               f"({dt:.0f}s)", flush=True)
     derived = {
         "claim_Q_decreases_with_N": rows[-1]["Q"] < rows[0]["Q"],

@@ -11,16 +11,26 @@ import jax
 import numpy as np
 
 from benchmarks import common
-from repro.core import afm, classifier, som
+from repro.api import AFMConfig, TopoMap, precision_recall
+from repro.core import classifier, som
 from repro.data import DATASETS
 
 
-def _eval(w, xtr, ytr, xte, yte, num_classes):
+def _eval_tm(tm: TopoMap, xtr, ytr, xte, yte, num_classes):
+    p_te, r_te = precision_recall(tm.predict(xte), yte, num_classes)
+    p_tr, r_tr = precision_recall(tm.predict(xtr[:2000]), ytr[:2000],
+                                  num_classes)
+    return {"precision_test": float(p_te), "recall_test": float(r_te),
+            "precision_train": float(p_tr), "recall_train": float(r_tr)}
+
+
+def _eval_w(w, xtr, ytr, xte, yte, num_classes):
+    """Evaluate raw (SOM baseline) weights with the same Eq.-7 labelling."""
     labels = classifier.label_units(w, xtr, ytr)
     pred_te = classifier.predict(w, labels, xte)
     pred_tr = classifier.predict(w, labels, xtr[:2000])
-    p_te, r_te = classifier.precision_recall(pred_te, yte, num_classes)
-    p_tr, r_tr = classifier.precision_recall(pred_tr, ytr[:2000], num_classes)
+    p_te, r_te = precision_recall(pred_te, yte, num_classes)
+    p_tr, r_tr = precision_recall(pred_tr, ytr[:2000], num_classes)
     return {"precision_test": float(p_te), "recall_test": float(r_te),
             "precision_train": float(p_tr), "recall_train": float(r_tr)}
 
@@ -37,11 +47,12 @@ def run(quick: bool = True, runs: int = 2):
         afm_runs, som_runs = [], []
         for r in range(runs):
             key = jax.random.PRNGKey(100 + r)
-            acfg = afm.AFMConfig(side=side, dim=spec.features,
-                                 i_max=40 * side * side, batch=16,
-                                 e_factor=1.0, c_d=1000.0)
-            astate, _, _ = common.train_afm(key, acfg, xtr)
-            afm_runs.append(_eval(astate.w, xtr, ytr, xte, yte, spec.classes))
+            acfg = AFMConfig(side=side, dim=spec.features,
+                             i_max=40 * side * side, batch=16,
+                             e_factor=1.0, c_d=1000.0)
+            tm, _, _ = common.train_afm(key, acfg, xtr)
+            tm.label(xtr, ytr, spec.classes)
+            afm_runs.append(_eval_tm(tm, xtr, ytr, xte, yte, spec.classes))
             # faithful online SOM (B=1): batched neighbourhood updates
             # over-smooth the map and collapse it on many-class data
             scfg = som.SOMConfig(side=side, dim=spec.features,
@@ -50,7 +61,7 @@ def run(quick: bool = True, runs: int = 2):
             sstate = som.init(key, scfg, xtr)
             sstate = jax.jit(lambda s, k, c=scfg: som.train(s, xtr, k, c))(
                 sstate, key)
-            som_runs.append(_eval(sstate.w, xtr, ytr, xte, yte, spec.classes))
+            som_runs.append(_eval_w(sstate.w, xtr, ytr, xte, yte, spec.classes))
 
         def agg(rs, k):
             vals = [x[k] for x in rs]

@@ -7,7 +7,7 @@ import jax
 import numpy as np
 
 from benchmarks import common
-from repro.core import afm, metrics
+from repro.api import AFMConfig
 from repro.data import DATASETS
 
 
@@ -19,22 +19,21 @@ def run(quick: bool = True):
         spec = DATASETS[name]
         xtr, _, xte, _ = common.dataset(name, min(spec.train, 4000),
                                         min(spec.test, 500))
-        cfg = afm.AFMConfig(side=side, dim=spec.features,
-                            i_max=40 * side * side, batch=16, e_factor=1.0)
+        cfg = AFMConfig(side=side, dim=spec.features,
+                        i_max=40 * side * side, batch=16, e_factor=1.0)
         key = jax.random.PRNGKey(5)
-        state, aux, dt = common.train_afm(key, cfg, xtr)
+        tm, aux, dt = common.train_afm(key, cfg, xtr)
         sizes = np.asarray(aux.cascade_size, np.float64)
         # each firing adapts <= 4 neighbours; + 1 GMU update per sample
         upd_per_sample = 1.0 + 4.0 * sizes.sum() / cfg.total_samples
-        f, _ = metrics.search_error(state.w, state.near, state.far, xte[:256],
-                                    key, cfg.e)
+        f = tm.search_error(xte[:256], key=key)
         rows[name] = {
             "max_fractional_cascade": float(sizes.max() / cfg.n_units),
             "updates_per_sample": float(upd_per_sample),
-            "search_error": float(f),
+            "search_error": f,
         }
         print(f"  {name:10s} maxA={rows[name]['max_fractional_cascade']:.2f} "
-              f"upd/sample={upd_per_sample:.2f} F={float(f):.4f}", flush=True)
+              f"upd/sample={upd_per_sample:.2f} F={f:.4f}", flush=True)
     upd = [r["updates_per_sample"] for r in rows.values()]
     derived = {
         "updates_rel_spread": (max(upd) - min(upd)) / max(upd),

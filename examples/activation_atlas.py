@@ -8,10 +8,9 @@ architectures).
 import argparse
 
 import jax
-import jax.numpy as jnp
-import numpy as np
 
 from repro import configs
+from repro.api import TopoMap
 from repro.core import probe
 from repro.data import tokens as tokens_lib
 from repro.training import AdamWConfig, init_train_state, make_train_step
@@ -40,16 +39,10 @@ def main():
             print(f"step {i:4d} loss={float(m['loss']):.4f} "
                   f"probe_cascade={int(m['probe_cascade'])}")
 
-    # the atlas: per-unit mean distance to its lattice neighbours (U-matrix)
-    w = np.asarray(state.probe.afm.w).reshape(probe_cfg.side, probe_cfg.side, -1)
-    umat = np.zeros((probe_cfg.side, probe_cfg.side))
-    for r in range(probe_cfg.side):
-        for c in range(probe_cfg.side):
-            ds = []
-            for (rr, cc) in ((r-1, c), (r+1, c), (r, c-1), (r, c+1)):
-                if 0 <= rr < probe_cfg.side and 0 <= cc < probe_cfg.side:
-                    ds.append(np.linalg.norm(w[r, c] - w[rr, cc]))
-            umat[r, c] = np.mean(ds)
+    # the atlas: wrap the probe's trained map in the estimator surface and
+    # render its U-matrix (per-unit mean distance to lattice neighbours)
+    atlas = TopoMap.from_state(state.probe.afm, probe_cfg.afm_config())
+    umat = atlas.u_matrix()
     print("\nactivation-atlas U-matrix (low = coherent region):")
     scale = umat.max() or 1.0
     chars = " .:-=+*#%@"

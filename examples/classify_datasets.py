@@ -1,5 +1,6 @@
 """Paper §3.4 scenario: AFM vs synchronous SOM on multiple datasets
-(Table 2, reduced budgets). Identical data feeds both algorithms.
+(Table 2, reduced budgets). Identical data feeds both algorithms; the AFM
+side runs entirely through the ``TopoMap`` estimator.
 
     PYTHONPATH=src python examples/classify_datasets.py [--datasets a,b]
 """
@@ -7,11 +8,12 @@ import argparse
 
 import jax
 
-from repro.core import afm, classifier, som
+from repro.api import AFMConfig, TopoMap, precision_recall
+from repro.core import classifier, som
 from repro.data import DATASETS, make_dataset
 
 
-def evaluate(w, xtr, ytr, xte, yte, classes):
+def evaluate_som(w, xtr, ytr, xte, yte, classes):
     labels = classifier.label_units(w, xtr, ytr)
     pred = classifier.predict(w, labels, xte)
     p, r = classifier.precision_recall(pred, yte, classes)
@@ -22,6 +24,7 @@ def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--datasets", default="satimage,letters")
     ap.add_argument("--side", type=int, default=12)
+    ap.add_argument("--backend", default="batched")
     args = ap.parse_args()
     key = jax.random.PRNGKey(0)
 
@@ -32,13 +35,12 @@ def main():
         xtr, ytr, xte, yte = make_dataset(
             name, train_size=min(spec.train, 4000),
             test_size=min(spec.test, 800))
-        acfg = afm.AFMConfig(side=args.side, dim=spec.features,
-                             i_max=40 * args.side ** 2, batch=16,
-                             e_factor=1.0, c_d=1000.0)
-        astate = afm.init(key, acfg, xtr)
-        astate, _ = jax.jit(lambda s, k, c=acfg: afm.train(s, xtr, k, c))(
-            astate, key)
-        ap_, ar = evaluate(astate.w, xtr, ytr, xte, yte, spec.classes)
+        acfg = AFMConfig(side=args.side, dim=spec.features,
+                         i_max=40 * args.side ** 2, batch=16,
+                         e_factor=1.0, c_d=1000.0)
+        tm = TopoMap(acfg, backend=args.backend).fit(xtr, ytr, key=key)
+        pred = tm.predict(xte)
+        ap_, ar = (float(x) for x in precision_recall(pred, yte, spec.classes))
 
         scfg = som.SOMConfig(side=args.side, dim=spec.features,
                              i_max=40 * args.side ** 2, batch=1,
@@ -46,7 +48,7 @@ def main():
         sstate = som.init(key, scfg, xtr)
         sstate = jax.jit(lambda s, k, c=scfg: som.train(s, xtr, k, c))(
             sstate, key)
-        sp, sr = evaluate(sstate.w, xtr, ytr, xte, yte, spec.classes)
+        sp, sr = evaluate_som(sstate.w, xtr, ytr, xte, yte, spec.classes)
         print(f"{name:12s} {ap_:9.3f} {ar:9.3f} {sp:9.3f} {sr:9.3f}")
 
 

@@ -1,5 +1,6 @@
 """Quickstart: train an asynchronously-trained feature map (AFM) on a
-Table-1-shaped dataset, evaluate map quality, and classify.
+Table-1-shaped dataset, evaluate map quality, and classify — all through the
+``TopoMap`` estimator (``repro.api``).
 
     PYTHONPATH=src python examples/quickstart.py
 """
@@ -7,7 +8,7 @@ import time
 
 import jax
 
-from repro.core import afm, classifier, metrics
+from repro.api import AFMConfig, TopoMap, precision_recall
 from repro.data import make_dataset
 
 
@@ -17,7 +18,7 @@ def main():
     xtr, ytr, xte, yte = make_dataset("satimage", train_size=3000, test_size=600)
 
     # paper §3 default configuration, budget-reduced for CPU
-    cfg = afm.AFMConfig(
+    cfg = AFMConfig(
         side=10,           # N = 100 units
         dim=36,
         phi=20,            # far links per unit
@@ -26,29 +27,22 @@ def main():
         i_max=40 * 100,    # paper uses 600N; reduced here
         batch=16,          # bulk-asynchronous samples in flight
     )
-    state = afm.init(key, cfg, xtr)
+    tm = TopoMap(cfg)      # backend="batched"; try "reference" or "pallas"
     print(f"map {cfg.side}x{cfg.side}, {cfg.e} exploration hops/sample, "
-          f"{cfg.num_steps} steps")
+          f"{cfg.num_steps} steps, backend={tm.backend.name}")
 
-    q0 = float(metrics.quantization_error(state.w, xte))
     t0 = time.time()
-    state, aux = jax.jit(lambda s, k: afm.train(s, xtr, k, cfg))(state, key)
-    jax.block_until_ready(state.w)
-    print(f"trained in {time.time()-t0:.1f}s; "
-          f"largest cascade a_i = {int(aux.cascade_size.max())} units")
+    tm.fit(xtr, ytr, key=key)
+    print(f"trained in {time.time()-t0:.1f}s; largest cascade "
+          f"a_i = {int(tm.fit_aux_.cascade_size.max())} units")
 
-    q1 = float(metrics.quantization_error(state.w, xte))
-    t1 = float(metrics.topological_error(state.w, xte, cfg.side))
-    f, _ = metrics.search_error(state.w, state.near, state.far, xte[:256],
-                                key, cfg.e)
-    print(f"quantization error  Q: {q0:.4f} -> {q1:.4f}")
-    print(f"topological error   T: {t1:.4f}")
-    print(f"search error        F: {float(f):.4f}")
+    print(f"quantization error  Q: {tm.quantization_error(xte):.4f}")
+    print(f"topological error   T: {tm.topographic_error(xte):.4f}")
+    print(f"search error        F: {tm.search_error(xte[:256], key=key):.4f}")
 
-    labels = classifier.label_units(state.w, xtr, ytr)
-    pred = classifier.predict(state.w, labels, xte)
+    pred = tm.predict(xte)
     acc = float((pred == yte).mean())
-    prec, rec = classifier.precision_recall(pred, yte, 6)
+    prec, rec = precision_recall(pred, yte, 6)
     print(f"classification: acc={acc:.3f} precision={float(prec):.3f} "
           f"recall={float(rec):.3f} (chance = 0.167)")
 

@@ -1,0 +1,21 @@
+"""Public estimator API for the asynchronously-trained feature map.
+
+    from repro.api import TopoMap
+    tm = TopoMap(side=10, dim=36, batch=16).fit(xtr, ytr)
+    pred = tm.predict(xte)
+
+One ``TopoMap`` surface, four execution backends (``reference``, ``batched``,
+``pallas``, ``sharded``) behind a string-keyed registry — see
+``repro.api.backends`` and DESIGN.md.
+"""
+from repro.api.backends import (BACKENDS, Backend, available_backends,
+                                get_backend, register_backend)
+from repro.api.topomap import TopoMap
+from repro.core.afm import AFMConfig, AFMState
+from repro.core.classifier import precision_recall
+
+__all__ = [
+    "AFMConfig", "AFMState", "BACKENDS", "Backend", "TopoMap",
+    "available_backends", "get_backend", "precision_recall",
+    "register_backend",
+]

@@ -1,0 +1,282 @@
+"""Execution backends for the ``TopoMap`` estimator.
+
+A backend owns *how* the AFM step runs — which search implementation, which
+cascade implementation, which devices — while the dynamics stay the shared
+injectable stages from ``repro.core.afm`` (DESIGN.md §2). Backends register
+under a string key (same idiom as the ``repro.configs`` registry):
+
+=============  ==============================================================
+``reference``  Faithful per-sample dynamics (B = 1), pure jnp. The oracle.
+``batched``    Bulk-asynchronous: B relay-race searches per step (default).
+``pallas``     Search via the ``kernels.bmu`` Pallas op and cascade counter
+               waves via ``kernels.cascade``; falls back to the jnp oracles
+               on CPU (``use_pallas=False``) unless interpret mode is forced.
+``sharded``    ``shard_map`` mesh training (``core.distributed``): lattice
+               rows over the ``model`` axis, samples over ``data``.
+=============  ==============================================================
+
+Every backend implements the ``Backend`` protocol:
+
+- ``init(key, samples)``            -> backend-native state
+- ``step(state, samples, key)``     -> one training step (``partial_fit``)
+- ``run(state, data, key, steps)``  -> full scan training loop (``fit``)
+- ``to_dense(state)``               -> canonical dense ``AFMState``
+- ``from_dense(state)``             -> backend-native state (its inverse)
+- ``bmu(w, samples)``               -> backend's fast exact-BMU path
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Protocol, runtime_checkable
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import afm, distributed
+from repro.core import search as search_lib
+from repro.core.afm import AFMConfig, AFMState
+from repro.kernels.bmu import ops as bmu_ops
+from repro.kernels.cascade import ops as cascade_ops
+from repro.sharding import compat
+
+BACKENDS: dict[str, type] = {}
+
+
+def register_backend(name: str):
+    """Class decorator: ``@register_backend("batched")``."""
+    def deco(cls):
+        cls.name = name
+        BACKENDS[name] = cls
+        return cls
+    return deco
+
+
+def available_backends() -> tuple[str, ...]:
+    return tuple(sorted(BACKENDS))
+
+
+def get_backend(name: str, cfg: AFMConfig, **options):
+    """Instantiate a registered backend for ``cfg``."""
+    try:
+        cls = BACKENDS[name]
+    except KeyError:
+        raise KeyError(
+            f"unknown backend {name!r}; available: {available_backends()}"
+        ) from None
+    return cls(cfg, **options)
+
+
+@runtime_checkable
+class Backend(Protocol):
+    name: str
+    cfg: AFMConfig
+
+    def init(self, key: jax.Array, samples: jnp.ndarray | None = None) -> Any: ...
+    def step(self, state: Any, samples: jnp.ndarray, key: jax.Array): ...
+    def run(self, state: Any, data: jnp.ndarray, key: jax.Array,
+            num_steps: int | None = None): ...
+    def to_dense(self, state: Any) -> AFMState: ...
+    def from_dense(self, state: AFMState) -> Any: ...
+    def bmu(self, w: jnp.ndarray, samples: jnp.ndarray): ...
+
+
+def _stages_for(search: str, cascade_wave_fn=None) -> afm.Stages:
+    if search == "heuristic":
+        base = afm.DEFAULT_STAGES
+    elif search == "exact":
+        base = afm.EXACT_STAGES
+    else:
+        raise ValueError(f"search must be 'heuristic' or 'exact', got {search!r}")
+    if cascade_wave_fn is None:
+        return base
+    return base._replace(cascade=functools.partial(
+        afm.cascade_default, wave_fn=cascade_wave_fn))
+
+
+class _DenseBackend:
+    """Shared dense-state machinery: init / scan loop / conversions."""
+
+    stages: afm.Stages = afm.DEFAULT_STAGES
+
+    def __init__(self, cfg: AFMConfig, *, search: str = "heuristic"):
+        self.cfg = cfg
+        self.stages = _stages_for(search)
+        self._jit_step = None
+
+    def init(self, key, samples=None) -> AFMState:
+        return afm.init(key, self.cfg, samples)
+
+    def step(self, state, samples, key):
+        # jitted lazily and cached: partial_fit loops hit compiled code
+        # (one compile per distinct batch shape)
+        if self._jit_step is None:
+            self._jit_step = jax.jit(lambda s, x, k: afm.train_step_batch(
+                s, x, k, self.cfg, stages=self.stages))
+        return self._jit_step(state, samples, key)
+
+    def run(self, state, data, key, num_steps=None):
+        num_steps = self.cfg.num_steps if num_steps is None else num_steps
+        fn = jax.jit(lambda s, d, k: afm.train(
+            s, d, k, self.cfg, num_steps=num_steps, stages=self.stages))
+        state, aux = fn(state, data, key)
+        jax.block_until_ready(state.w)
+        return state, aux
+
+    def to_dense(self, state: AFMState) -> AFMState:
+        return state
+
+    def from_dense(self, state: AFMState) -> AFMState:
+        return state
+
+    def bmu(self, w, samples):
+        return search_lib.exact_bmu(w, samples)
+
+
+@register_backend("batched")
+class BatchedBackend(_DenseBackend):
+    """Bulk-asynchronous training: ``cfg.batch`` samples in flight per step."""
+
+
+@register_backend("reference")
+class ReferenceBackend(_DenseBackend):
+    """Faithful B = 1 dynamics — one sample, one relay race, one cascade per
+    step, regardless of ``cfg.batch``. Consumes the same total sample budget
+    as ``batched`` and is bit-identical to it when ``cfg.batch == 1``."""
+
+    def __init__(self, cfg: AFMConfig, *, search: str = "heuristic"):
+        super().__init__(dataclasses.replace(cfg, batch=1), search=search)
+
+    def step(self, state, samples, key):
+        """Consume a (B, D) batch strictly sequentially (B per-sample steps).
+
+        Aux comes back stacked per sample (leading dim B) — one faithful
+        step per sample, mirroring ``run``'s per-step stacking."""
+        if self._jit_step is None:
+            def scan_steps(s, samples, key):
+                def body(s, xs):
+                    sample, k = xs
+                    return afm.train_step(s, sample, k, self.cfg,
+                                          stages=self.stages)
+                keys = jax.random.split(key, samples.shape[0])
+                return jax.lax.scan(body, s, (samples, keys))
+            self._jit_step = jax.jit(scan_steps)
+        return self._jit_step(state, samples, key)
+
+    def run(self, state, data, key, num_steps=None):
+        num_steps = self.cfg.num_steps if num_steps is None else num_steps
+
+        def body(s, k):
+            ks, kd = jax.random.split(k)
+            idx = jax.random.randint(kd, (1,), 0, data.shape[0])
+            return afm.train_step(s, data[idx][0], ks, self.cfg,
+                                  stages=self.stages)
+
+        fn = jax.jit(lambda s, ks: jax.lax.scan(body, s, ks))
+        state, aux = fn(state, jax.random.split(key, num_steps))
+        jax.block_until_ready(state.w)
+        return state, aux
+
+
+@register_backend("pallas")
+class PallasBackend(_DenseBackend):
+    """Training through the Pallas kernels: exact-BMU search via
+    ``kernels.bmu.ops.bmu`` and cascade counter waves via
+    ``kernels.cascade.ops.cascade_wave``.
+
+    On CPU the kernels fall back to their jnp oracles (``use_pallas=False``)
+    unless ``interpret=True`` *and* ``use_pallas=True`` are forced, which runs
+    the real kernel bodies in the Pallas interpreter (slow; used by the parity
+    tests). On TPU both default to the compiled kernels. ``search='heuristic'``
+    keeps the paper's relay race and uses the kernel only for the cascade.
+    """
+
+    def __init__(self, cfg: AFMConfig, *, search: str = "exact",
+                 use_pallas: bool | None = None, interpret: bool | None = None):
+        on_tpu = jax.default_backend() == "tpu"
+        if use_pallas is None:
+            # asking for interpret mode off-TPU means "run the real kernel
+            # bodies"; otherwise CPU uses the jnp oracle fallback
+            use_pallas = on_tpu or bool(interpret)
+        if interpret is None:
+            interpret = not on_tpu
+        self.cfg = cfg
+        self._jit_step = None
+        self.use_pallas = use_pallas
+        self.interpret = interpret
+        wave_fn = functools.partial(cascade_ops.cascade_wave,
+                                    use_pallas=use_pallas, interpret=interpret)
+        self.stages = _stages_for(search, cascade_wave_fn=wave_fn)
+        if search == "exact":
+            self.stages = self.stages._replace(search=self._search_stage)
+
+    def _search_stage(self, state, samples, key, cfg):
+        del key, cfg
+        idx, q2 = self.bmu(state.w, samples)
+        zeros = jnp.zeros(samples.shape[:1], jnp.int32)
+        return search_lib.SearchResult(idx.astype(jnp.int32), q2, zeros, zeros)
+
+    def bmu(self, w, samples):
+        return bmu_ops.bmu(w, samples, use_pallas=self.use_pallas,
+                           interpret=self.interpret)
+
+
+@register_backend("sharded")
+class ShardedBackend:
+    """Mesh training via ``core.distributed`` (shard_map): lattice rows over
+    ``model``, samples over ``data``. State lives on devices in the sharded
+    layout; ``to_dense`` gathers it back to the canonical (N, D) form."""
+
+    def __init__(self, cfg: AFMConfig, *, mesh=None, data_axes=("data",),
+                 model_axis: str = "model"):
+        if mesh is None:
+            mesh = compat.make_mesh((1, 1), ("data", "model"))
+        self.cfg = cfg
+        self._jit_step = None
+        self.mesh = mesh
+        self.model_axis = model_axis
+        self.step_fn, self.state_specs = distributed.make_sharded_train_step(
+            cfg, mesh, data_axes=data_axes, model_axis=model_axis)
+
+    def init(self, key, samples=None):
+        return self.from_dense(afm.init(key, self.cfg, samples))
+
+    def from_dense(self, state: AFMState):
+        sstate = distributed.shard_state_for_mesh(state, self.cfg, self.mesh,
+                                                  self.model_axis)
+        shardings = jax.tree.map(
+            lambda s: jax.sharding.NamedSharding(self.mesh, s),
+            self.state_specs)
+        return jax.device_put(sstate, shardings)
+
+    def step(self, state, samples, key):
+        if self._jit_step is None:
+            self._jit_step = jax.jit(self.step_fn)
+        return self._jit_step(state, samples, key)
+
+    def run(self, state, data, key, num_steps=None):
+        num_steps = self.cfg.num_steps if num_steps is None else num_steps
+        batch = self.cfg.batch
+
+        def body(s, k):
+            ks, kd = jax.random.split(k)
+            idx = jax.random.randint(kd, (batch,), 0, data.shape[0])
+            return self.step_fn(s, data[idx], ks)
+
+        fn = jax.jit(lambda s, ks: jax.lax.scan(body, s, ks))
+        state, aux = fn(state, jax.random.split(key, num_steps))
+        jax.block_until_ready(state.w)
+        return state, aux
+
+    def to_dense(self, state) -> AFMState:
+        cfg = self.cfg
+        return AFMState(
+            w=jnp.asarray(jax.device_get(state.w)).reshape(cfg.n_units, cfg.dim),
+            c=jnp.asarray(jax.device_get(state.c)),
+            far=jnp.asarray(jax.device_get(state.far)),
+            near=jnp.asarray(jax.device_get(state.near)),
+            i=jnp.asarray(jax.device_get(state.i)),
+        )
+
+    def bmu(self, w, samples):
+        return search_lib.exact_bmu(w, samples)

@@ -10,11 +10,22 @@
   cascade. B = 1 recovers ``train_step`` exactly.
 
 ``train`` scans either step over the sample stream.
+
+A step decomposes into three injectable stages (see DESIGN.md §2) so the
+``repro.api`` backends can swap implementations without re-deriving the step:
+
+- **search**  (state, samples, key, cfg) -> SearchResult — which unit adapts;
+- **adapt**   (state, samples, gmu, cfg) -> (w, counts)  — Eq. (3) merge;
+- **cascade** (w, c, counts, l_c, p, key, cfg) -> CascadeResult — drive + waves.
+
+``Stages`` bundles the three; ``DEFAULT_STAGES`` is the paper-faithful
+heuristic-search pipeline, ``EXACT_STAGES`` replaces the relay-race search
+with the exact BMU (the probe / Pallas fast path).
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import NamedTuple
+from typing import Callable, NamedTuple
 
 import jax
 import jax.numpy as jnp
@@ -94,38 +105,78 @@ def init(key: jax.Array, cfg: AFMConfig, samples: jnp.ndarray | None = None) -> 
     )
 
 
+class Stages(NamedTuple):
+    """The three injectable phases of one AFM step (DESIGN.md §2)."""
+    search: Callable    # (state, samples, key, cfg) -> SearchResult
+    adapt: Callable     # (state, samples, gmu, cfg) -> (w (N,D), counts (N,))
+    cascade: Callable   # (w, c, counts, l_c, p, key, cfg) -> CascadeResult
+
+
+def search_heuristic(state: AFMState, samples: jnp.ndarray, key: jax.Array,
+                     cfg: AFMConfig) -> search_lib.SearchResult:
+    """Paper §2.1: far-link relay-race exploration + greedy exploitation."""
+    return search_lib.heuristic_search(
+        state.w, state.near, state.far, samples, key, cfg.e,
+        greedy_use_far=cfg.greedy_use_far,
+    )
+
+
+def search_exact(state: AFMState, samples: jnp.ndarray, key: jax.Array,
+                 cfg: AFMConfig) -> search_lib.SearchResult:
+    """Exact BMU via a full distance pass (key unused — deterministic)."""
+    del key
+    gmu, q2 = search_lib.exact_bmu(state.w, samples)
+    zeros = jnp.zeros(samples.shape[:1], jnp.int32)
+    return search_lib.SearchResult(gmu, q2, zeros, zeros)
+
+
+def adapt_gmu(state: AFMState, samples: jnp.ndarray, gmu: jnp.ndarray,
+              cfg: AFMConfig) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Eq. (3) — GMU adaptation; conflicting GMUs merge by averaging the
+    per-sample targets (B=1: exactly Eq. 3). Returns (w, per-unit counts)."""
+    n = cfg.n_units
+    b = samples.shape[0]
+    ones = jnp.ones((b,), jnp.float32)
+    counts = jnp.zeros((n,), jnp.float32).at[gmu].add(ones)
+    target_sum = jnp.zeros((n, cfg.dim), jnp.float32).at[gmu].add(samples)
+    hit = counts > 0
+    mean_target = jnp.where(hit[:, None], target_sum / jnp.maximum(counts, 1.0)[:, None], state.w)
+    return state.w + cfg.l_s * (mean_target - state.w), counts
+
+
+def cascade_default(w: jnp.ndarray, c: jnp.ndarray, counts: jnp.ndarray,
+                    l_c, p_i, key: jax.Array, cfg: AFMConfig,
+                    wave_fn=None) -> cascade_lib.CascadeResult:
+    """Drive + cascade on the lattice view. ``wave_fn`` lets the Pallas
+    cascade kernel replace the counter-wave stencil (bit-identical dynamics)."""
+    side = cfg.side
+    return cascade_lib.drive_and_cascade(
+        w.reshape(side, side, cfg.dim), c.reshape(side, side),
+        counts.astype(jnp.int32).reshape(side, side),
+        l_c=l_c, p=p_i, theta=cfg.theta, key=key, max_waves=cfg.max_waves,
+        wave_fn=wave_fn,
+    )
+
+
+DEFAULT_STAGES = Stages(search_heuristic, adapt_gmu, cascade_default)
+EXACT_STAGES = Stages(search_exact, adapt_gmu, cascade_default)
+
+
 def _step(state: AFMState, samples: jnp.ndarray, key: jax.Array,
-          cfg: AFMConfig) -> tuple[AFMState, StepAux]:
+          cfg: AFMConfig, stages: Stages = DEFAULT_STAGES
+          ) -> tuple[AFMState, StepAux]:
     """Shared body for faithful (B=1) and batched (B>1) steps."""
-    n, side = cfg.n_units, cfg.side
+    n = cfg.n_units
     b = samples.shape[0]
     k_search, k_cascade = jax.random.split(key)
     i = state.i
     l_c = schedules.cascade_learning_rate(i, cfg.total_samples, cfg.c_o, cfg.c_s)
     p_i = schedules.cascade_probability(i, cfg.total_samples, n, cfg.c_m, cfg.c_d)
 
-    res = search_lib.heuristic_search(
-        state.w, state.near, state.far, samples, k_search, cfg.e,
-        greedy_use_far=cfg.greedy_use_far,
-    )
+    res = stages.search(state, samples, k_search, cfg)
+    w, counts = stages.adapt(state, samples, res.gmu, cfg)
+    out = stages.cascade(w, state.c, counts, l_c, p_i, k_cascade, cfg)
 
-    # Eq. (3) — GMU adaptation; conflicting GMUs merge by averaging the
-    # per-sample targets (B=1: exactly Eq. 3).
-    ones = jnp.ones((b,), jnp.float32)
-    counts = jnp.zeros((n,), jnp.float32).at[res.gmu].add(ones)
-    target_sum = jnp.zeros((n, cfg.dim), jnp.float32).at[res.gmu].add(samples)
-    hit = counts > 0
-    mean_target = jnp.where(hit[:, None], target_sum / jnp.maximum(counts, 1.0)[:, None], state.w)
-    w = state.w + cfg.l_s * (mean_target - state.w)
-
-    # Drive + cascade on the lattice view.
-    w_grid = w.reshape(side, side, cfg.dim)
-    c_grid = state.c.reshape(side, side)
-    gmu_counts = counts.astype(jnp.int32).reshape(side, side)
-    out = cascade_lib.drive_and_cascade(
-        w_grid, c_grid, gmu_counts, l_c=l_c, p=p_i, theta=cfg.theta,
-        key=k_cascade, max_waves=cfg.max_waves,
-    )
     new_state = AFMState(
         w=out.w.reshape(n, cfg.dim),
         c=out.c.reshape(n),
@@ -138,19 +189,22 @@ def _step(state: AFMState, samples: jnp.ndarray, key: jax.Array,
 
 
 def train_step(state: AFMState, sample: jnp.ndarray, key: jax.Array,
-               cfg: AFMConfig) -> tuple[AFMState, StepAux]:
+               cfg: AFMConfig, stages: Stages = DEFAULT_STAGES
+               ) -> tuple[AFMState, StepAux]:
     """Faithful per-sample step. sample: (D,)."""
-    return _step(state, sample[None, :], key, cfg)
+    return _step(state, sample[None, :], key, cfg, stages)
 
 
 def train_step_batch(state: AFMState, samples: jnp.ndarray, key: jax.Array,
-                     cfg: AFMConfig) -> tuple[AFMState, StepAux]:
+                     cfg: AFMConfig, stages: Stages = DEFAULT_STAGES
+                     ) -> tuple[AFMState, StepAux]:
     """Bulk-asynchronous step over (B, D) samples."""
-    return _step(state, samples, key, cfg)
+    return _step(state, samples, key, cfg, stages)
 
 
 def train(state: AFMState, data: jnp.ndarray, key: jax.Array, cfg: AFMConfig,
-          num_steps: int | None = None) -> tuple[AFMState, StepAux]:
+          num_steps: int | None = None, stages: Stages = DEFAULT_STAGES
+          ) -> tuple[AFMState, StepAux]:
     """Scan the batched step over a sample stream.
 
     data: (num_samples, D) — sampled with replacement each step.
@@ -161,7 +215,7 @@ def train(state: AFMState, data: jnp.ndarray, key: jax.Array, cfg: AFMConfig,
     def body(state, key):
         ks, kd = jax.random.split(key)
         idx = jax.random.randint(kd, (cfg.batch,), 0, data.shape[0])
-        return _step(state, data[idx], ks, cfg)
+        return _step(state, data[idx], ks, cfg, stages)
 
     keys = jax.random.split(key, num_steps)
     return jax.lax.scan(body, state, keys)

@@ -65,9 +65,25 @@ def _shift4(x: jnp.ndarray) -> jnp.ndarray:
     )
 
 
+def _wave_jnp(c: jnp.ndarray, fired: jnp.ndarray, bern: jnp.ndarray,
+              theta: int):
+    """Default counter-wave implementation (same contract as the Pallas
+    ``repro.kernels.cascade`` op): reset fired counters, apply the Bernoulli
+    drive per received broadcast, fire newly super-threshold receivers.
+
+    Returns (new_c, new_fired, n_recv).
+    """
+    c = jnp.where(fired, 0, c)
+    recv4 = _shift4(fired.astype(jnp.int32))
+    n_recv = recv4.sum(axis=0)
+    c = c + jnp.sum(bern.astype(jnp.int32) * recv4, axis=0)
+    new_fired = (c >= theta) & (n_recv > 0)
+    return c, new_fired, n_recv
+
+
 def cascade(w: jnp.ndarray, c: jnp.ndarray, fired0: jnp.ndarray, *,
             l_c, p, theta: int, key: jax.Array,
-            max_waves: int | None = None) -> CascadeResult:
+            max_waves: int | None = None, wave_fn=None) -> CascadeResult:
     """Run one full cascade to quiescence.
 
     Args:
@@ -81,27 +97,27 @@ def cascade(w: jnp.ndarray, c: jnp.ndarray, fired0: jnp.ndarray, *,
       theta:   firing threshold (paper/stat-mech mapping: theta = 4).
       key:     PRNG key for the Bernoulli drive.
       max_waves: safety bound on wave count (default 8 * side * side).
+      wave_fn: counter-wave implementation ``(c, fired, bern, theta) ->
+               (new_c, new_fired, n_recv)``; defaults to the pure-jnp stencil.
+               The Pallas kernel (``repro.kernels.cascade.ops.cascade_wave``)
+               plugs in here — both produce identical integer dynamics, so the
+               cascade is bit-reproducible across implementations.
     """
     side = c.shape[0]
     max_waves = (8 * side * side) if max_waves is None else max_waves
+    wave_fn = _wave_jnp if wave_fn is None else wave_fn
 
     def body(carry):
         w, c, fired, key, size, waves = carry
         key, sub = jax.random.split(key)
         firedf = fired.astype(w.dtype)
-        # Reset fired counters (Firing rule).
-        c = jnp.where(fired, 0, c)
-        # Receive broadcasts from fired neighbours.
-        n_recv = _shift_sum(fired.astype(jnp.int32))                 # (side, side)
+        # Weight adaptation from fired neighbours' broadcasts.
         sum_wk = _shift_sum(w * firedf[..., None] if w.ndim == 3 else w * firedf)
+        # Counter dynamics (reset + Bernoulli drive + new firing front).
+        bern = jax.random.uniform(sub, (4, side, side)) < p          # (4, s, s)
+        c, new_fired, n_recv = wave_fn(c, fired, bern, theta)
         nf = n_recv.astype(w.dtype)
         w = w + l_c * (sum_wk - nf[..., None] * w if w.ndim == 3 else sum_wk - nf * w)
-        # Drive: one Bernoulli(p) per received broadcast (adaptation).
-        bern = jax.random.uniform(sub, (4, side, side)) < p          # (4, s, s)
-        recv4 = _shift4(fired.astype(jnp.int32))                     # (4, s, s)
-        inc = jnp.sum(bern.astype(jnp.int32) * recv4, axis=0)
-        c = c + inc
-        new_fired = (c >= theta) & (n_recv > 0)
         return (w, c, new_fired, key,
                 size + fired.sum(dtype=jnp.int32), waves + 1)
 
@@ -116,7 +132,8 @@ def cascade(w: jnp.ndarray, c: jnp.ndarray, fired0: jnp.ndarray, *,
 
 
 def drive_and_cascade(w, c, gmu_mask, *, l_c, p, theta: int, key: jax.Array,
-                      max_waves: int | None = None) -> CascadeResult:
+                      max_waves: int | None = None,
+                      wave_fn=None) -> CascadeResult:
     """Apply the post-sample drive to GMU unit(s), then cascade if triggered.
 
     gmu_mask: (side, side) int32 — number of sample-adaptations each unit just
@@ -137,7 +154,7 @@ def drive_and_cascade(w, c, gmu_mask, *, l_c, p, theta: int, key: jax.Array,
     c = c + counts
     fired0 = c >= theta
     return cascade(w, c, fired0, l_c=l_c, p=p, theta=theta, key=k1,
-                   max_waves=max_waves)
+                   max_waves=max_waves, wave_fn=wave_fn)
 
 
 def sequential_cascade_reference(w, c, fired_queue, *, l_c, p, theta, seed: int):

@@ -33,6 +33,22 @@ def label_units(w: jnp.ndarray, samples: jnp.ndarray, labels: jnp.ndarray,
     return best_label
 
 
+def label_units_majority(w: jnp.ndarray, samples: jnp.ndarray,
+                         labels: jnp.ndarray, num_classes: int | None = None,
+                         chunk: int = 4096) -> jnp.ndarray:
+    """Majority vote of the samples whose BMU is unit j; units that attract
+    no samples fall back to the Eq. (7) nearest-sample label."""
+    if num_classes is None:
+        num_classes = int(labels.max()) + 1
+    votes = jnp.zeros((w.shape[0], num_classes), jnp.float32)
+    for lo in range(0, samples.shape[0], chunk):
+        bmu, _ = search_lib.exact_bmu(w, samples[lo:lo + chunk])
+        votes = votes.at[bmu, labels[lo:lo + chunk]].add(1.0)
+    majority = jnp.argmax(votes, axis=-1).astype(jnp.int32)
+    hit = votes.sum(axis=-1) > 0
+    return jnp.where(hit, majority, label_units(w, samples, labels, chunk))
+
+
 def predict(w: jnp.ndarray, unit_labels: jnp.ndarray, queries: jnp.ndarray,
             chunk: int = 4096) -> jnp.ndarray:
     """Label of each query's BMU. Returns (B,) int32."""

@@ -23,7 +23,6 @@ coupling:
 """
 from __future__ import annotations
 
-import functools
 from typing import NamedTuple
 
 import jax
@@ -32,6 +31,7 @@ from jax.sharding import PartitionSpec as P
 
 from repro.core import schedules
 from repro.core.afm import AFMConfig, AFMState
+from repro.sharding import compat
 
 
 class ShardedAux(NamedTuple):
@@ -257,11 +257,10 @@ def make_sharded_train_step(cfg: AFMConfig, mesh, *, data_axes=("data",),
         near=P(),
         i=P(),
     )
-    step_fn = jax.shard_map(
+    step_fn = compat.shard_map(
         step, mesh=mesh,
         in_specs=(state_specs, data_spec, P()),
         out_specs=(state_specs, ShardedAux(P(), P(), P())),
-        check_vma=False,
     )
     return step_fn, state_specs
 

@@ -20,8 +20,7 @@ from typing import NamedTuple
 import jax
 import jax.numpy as jnp
 
-from repro.core import afm, cascade as cascade_lib, schedules
-from repro.core import search as search_lib
+from repro.core import afm
 
 
 @dataclasses.dataclass(frozen=True)
@@ -64,32 +63,12 @@ def pool_hidden(h: jnp.ndarray) -> jnp.ndarray:
 
 def update(state: ProbeState, vectors: jnp.ndarray, key: jax.Array,
            cfg: ProbeConfig) -> tuple[ProbeState, afm.StepAux]:
-    """Feed (B, dim) vectors through one batched AFM step."""
-    acfg = cfg.afm_config()
-    s = state.afm
-    if cfg.search == "exact":
-        # Same step as afm._step but with the exact BMU (probe fast path).
-        n, side = acfg.n_units, acfg.side
-        b = vectors.shape[0]
-        k_c = key
-        i = s.i
-        l_c = schedules.cascade_learning_rate(i, acfg.total_samples, acfg.c_o, acfg.c_s)
-        p_i = schedules.cascade_probability(i, acfg.total_samples, n, acfg.c_m, acfg.c_d)
-        gmu, q2 = search_lib.exact_bmu(s.w, vectors)
-        ones = jnp.ones((b,), jnp.float32)
-        counts = jnp.zeros((n,), jnp.float32).at[gmu].add(ones)
-        tsum = jnp.zeros((n, acfg.dim), jnp.float32).at[gmu].add(vectors)
-        hit = counts > 0
-        tmean = jnp.where(hit[:, None], tsum / jnp.maximum(counts, 1.0)[:, None], s.w)
-        w = s.w + acfg.l_s * (tmean - s.w)
-        out = cascade_lib.drive_and_cascade(
-            w.reshape(side, side, acfg.dim), s.c.reshape(side, side),
-            counts.astype(jnp.int32).reshape(side, side),
-            l_c=l_c, p=p_i, theta=acfg.theta, key=k_c, max_waves=acfg.max_waves)
-        ns = afm.AFMState(out.w.reshape(n, acfg.dim), out.c.reshape(n),
-                          s.far, s.near, i + b)
-        aux = afm.StepAux(gmu, q2, out.size, out.waves,
-                          jnp.zeros((b,), jnp.int32))
-        return ProbeState(ns), aux
-    ns, aux = afm.train_step_batch(s, vectors, key, acfg)
+    """Feed (B, dim) vectors through one batched AFM step.
+
+    Both modes are the same injectable-stage step (afm._step); 'exact'
+    swaps the relay-race search for the full BMU pass (probe fast path).
+    """
+    stages = afm.EXACT_STAGES if cfg.search == "exact" else afm.DEFAULT_STAGES
+    ns, aux = afm.train_step_batch(state.afm, vectors, key, cfg.afm_config(),
+                                   stages=stages)
     return ProbeState(ns), aux

@@ -5,6 +5,16 @@ import pytest
 # forces 512 placeholder devices in its own process).
 jax.config.update("jax_platform_name", "cpu")
 
+# Heaviest architecture configs (compile-bound on CPU) ride in the slow tier
+# for the per-arch parametrized suites; CI's slow job still runs every arch.
+HEAVY_ARCHS = {"recurrentgemma_2b", "whisper_medium", "deepseek_moe_16b"}
+
+
+def arch_params():
+    from repro import configs
+    return [pytest.param(a, marks=pytest.mark.slow) if a in HEAVY_ARCHS else a
+            for a in configs.ARCHS]
+
 
 @pytest.fixture(scope="session")
 def rng():

@@ -4,11 +4,13 @@ import dataclasses
 import jax
 import jax.numpy as jnp
 import numpy as np
+import pytest
 
 from repro.core import afm, metrics, som
 from repro.data import make_dataset
 
 
+@pytest.mark.slow
 def test_training_improves_quality(rng):
     xtr, ytr, xte, yte = make_dataset("satimage", train_size=1500, test_size=400)
     cfg = afm.AFMConfig(side=8, dim=36, i_max=2400, batch=8, e_factor=1.0)
@@ -23,6 +25,7 @@ def test_training_improves_quality(rng):
     assert not np.any(np.isnan(np.asarray(state2.w)))
 
 
+@pytest.mark.slow
 def test_counters_stay_below_theta_after_step(rng):
     """No unit may end a step at/above threshold (all firing relaxed)."""
     xtr, _, _, _ = make_dataset("satimage", train_size=500, test_size=10)
@@ -43,6 +46,7 @@ def test_batch1_is_faithful_per_sample_step(rng):
     assert int(aux1.gmu[0]) == int(aux2.gmu[0])
 
 
+@pytest.mark.slow
 def test_som_baseline_improves(rng):
     xtr, _, xte, _ = make_dataset("satimage", train_size=1000, test_size=300)
     cfg = som.SOMConfig(side=8, dim=36, i_max=2000, batch=8)

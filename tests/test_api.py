@@ -1,0 +1,169 @@
+"""TopoMap estimator API: backend registry, backend parity, surface contract.
+
+Parity claims under test (ISSUE 1 acceptance):
+- ``reference`` == ``batched`` at B = 1: bit-identical final weights.
+- ``pallas`` (interpret mode — real kernel bodies) == exact-search
+  ``batched``: bit-identical final weights.
+- ``sharded`` on a 1x1 mesh reaches ``batched``-level quality.
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.api import (AFMConfig, TopoMap, available_backends, get_backend,
+                       register_backend)
+from repro.data import make_dataset
+
+
+def _tiny_data(dim=12, n=256, seed=3):
+    key = jax.random.PRNGKey(seed)
+    centers = jax.random.normal(jax.random.fold_in(key, 0), (4, dim)) * 2.0
+    cls = jax.random.randint(jax.random.fold_in(key, 1), (n,), 0, 4)
+    x = centers[cls] + 0.3 * jax.random.normal(jax.random.fold_in(key, 2),
+                                               (n, dim))
+    return x, cls
+
+
+CFG = AFMConfig(side=6, dim=12, i_max=96, batch=1, e_factor=0.5)
+
+
+def test_registry_lists_all_backends():
+    assert set(available_backends()) >= {"reference", "batched", "pallas",
+                                         "sharded"}
+
+
+def test_registry_unknown_backend_raises():
+    with pytest.raises(KeyError, match="unknown backend"):
+        get_backend("warp-drive", CFG)
+
+
+def test_register_backend_decorator():
+    from repro.api.backends import BACKENDS, BatchedBackend
+
+    @register_backend("_test_tmp")
+    class Tmp(BatchedBackend):
+        pass
+
+    try:
+        assert isinstance(get_backend("_test_tmp", CFG), Tmp)
+    finally:
+        del BACKENDS["_test_tmp"]
+
+
+def test_reference_matches_batched_b1_bitwise():
+    """Acceptance: bit-identical final weights for a fixed PRNG key."""
+    x, _ = _tiny_data()
+    key = jax.random.PRNGKey(7)
+    w_ref = TopoMap(CFG, backend="reference").fit(x, key=key).state_.w
+    w_bat = TopoMap(CFG, backend="batched").fit(x, key=key).state_.w
+    np.testing.assert_array_equal(np.asarray(w_ref), np.asarray(w_bat))
+
+
+def test_pallas_interpret_matches_exact_batched_bitwise():
+    """Kernel-path parity: BMU search + cascade waves through the real Pallas
+    kernel bodies (interpreter) reproduce the jnp pipeline bit-for-bit."""
+    x, _ = _tiny_data()
+    cfg = dataclasses.replace(CFG, i_max=48)
+    key = jax.random.PRNGKey(11)
+    w_pal = TopoMap(cfg, backend="pallas",
+                    backend_options={"interpret": True, "use_pallas": True}
+                    ).fit(x, key=key).state_.w
+    w_ex = TopoMap(cfg, backend="batched",
+                   backend_options={"search": "exact"}).fit(x, key=key).state_.w
+    np.testing.assert_array_equal(np.asarray(w_pal), np.asarray(w_ex))
+
+
+def test_pallas_cpu_fallback_matches_exact_batched_bitwise():
+    """Default CPU construction uses the jnp oracle fallback — same weights."""
+    x, _ = _tiny_data()
+    key = jax.random.PRNGKey(13)
+    tm = TopoMap(CFG, backend="pallas")
+    assert tm.backend.use_pallas is (jax.default_backend() == "tpu")
+    w_pal = tm.fit(x, key=key).state_.w
+    w_ex = TopoMap(CFG, backend="batched",
+                   backend_options={"search": "exact"}).fit(x, key=key).state_.w
+    np.testing.assert_array_equal(np.asarray(w_pal), np.asarray(w_ex))
+
+
+def test_pallas_heuristic_search_trains():
+    """search='heuristic' keeps the relay race, kernel only for the cascade."""
+    x, _ = _tiny_data()
+    tm = TopoMap(CFG, backend="pallas",
+                 backend_options={"search": "heuristic"}).fit(x)
+    assert not np.any(np.isnan(np.asarray(tm.state_.w)))
+
+
+@pytest.mark.slow
+def test_sharded_1x1_matches_batched_quality():
+    xtr, ytr, xte, yte = make_dataset("satimage", train_size=600,
+                                      test_size=150)
+    cfg = AFMConfig(side=6, dim=36, i_max=960, batch=8, e_factor=1.0)
+    key = jax.random.PRNGKey(0)
+    q_sh = TopoMap(cfg, backend="sharded").fit(xtr, key=key) \
+        .quantization_error(xte)
+    q_bat = TopoMap(cfg, backend="batched").fit(xtr, key=key) \
+        .quantization_error(xte)
+    assert abs(q_sh - q_bat) / q_bat < 0.25, (q_sh, q_bat)
+
+
+def test_transform_predict_and_metrics():
+    x, y = _tiny_data()
+    tm = TopoMap(CFG).fit(x, y)
+    idx = tm.transform(x[:17])
+    assert idx.shape == (17,) and int(idx.max()) < CFG.n_units
+    rc = tm.transform(x[:17], lattice=True)
+    assert rc.shape == (17, 2) and int(rc.max()) < CFG.side
+    np.testing.assert_array_equal(np.asarray(rc[:, 0] * CFG.side + rc[:, 1]),
+                                  np.asarray(idx))
+    pred = tm.predict(x)
+    assert pred.shape == y.shape
+    # a trained map on well-separated clusters beats chance comfortably
+    assert float((pred == y).mean()) > 0.5
+    assert tm.quantization_error(x) > 0.0
+    assert 0.0 <= tm.topographic_error(x) <= 1.0
+    assert tm.u_matrix().shape == (CFG.side, CFG.side)
+
+
+def test_majority_labeling():
+    x, y = _tiny_data()
+    tm = TopoMap(CFG, labeling="majority").fit(x, y)
+    assert float((tm.predict(x) == y).mean()) > 0.5
+
+
+def test_partial_fit_accumulates():
+    x, _ = _tiny_data()
+    tm = TopoMap(CFG)
+    for lo in range(0, 32, 8):
+        tm.partial_fit(x[lo:lo + 8])
+    assert int(tm.state_.i) == 32
+
+
+def test_unfitted_raises():
+    tm = TopoMap(CFG)
+    with pytest.raises(RuntimeError, match="not fitted"):
+        tm.transform(jnp.zeros((1, CFG.dim)))
+
+
+def test_predict_without_labels_raises():
+    x, _ = _tiny_data()
+    tm = TopoMap(CFG).fit(x)
+    with pytest.raises(RuntimeError, match="unit labels"):
+        tm.predict(x[:4])
+
+
+def test_from_state_wraps_probe_maps():
+    x, _ = _tiny_data()
+    fitted = TopoMap(CFG).fit(x)
+    wrapped = TopoMap.from_state(fitted.state_, CFG)
+    np.testing.assert_array_equal(np.asarray(wrapped.transform(x[:9])),
+                                  np.asarray(fitted.transform(x[:9])))
+
+
+def test_config_overrides_build_cfg():
+    tm = TopoMap(side=7, dim=5, batch=3)
+    assert (tm.cfg.side, tm.cfg.dim, tm.cfg.batch) == (7, 5, 3)
+    tm2 = TopoMap(CFG, batch=9)
+    assert tm2.cfg.batch == 9 and CFG.batch == 1

@@ -24,6 +24,7 @@ def test_abelian_counters_match_sequential():
     np.testing.assert_array_equal(np.asarray(out.c), c_ref)
 
 
+@pytest.mark.slow
 def test_dissipative_smaller_cascades():
     """Lower p (more dissipation) must produce stochastically smaller
     cascades — the paper's chi ~ (1-p)^-1 scaling, directionally."""

@@ -2,6 +2,7 @@
 import jax
 import jax.numpy as jnp
 import numpy as np
+import pytest
 
 from repro.core import afm, classifier
 from repro.data import make_dataset
@@ -23,6 +24,7 @@ def test_precision_recall_known_case():
     np.testing.assert_allclose(float(r), (0.5 + 1.0) / 2, rtol=1e-6)
 
 
+@pytest.mark.slow
 def test_map_classification_beats_chance(rng):
     xtr, ytr, xte, yte = make_dataset("satimage", train_size=1500, test_size=400)
     cfg = afm.AFMConfig(side=8, dim=36, i_max=3200, batch=8, e_factor=1.0)

@@ -10,10 +10,12 @@ import pytest
 from repro import configs
 from repro.models import transformer
 
+from tests.conftest import arch_params
+
 B, S = 2, 32
 
 
-@pytest.mark.parametrize("arch", configs.ARCHS)
+@pytest.mark.parametrize("arch", arch_params())
 def test_decode_matches_forward(arch):
     key = jax.random.PRNGKey(1)
     cfg = configs.get_smoke(arch)

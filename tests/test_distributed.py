@@ -1,52 +1,43 @@
 """Sharded AFM (shard_map) — runs in a subprocess with 8 virtual devices so
-the main test process keeps the single real device."""
+the main test process keeps the single real device. Drives the mesh path the
+way users do: through the ``TopoMap`` estimator's 'sharded' backend."""
 import json
 import os
 import subprocess
 import sys
 
+import pytest
+
 SCRIPT = r"""
 import os
 os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
 import json
-import jax, jax.numpy as jnp
+import jax
 import numpy as np
-from jax.sharding import NamedSharding
-from repro.core import afm, distributed, metrics
+from repro.api import AFMConfig, TopoMap
 from repro.data import make_dataset
+from repro.sharding import compat
 
-mesh = jax.make_mesh((2, 4), ("data", "model"),
-                     axis_types=(jax.sharding.AxisType.Auto,) * 2)
-cfg = afm.AFMConfig(side=8, dim=36, i_max=1600, batch=8, e_factor=1.0)
+mesh = compat.make_mesh((2, 4), ("data", "model"))
+cfg = AFMConfig(side=8, dim=36, i_max=1600, batch=8, e_factor=1.0)
 xtr, ytr, xte, yte = make_dataset("satimage", train_size=800, test_size=200)
 key = jax.random.PRNGKey(0)
-state = afm.init(key, cfg, xtr)
-q0 = float(metrics.quantization_error(state.w, xte))
-sstate = distributed.shard_state_for_mesh(state, cfg, mesh)
-step_fn, specs = distributed.make_sharded_train_step(cfg, mesh)
-sstate = jax.device_put(sstate, jax.tree.map(lambda s: NamedSharding(mesh, s), specs))
 
-@jax.jit
-def many(state, key):
-    def body(s, k):
-        ks, kd = jax.random.split(k)
-        idx = jax.random.randint(kd, (cfg.batch,), 0, xtr.shape[0])
-        return step_fn(s, xtr[idx], ks)
-    return jax.lax.scan(body, state, jax.random.split(key, 200))
-
-with jax.set_mesh(mesh):
-    out, aux = many(sstate, key)
-w = jnp.asarray(np.array(out.w)).reshape(cfg.n_units, cfg.dim)
-q1 = float(metrics.quantization_error(w, xte))
+tm = TopoMap(cfg, backend="sharded", backend_options={"mesh": mesh})
+state0 = tm.backend.init(key, xtr)
+q0 = float(TopoMap.from_state(tm.backend.to_dense(state0), cfg)
+           .quantization_error(xte))
+tm.fit(xtr, key=key)
 print(json.dumps({
-    "q0": q0, "q1": q1,
-    "cascades": int(np.array(aux.cascade_size).sum()),
-    "nan": bool(np.any(np.isnan(np.array(out.w)))),
-    "counters_ok": bool(int(np.array(out.c).max()) < cfg.theta),
+    "q0": q0, "q1": tm.quantization_error(xte),
+    "cascades": int(np.asarray(tm.fit_aux_.cascade_size).sum()),
+    "nan": bool(np.any(np.isnan(np.asarray(tm.state_.w)))),
+    "counters_ok": bool(int(np.asarray(tm.state_.c).max()) < cfg.theta),
 }))
 """
 
 
+@pytest.mark.slow
 def test_sharded_afm_trains():
     env = dict(os.environ,
                PYTHONPATH=os.path.join(os.path.dirname(__file__), "..", "src"))

@@ -11,6 +11,8 @@ from repro import configs
 from repro.models import transformer
 from repro.training import AdamWConfig, init_train_state, make_train_step
 
+from tests.conftest import arch_params
+
 B, S = 2, 32
 
 
@@ -30,7 +32,7 @@ def _batch(cfg, key):
     return batch
 
 
-@pytest.mark.parametrize("arch", configs.ARCHS)
+@pytest.mark.parametrize("arch", arch_params())
 def test_smoke_forward_and_train_step(arch, rng):
     cfg = configs.get_smoke(arch)
     if cfg.arch_type == "ssm":

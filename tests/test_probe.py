@@ -2,10 +2,12 @@
 import jax
 import jax.numpy as jnp
 import numpy as np
+import pytest
 
 from repro.core import metrics, probe
 
 
+@pytest.mark.slow
 def test_probe_organizes_clustered_activations(rng):
     cfg = probe.ProbeConfig(side=6, dim=16, i_max=2000, search="exact")
     st = probe.init(rng, cfg)

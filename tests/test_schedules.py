@@ -1,6 +1,9 @@
 """Eq. (5)/(6) schedule properties."""
 import jax.numpy as jnp
 import numpy as np
+import pytest
+
+pytest.importorskip("hypothesis")
 from hypothesis import given, settings, strategies as st
 
 from repro.core import schedules

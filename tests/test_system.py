@@ -5,9 +5,12 @@ reduced scale)."""
 import jax
 import jax.numpy as jnp
 import numpy as np
+import pytest
 
 from repro.core import afm, classifier, metrics, som
 from repro.data import make_dataset
+
+pytestmark = pytest.mark.slow  # full-training system tests
 
 
 def test_afm_end_to_end_vs_som(rng):

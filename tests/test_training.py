@@ -5,6 +5,7 @@ import tempfile
 import jax
 import jax.numpy as jnp
 import numpy as np
+import pytest
 
 from repro import configs
 from repro.data import tokens as tokens_lib
@@ -33,6 +34,7 @@ def test_lr_schedule_shape():
     assert lrs[100] <= 0.11
 
 
+@pytest.mark.slow
 def test_loss_decreases_small_lm(rng):
     cfg = configs.get_smoke("smollm-360m")
     opt = AdamWConfig(lr=2e-3, total_steps=40, warmup_steps=4)

@@ -20,6 +20,7 @@ MODULES = [
     ("table3_cascade_stats", "benchmarks.table3_cascade_stats"),
     ("complexity", "benchmarks.complexity"),
     ("kernel_bench", "benchmarks.kernel_bench"),
+    ("serving_bench", "benchmarks.serving_bench"),
     ("roofline", "benchmarks.roofline"),
 ]
 

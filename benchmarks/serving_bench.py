@@ -1,0 +1,77 @@
+"""Serving bench: MapService bucketed batched inference vs naive per-shape jit.
+
+Measures the thing the bucketing policy buys — steady-state throughput on a
+ragged request-size stream. The naive baseline jits one BMU call per request
+shape (what ``TopoMap.transform`` did pre-MapService): every new ragged size
+pays a compile. The bucketed engine pays at most one compile per bucket and
+amortises across the whole stream. Reports samples/s, compile counts, and
+padding overhead.
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import numpy as np
+
+from benchmarks import common
+from repro.api import AFMConfig
+from repro.core import afm
+from repro.core import search as search_lib
+from repro.serving.maps import BmuEngine
+
+
+def _ragged_stream(key, n_requests: int, dim: int, max_b: int):
+    """Request sizes drawn log-uniform in [1, max_b] — serving-like raggedness."""
+    sizes = np.unique(np.exp(np.random.RandomState(7).uniform(
+        0, np.log(max_b), n_requests)).astype(int) + 1)
+    np.random.RandomState(8).shuffle(sizes)
+    data = jax.random.normal(key, (max_b + 1, dim))
+    return [np.asarray(data[:s]) for s in sizes]
+
+
+def run(quick: bool = True):
+    side, dim = (30, 36) if quick else (50, 784)
+    n_requests = 40 if quick else 200
+    cfg = AFMConfig(side=side, dim=dim)
+    key = jax.random.PRNGKey(0)
+    w = afm.init(key, cfg).w
+    stream = _ragged_stream(jax.random.fold_in(key, 1), n_requests, dim, 2048)
+    total = sum(s.shape[0] for s in stream)
+
+    # naive: one jit signature per distinct request size
+    naive = jax.jit(search_lib.exact_bmu)
+    t0 = time.time()
+    for s in stream:
+        naive(w, s)[0].block_until_ready()
+    t_naive = time.time() - t0
+
+    engine = BmuEngine(use_pallas=False)
+    t0 = time.time()
+    for s in stream:
+        engine.bmu(w, s)[0].block_until_ready()
+    t_bucketed = time.time() - t0
+
+    # steady-state (everything compiled): re-run the stream
+    t0 = time.time()
+    for s in stream:
+        engine.bmu(w, s)[0].block_until_ready()
+    t_steady = time.time() - t0
+
+    derived = {
+        "requests": len(stream),
+        "samples": total,
+        "naive_s": round(t_naive, 3),
+        "naive_compiles": len(stream),
+        "bucketed_s": round(t_bucketed, 3),
+        "bucketed_compiles": engine.trace_count,
+        "steady_samples_per_s": round(total / t_steady),
+        "pad_overhead": round(engine.padded / (2 * total), 3),
+        "cold_speedup": round(t_naive / t_bucketed, 2),
+    }
+    common.save("serving_bench", derived)
+    return None, derived
+
+
+if __name__ == "__main__":
+    print(run()[1])

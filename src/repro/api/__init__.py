@@ -3,19 +3,24 @@
     from repro.api import TopoMap
     tm = TopoMap(side=10, dim=36, batch=16).fit(xtr, ytr)
     pred = tm.predict(xte)
+    tm.save("artifacts/my-map")        # ... later: TopoMap.load(...)
 
 One ``TopoMap`` surface, four execution backends (``reference``, ``batched``,
 ``pallas``, ``sharded``) behind a string-keyed registry — see
-``repro.api.backends`` and DESIGN.md.
+``repro.api.backends`` and DESIGN.md. Trained maps persist as versioned
+artifacts, optionally organised in a ``MapStore`` (``repro.api.persistence``)
+and served by ``repro.serving.maps.MapService``.
 """
 from repro.api.backends import (BACKENDS, Backend, available_backends,
                                 get_backend, register_backend)
+from repro.api.persistence import (MapArtifact, MapStore, load_artifact,
+                                   save_artifact)
 from repro.api.topomap import TopoMap
 from repro.core.afm import AFMConfig, AFMState
 from repro.core.classifier import precision_recall
 
 __all__ = [
-    "AFMConfig", "AFMState", "BACKENDS", "Backend", "TopoMap",
-    "available_backends", "get_backend", "precision_recall",
-    "register_backend",
+    "AFMConfig", "AFMState", "BACKENDS", "Backend", "MapArtifact",
+    "MapStore", "TopoMap", "available_backends", "get_backend",
+    "load_artifact", "precision_recall", "register_backend", "save_artifact",
 ]

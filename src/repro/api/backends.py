@@ -193,13 +193,7 @@ class PallasBackend(_DenseBackend):
 
     def __init__(self, cfg: AFMConfig, *, search: str = "exact",
                  use_pallas: bool | None = None, interpret: bool | None = None):
-        on_tpu = jax.default_backend() == "tpu"
-        if use_pallas is None:
-            # asking for interpret mode off-TPU means "run the real kernel
-            # bodies"; otherwise CPU uses the jnp oracle fallback
-            use_pallas = on_tpu or bool(interpret)
-        if interpret is None:
-            interpret = not on_tpu
+        use_pallas, interpret = bmu_ops.resolve_flags(use_pallas, interpret)
         self.cfg = cfg
         self._jit_step = None
         self.use_pallas = use_pallas

@@ -1,0 +1,256 @@
+"""Trained-map persistence: versioned artifacts and the ``MapStore`` registry.
+
+An **artifact** is a directory that fully describes one trained map:
+
+    artifact/
+      manifest.json         # format marker + version, AFMConfig, labeling,
+                            # backend provenance, unit-label presence
+      state.msgpack         # dense AFMState (training/checkpoint format)
+      unit_labels.msgpack   # optional (N,) int32 unit labels
+
+The manifest carries everything needed to rebuild the ``like`` pytree for
+``checkpoint.restore``, so loading needs no pickle and no trust in the
+payload beyond shapes. ``TopoMap.save`` / ``TopoMap.load`` and
+``repro.serving.maps.MapService`` both speak this format.
+
+A **MapStore** is a directory of artifacts keyed ``name@version``:
+
+    store_root/
+      satimage-10x10/v1/    # one artifact per version
+      satimage-10x10/v2/
+
+``store.save(tm, "satimage-10x10")`` auto-increments the version;
+``store.load("satimage-10x10")`` resolves to the latest, or pin with
+``"satimage-10x10@1"``.
+"""
+from __future__ import annotations
+
+import dataclasses
+import errno
+import json
+import os
+import re
+import shutil
+from typing import Any
+
+import jax.numpy as jnp
+
+from repro.core.afm import AFMConfig, AFMState
+from repro.training import checkpoint as ckpt
+
+ARTIFACT_FORMAT = "topomap-artifact"
+ARTIFACT_VERSION = 1
+
+_MANIFEST = "manifest.json"
+_STATE = "state.msgpack"
+_UNIT_LABELS = "unit_labels.msgpack"
+_NAME_RE = re.compile(r"^[A-Za-z0-9][A-Za-z0-9._-]*$")
+
+
+@dataclasses.dataclass(frozen=True)
+class MapArtifact:
+    """A loaded artifact: everything ``TopoMap.load`` / ``MapService`` need."""
+    cfg: AFMConfig
+    state: AFMState
+    unit_labels: jnp.ndarray | None
+    labeling: str
+    backend: str
+    meta: dict[str, Any]
+
+
+def _state_like(cfg: AFMConfig) -> AFMState:
+    n = cfg.n_units
+    return AFMState(
+        w=jnp.zeros((n, cfg.dim), jnp.float32),
+        c=jnp.zeros((n,), jnp.int32),
+        far=jnp.zeros((n, cfg.phi), jnp.int32),
+        near=jnp.zeros((n, 4), jnp.int32),
+        i=jnp.int32(0),
+    )
+
+
+def _config_from_dict(d: dict[str, Any]) -> AFMConfig:
+    known = {f.name for f in dataclasses.fields(AFMConfig)}
+    unknown = sorted(set(d) - known)
+    if unknown:
+        raise ValueError(
+            f"artifact config has unknown AFMConfig fields {unknown} — "
+            f"written by a newer repro?")
+    return AFMConfig(**d)
+
+
+def save_artifact(path: str, *, cfg: AFMConfig, state: AFMState,
+                  unit_labels=None, labeling: str = "nearest",
+                  backend: str = "batched",
+                  extra_meta: dict[str, Any] | None = None) -> str:
+    """Write a trained map as a versioned artifact directory. Returns path.
+
+    The artifact is assembled in a sibling temp directory and swapped in by
+    rename, so a crash never leaves a *mixed* artifact — a reader sees the
+    complete old version, the complete new version, or (in the brief
+    overwrite window) a clean missing-manifest error, never old metadata
+    paired with new payloads.
+    """
+    path = os.path.abspath(path)
+    if os.path.exists(path) and not os.path.isdir(path):
+        raise ValueError(f"{path} exists and is not a directory — refusing "
+                         f"to overwrite it with an artifact")
+    manifest = {
+        "format": ARTIFACT_FORMAT,
+        "format_version": ARTIFACT_VERSION,
+        "config": dataclasses.asdict(cfg),
+        "labeling": labeling,
+        "backend": backend,
+        "has_unit_labels": unit_labels is not None,
+        "samples_consumed": int(state.i),
+    }
+    if extra_meta:
+        manifest["extra"] = extra_meta
+    tmp_dir = f"{path}.tmp-{os.getpid()}"
+    if os.path.isdir(tmp_dir):
+        shutil.rmtree(tmp_dir)
+    os.makedirs(tmp_dir)
+    try:
+        ckpt.save(os.path.join(tmp_dir, _STATE), state)
+        if unit_labels is not None:
+            ckpt.save(os.path.join(tmp_dir, _UNIT_LABELS),
+                      jnp.asarray(unit_labels, jnp.int32))
+        with open(os.path.join(tmp_dir, _MANIFEST), "w") as f:
+            json.dump(manifest, f, indent=2, sort_keys=True)
+            f.write("\n")
+        try:
+            # atomic when the target is absent or an empty directory (a
+            # fresh MapStore version reservation stays claimed throughout)
+            os.replace(tmp_dir, path)
+        except OSError as e:
+            if e.errno not in (errno.ENOTEMPTY, errno.EEXIST):
+                raise
+            # overwriting a non-empty artifact: a reader in this brief
+            # window sees a clean missing-manifest error, never mixed files
+            shutil.rmtree(path)
+            os.replace(tmp_dir, path)
+    finally:
+        if os.path.isdir(tmp_dir):
+            shutil.rmtree(tmp_dir, ignore_errors=True)
+    return path
+
+
+def load_artifact(path: str) -> MapArtifact:
+    """Load an artifact directory back into config + dense state (+ labels)."""
+    manifest_path = os.path.join(path, _MANIFEST)
+    if not os.path.isfile(manifest_path):
+        raise FileNotFoundError(f"{path}: no {_MANIFEST} — not a map artifact")
+    with open(manifest_path) as f:
+        manifest = json.load(f)
+    if manifest.get("format") != ARTIFACT_FORMAT:
+        raise ValueError(f"{path}: manifest format is "
+                         f"{manifest.get('format')!r}, not {ARTIFACT_FORMAT!r}")
+    version = manifest.get("format_version", 0)
+    if version > ARTIFACT_VERSION:
+        raise ValueError(
+            f"{path}: artifact format version {version} is newer than this "
+            f"reader (understands <= {ARTIFACT_VERSION})")
+    cfg = _config_from_dict(manifest["config"])
+    state = ckpt.restore(os.path.join(path, _STATE), _state_like(cfg))
+    unit_labels = None
+    if manifest.get("has_unit_labels"):
+        unit_labels = ckpt.restore(os.path.join(path, _UNIT_LABELS),
+                                   jnp.zeros((cfg.n_units,), jnp.int32))
+    return MapArtifact(cfg=cfg, state=state, unit_labels=unit_labels,
+                       labeling=manifest.get("labeling", "nearest"),
+                       backend=manifest.get("backend", "batched"),
+                       meta=manifest)
+
+
+def parse_spec(spec: str) -> tuple[str, int | None]:
+    """``'name'`` -> (name, None) = latest; ``'name@3'`` -> (name, 3)."""
+    name, sep, version = spec.partition("@")
+    if not _NAME_RE.match(name):
+        raise ValueError(f"invalid map name {name!r} (want [A-Za-z0-9._-]+)")
+    if not sep:
+        return name, None
+    if not version.isdigit():
+        raise ValueError(f"invalid map spec {spec!r} (want name@INTEGER)")
+    return name, int(version)
+
+
+class MapStore:
+    """Directory registry of map artifacts keyed ``name@version``."""
+
+    def __init__(self, root: str):
+        self.root = root
+
+    # ----------------------------------------------------------- resolution
+
+    def versions(self, name: str) -> list[int]:
+        """Sorted versions present for ``name`` (empty when unknown)."""
+        d = os.path.join(self.root, name)
+        if not os.path.isdir(d):
+            return []
+        out = []
+        for entry in os.listdir(d):
+            m = re.fullmatch(r"v(\d+)", entry)
+            if m and os.path.isfile(os.path.join(d, entry, _MANIFEST)):
+                out.append(int(m.group(1)))
+        return sorted(out)
+
+    def names(self) -> list[str]:
+        if not os.path.isdir(self.root):
+            return []
+        return sorted(n for n in os.listdir(self.root) if self.versions(n))
+
+    def list(self) -> list[str]:
+        """Every ``name@version`` key in the store."""
+        return [f"{n}@{v}" for n in self.names() for v in self.versions(n)]
+
+    def path(self, spec: str) -> str:
+        """Artifact directory for ``name[@version]`` (latest when omitted)."""
+        name, version = parse_spec(spec)
+        versions = self.versions(name)
+        if not versions:
+            raise KeyError(f"map {name!r} not in store {self.root!r}; "
+                           f"have {self.names()}")
+        if version is None:
+            version = versions[-1]
+        elif version not in versions:
+            raise KeyError(f"map {name!r} has versions {versions}, "
+                           f"not {version}")
+        return os.path.join(self.root, name, f"v{version}")
+
+    # ------------------------------------------------------------ save/load
+
+    def save(self, tm, name: str, *, extra_meta=None) -> str:
+        """Persist a fitted ``TopoMap`` under the next version of ``name``.
+
+        Returns the ``name@version`` key of the new artifact.
+        """
+        parsed, version = parse_spec(name)
+        if version is not None:
+            raise ValueError(f"store.save takes a bare name, got {name!r} "
+                             f"(versions auto-increment)")
+        # reserve the version directory with an exclusive mkdir so two
+        # concurrent savers can never clobber the same version key; the
+        # artifact write renames over the still-reserved empty dir atomically
+        version = (self.versions(parsed) or [0])[-1]
+        os.makedirs(os.path.join(self.root, parsed), exist_ok=True)
+        while True:
+            version += 1
+            path = os.path.join(self.root, parsed, f"v{version}")
+            try:
+                os.mkdir(path)
+                break
+            except FileExistsError:
+                continue
+        tm.save(path, extra_meta=extra_meta)
+        return f"{parsed}@{version}"
+
+    def load_artifact(self, spec: str) -> MapArtifact:
+        return load_artifact(self.path(spec))
+
+    def load(self, spec: str, **topomap_kwargs):
+        """Load ``name[@version]`` back into a ``TopoMap`` estimator."""
+        from repro.api.topomap import TopoMap
+        return TopoMap.load(self.path(spec), **topomap_kwargs)
+
+    def __repr__(self):
+        return f"MapStore({self.root!r}, maps={self.list()})"

@@ -11,6 +11,12 @@ immutable ``AFMState`` pytree, all randomness flows from explicit keys.
     units = tm.transform(xte)          # BMU projection
     pred = tm.predict(xte)             # majority/nearest unit-label classify
     q = tm.quantization_error(xte)
+    tm.save("artifacts/satimage-map")  # versioned artifact; TopoMap.load()
+
+Inference (``transform`` / ``predict`` / ``quantization_error``) runs on the
+same bucket-padded jit engine that backs ``repro.serving.maps.MapService``:
+ragged request sizes are padded up to a small set of buckets so the hot
+path compiles once per bucket, not once per request shape.
 """
 from __future__ import annotations
 
@@ -65,6 +71,7 @@ class TopoMap:
         self.unit_labels_: jnp.ndarray | None = None
         self._backend_state = None
         self._next_key = None
+        self._engine = None
 
     # ------------------------------------------------------------------ fit
 
@@ -119,35 +126,80 @@ class TopoMap:
         return self
 
     @classmethod
-    def from_state(cls, state: AFMState, cfg: AFMConfig,
-                   **kwargs) -> "TopoMap":
+    def from_state(cls, state: AFMState, cfg: AFMConfig, *,
+                   unit_labels=None, **kwargs) -> "TopoMap":
         """Wrap an existing trained dense ``AFMState`` (e.g. an ``AFMProbe``'s
         map) in the estimator surface — transform/predict/metrics work
         immediately, and ``partial_fit`` continues training through the
-        chosen backend."""
+        chosen backend. Passing ``unit_labels`` (N,) restores a classifier
+        map: ``predict`` works without relabeling."""
         tm = cls(cfg, **kwargs)
         tm.state_ = state
         tm._backend_state = tm.backend.from_dense(state)
+        if unit_labels is not None:
+            tm.unit_labels_ = jnp.asarray(unit_labels, jnp.int32)
         return tm
+
+    # ---------------------------------------------------------- persistence
+
+    def save(self, path: str, *, extra_meta: dict | None = None) -> str:
+        """Write the fitted map as a versioned artifact directory (config,
+        dense state, unit labels, labeling/backend metadata) — see
+        ``repro.api.persistence``. Returns ``path``."""
+        self._check_fitted()
+        from repro.api import persistence
+        return persistence.save_artifact(
+            path, cfg=self.cfg, state=self.state_,
+            unit_labels=self.unit_labels_, labeling=self.labeling,
+            backend=self.backend.name, extra_meta=extra_meta)
+
+    @classmethod
+    def load(cls, path: str, *, backend: str | None = None,
+             **kwargs) -> "TopoMap":
+        """Load a saved artifact back into an estimator.
+
+        The stored backend and labeling are used unless overridden; the
+        round-trip is bit-identical on ``transform`` and ``predict``.
+        """
+        from repro.api import persistence
+        art = persistence.load_artifact(path)
+        kwargs.setdefault("labeling", art.labeling)
+        return cls.from_state(art.state, art.cfg,
+                              unit_labels=art.unit_labels,
+                              backend=backend or art.backend, **kwargs)
 
     # ------------------------------------------------------------ inference
 
+    @property
+    def engine(self):
+        """The bucket-padded jit BMU engine shared with ``MapService``.
+
+        Built lazily from the backend's kernel flags: the pallas backend
+        serves through the same kernel path it trains with; flagless
+        backends auto-resolve exactly like ``MapService`` (the kernel on
+        TPU, the jnp oracle elsewhere), so the two surfaces stay one
+        hot path on every platform.
+        """
+        if self._engine is None:
+            from repro.serving import maps as maps_lib
+            self._engine = maps_lib.BmuEngine(
+                use_pallas=getattr(self.backend, "use_pallas", None),
+                interpret=getattr(self.backend, "interpret", None))
+        return self._engine
+
     def transform(self, data, *, lattice: bool = False,
-                  chunk: int = 4096) -> jnp.ndarray:
+                  chunk: int | None = None) -> jnp.ndarray:
         """BMU projection. Returns (B,) flat unit indices, or (B, 2)
-        lattice (row, col) coordinates when ``lattice=True``."""
+        lattice (row, col) coordinates when ``lattice=True``. ``chunk``
+        optionally caps the engine's largest bucket (memory ceiling)."""
         self._check_fitted()
-        data = jnp.asarray(data, jnp.float32)
-        idx = [jnp.zeros((0,), jnp.int32)]
-        for lo in range(0, data.shape[0], chunk):
-            bmu, _ = self.backend.bmu(self.state_.w, data[lo:lo + chunk])
-            idx.append(bmu.astype(jnp.int32))
-        flat = jnp.concatenate(idx, axis=0)
+        flat, _ = self.engine.bmu(self.state_.w,
+                                  jnp.asarray(data, jnp.float32), cap=chunk)
         if not lattice:
             return flat
         return jnp.stack([flat // self.cfg.side, flat % self.cfg.side], axis=-1)
 
-    def predict(self, data, chunk: int = 4096) -> jnp.ndarray:
+    def predict(self, data, chunk: int | None = None) -> jnp.ndarray:
         """Classify each sample with its BMU's unit label."""
         self._check_fitted()
         if self.unit_labels_ is None:
@@ -161,8 +213,9 @@ class TopoMap:
     def quantization_error(self, data) -> float:
         """Q: mean Euclidean distance of samples to their BMU weight."""
         self._check_fitted()
-        return float(metrics.quantization_error(
-            self.state_.w, jnp.asarray(data, jnp.float32)))
+        _, q2 = self.engine.bmu(self.state_.w,
+                                jnp.asarray(data, jnp.float32))
+        return float(jnp.mean(jnp.sqrt(q2)))
 
     def topographic_error(self, data) -> float:
         """T: fraction of samples whose two best units are not adjacent."""
@@ -184,18 +237,7 @@ class TopoMap:
         """(side, side) mean distance of each unit to its lattice neighbours
         (low = coherent region) — the classic U-matrix view of the map."""
         self._check_fitted()
-        side = self.cfg.side
-        w = np.asarray(self.state_.w).reshape(side, side, -1)
-        dists = np.zeros((side, side))
-        norms = np.zeros((side, side))
-        for dr, dc in ((-1, 0), (1, 0), (0, -1), (0, 1)):
-            r0, r1 = max(dr, 0), side + min(dr, 0)
-            q0, q1 = max(dc, 0), side + min(dc, 0)
-            d = np.linalg.norm(w[r0:r1, q0:q1] - w[r0 - dr:r1 - dr,
-                                                   q0 - dc:q1 - dc], axis=-1)
-            dists[r0:r1, q0:q1] += d
-            norms[r0:r1, q0:q1] += 1.0
-        return dists / norms
+        return metrics.u_matrix(self.state_.w, self.cfg.side)
 
     # ------------------------------------------------------------- plumbing
 

@@ -8,6 +8,7 @@
 from __future__ import annotations
 
 import jax.numpy as jnp
+import numpy as np
 
 from repro.core import search as search_lib
 
@@ -30,6 +31,22 @@ def topological_error(w: jnp.ndarray, samples: jnp.ndarray, side: int):
     r2, c2 = b2 // side, b2 % side
     manhattan = jnp.abs(r1 - r2) + jnp.abs(c1 - c2)
     return jnp.mean((manhattan > 1).astype(jnp.float32))
+
+
+def u_matrix(w: jnp.ndarray, side: int) -> np.ndarray:
+    """(side, side) mean distance of each unit to its lattice neighbours
+    (low = coherent region) — the classic U-matrix view of the map."""
+    w = np.asarray(w).reshape(side, side, -1)
+    dists = np.zeros((side, side))
+    norms = np.zeros((side, side))
+    for dr, dc in ((-1, 0), (1, 0), (0, -1), (0, 1)):
+        r0, r1 = max(dr, 0), side + min(dr, 0)
+        q0, q1 = max(dc, 0), side + min(dc, 0)
+        d = np.linalg.norm(w[r0:r1, q0:q1] - w[r0 - dr:r1 - dr,
+                                               q0 - dc:q1 - dc], axis=-1)
+        dists[r0:r1, q0:q1] += d
+        norms[r0:r1, q0:q1] += 1.0
+    return dists / norms
 
 
 def search_error(w, near, far, samples, key, e: int, greedy_use_far: bool = True):

@@ -11,6 +11,20 @@ from repro.kernels.bmu import ref
 from repro.kernels.bmu.bmu import bmu_pallas
 
 
+def resolve_flags(use_pallas: bool | None,
+                  interpret: bool | None) -> tuple[bool, bool]:
+    """Resolve auto (None) kernel flags: the compiled kernel on TPU, the jnp
+    oracle elsewhere — unless ``interpret=True`` forces the real kernel body
+    in the Pallas interpreter. Single policy shared by ``bmu``, the pallas
+    training backend, and the serving ``BmuEngine``."""
+    on_tpu = jax.default_backend() == "tpu"
+    if use_pallas is None:
+        use_pallas = on_tpu or bool(interpret)
+    if interpret is None:
+        interpret = not on_tpu
+    return use_pallas, interpret
+
+
 def _pad_to(x, mult, axis, value=0.0):
     pad = (-x.shape[axis]) % mult
     if pad == 0:
@@ -23,12 +37,16 @@ def _pad_to(x, mult, axis, value=0.0):
 @functools.partial(jax.jit, static_argnames=("block_b", "block_n", "use_pallas",
                                              "interpret"))
 def bmu(w: jnp.ndarray, s: jnp.ndarray, *, block_b: int = 128,
-        block_n: int = 128, use_pallas: bool = True, interpret: bool = True):
+        block_n: int = 128, use_pallas: bool | None = None,
+        interpret: bool | None = None):
     """argmin_j |w_j - s_i|^2 over units. Returns (idx (B,), q2 (B,)).
 
-    ``interpret=True`` executes the kernel body in Python on CPU (this
-    container); on real TPU pass interpret=False.
+    Both flags default to auto: the compiled kernel on TPU, the jnp oracle
+    elsewhere. Forcing ``interpret=True`` off-TPU runs the real kernel body
+    in the Pallas interpreter (slow; parity tests); on real TPU pass
+    interpret=False explicitly or rely on auto.
     """
+    use_pallas, interpret = resolve_flags(use_pallas, interpret)
     if not use_pallas:
         return ref.bmu_ref(w, s)
     n, d = w.shape

@@ -1,0 +1,147 @@
+"""Trained-map serving launcher — ``MapService`` as a CLI (mirrors
+``train_map``).
+
+Loads a saved map from an artifact directory or a ``MapStore`` and runs
+request batches through a serving endpoint, reporting throughput:
+
+    # train + save, then serve a .npy batch through the transform endpoint
+    PYTHONPATH=src python -m repro.launch.train_map --dataset satimage \
+        --side 10 --save-artifact /tmp/satimage-map
+    PYTHONPATH=src python -m repro.launch.serve_map \
+        --artifact /tmp/satimage-map --requests queries.npy
+
+    # store-resolved map, newline-delimited JSON requests from stdin
+    PYTHONPATH=src python -m repro.launch.serve_map --store /tmp/maps \
+        --map satimage-10x10@2 --requests - --endpoint predict
+
+Request formats: ``.npy`` (B, D) arrays, or newline-delimited JSON — each
+line one sample, either a bare array ``[0.1, ...]`` or ``{"x": [...]}``.
+``--random N`` generates N Gaussian queries for smoke runs.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+import time
+
+import jax
+import numpy as np
+
+from repro.serving.maps import DEFAULT_BUCKETS, MapService
+
+ENDPOINTS = ("transform", "predict", "quantization-error", "u-matrix")
+
+
+def load_requests(path: str, dim: int) -> np.ndarray:
+    """(B, D) float32 requests from .npy or newline-delimited JSON."""
+    if path.endswith(".npy"):
+        x = np.load(path)
+    else:
+        f = sys.stdin if path == "-" else open(path)
+        try:
+            rows = []
+            for line in f:
+                line = line.strip()
+                if not line:
+                    continue
+                obj = json.loads(line)
+                if isinstance(obj, dict):
+                    obj = obj["x"]
+                rows.append(obj)
+        finally:
+            if f is not sys.stdin:
+                f.close()
+        x = np.asarray(rows)
+    x = np.atleast_2d(np.asarray(x, np.float32))
+    if x.ndim != 2 or x.shape[1] != dim:
+        raise SystemExit(f"requests have shape {x.shape}, want (B, {dim})")
+    return x
+
+
+def build_service(args) -> MapService:
+    buckets = (tuple(int(b) for b in args.buckets.split(","))
+               if args.buckets else DEFAULT_BUCKETS)
+    opts = dict(buckets=buckets, update_backend=args.update_backend)
+    if args.artifact:
+        return MapService.from_artifact(args.artifact, **opts)
+    return MapService.from_store(args.store, args.map, **opts)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    src = ap.add_mutually_exclusive_group(required=True)
+    src.add_argument("--artifact", default=None,
+                     help="artifact directory (TopoMap.save output)")
+    src.add_argument("--store", default=None, help="MapStore root directory")
+    ap.add_argument("--map", default=None,
+                    help="store key, 'name[@version]' (latest when omitted)")
+    ap.add_argument("--requests", default=None,
+                    help=".npy / newline-delimited JSON file, or '-' (stdin)")
+    ap.add_argument("--random", type=int, default=0,
+                    help="serve N random Gaussian queries instead of a file")
+    ap.add_argument("--endpoint", default="transform", choices=ENDPOINTS)
+    ap.add_argument("--batch", type=int, default=1024,
+                    help="request batch size fed to the service per call")
+    ap.add_argument("--lattice", action="store_true",
+                    help="transform endpoint: return (row, col) coordinates")
+    ap.add_argument("--buckets", default=None,
+                    help="comma-separated padding buckets (e.g. 64,512)")
+    ap.add_argument("--update-backend", default="batched",
+                    help="backend for online updates (unused by read paths)")
+    ap.add_argument("--output", default=None,
+                    help="write endpoint outputs to this .npy file")
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+    if args.store and not args.map:
+        raise SystemExit("--store needs --map 'name[@version]'")
+
+    svc = build_service(args)
+    cfg = svc.cfg
+    print(f"serving map {cfg.side}x{cfg.side} dim={cfg.dim} "
+          f"labeling={svc.labeling} buckets={svc.engine.buckets} "
+          f"devices={len(jax.devices())}")
+
+    if args.endpoint == "u-matrix":
+        umat = svc.u_matrix()
+        print(f"u-matrix mean={umat.mean():.4f} max={umat.max():.4f}")
+        out = umat
+    else:
+        if args.requests:
+            reqs = load_requests(args.requests, cfg.dim)
+        elif args.random:
+            reqs = np.asarray(jax.random.normal(
+                jax.random.PRNGKey(args.seed), (args.random, cfg.dim)))
+        else:
+            raise SystemExit("give --requests FILE or --random N")
+        outs = []
+        t0 = time.time()
+        for lo in range(0, reqs.shape[0], args.batch):
+            block = reqs[lo:lo + args.batch]
+            if args.endpoint == "transform":
+                outs.append(np.asarray(
+                    svc.transform(block, lattice=args.lattice)))
+            elif args.endpoint == "predict":
+                outs.append(np.asarray(svc.predict(block)))
+            else:
+                outs.append(np.float32(svc.quantization_error(block)))
+        wall = time.time() - t0
+        if args.endpoint == "quantization-error":
+            out = np.asarray(outs)
+            print(f"quantization error per batch: "
+                  f"{[f'{float(q):.4f}' for q in outs]}")
+        else:
+            out = np.concatenate(outs, axis=0)
+        s = svc.stats
+        print(f"served {s.samples} samples in {s.seconds:.3f}s engine-time "
+              f"/ {wall:.3f}s wall ({s.throughput():.0f} samples/s), "
+              f"{s.requests} requests, {svc.compiles} compiles")
+
+    print(f"output shape: {tuple(np.asarray(out).shape)}")
+    if args.output:
+        np.save(args.output, np.asarray(out))
+        print(f"wrote {args.output}")
+
+
+if __name__ == "__main__":
+    main()

@@ -14,6 +14,12 @@ reports map quality + classification metrics:
     # Pallas kernels in interpreter mode (slow; CPU validation):
     PYTHONPATH=src python -m repro.launch.train_map --dataset letters \
         --backend pallas --interpret
+
+    # persist the fitted map for repro.launch.serve_map:
+    PYTHONPATH=src python -m repro.launch.train_map --dataset satimage \
+        --save-artifact /tmp/satimage-map           # one artifact dir
+    PYTHONPATH=src python -m repro.launch.train_map --dataset satimage \
+        --store /tmp/maps                           # versioned MapStore entry
 """
 from __future__ import annotations
 
@@ -74,6 +80,12 @@ def main():
     ap.add_argument("--labeling", default="nearest",
                     choices=("nearest", "majority"))
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--save-artifact", default=None,
+                    help="write the fitted map to this artifact directory")
+    ap.add_argument("--store", default=None,
+                    help="register the fitted map in this MapStore root")
+    ap.add_argument("--name", default=None,
+                    help="store key name (default: DATASET-SIDExSIDE)")
     args = ap.parse_args()
 
     spec = DATASETS[args.dataset]
@@ -110,6 +122,16 @@ def main():
     prec, rec = precision_recall(pred, yte, spec.classes)
     print(f"classification: acc={acc:.3f} precision={float(prec):.3f} "
           f"recall={float(rec):.3f} (chance={1.0 / spec.classes:.3f})")
+
+    meta = {"dataset": args.dataset, "accuracy": acc}
+    if args.save_artifact:
+        tm.save(args.save_artifact, extra_meta=meta)
+        print(f"saved artifact -> {args.save_artifact}")
+    if args.store:
+        from repro.api import MapStore
+        name = args.name or f"{args.dataset}-{args.side}x{args.side}"
+        spec_key = MapStore(args.store).save(tm, name, extra_meta=meta)
+        print(f"saved to store {args.store} as {spec_key}")
 
 
 if __name__ == "__main__":

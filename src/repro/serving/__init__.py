@@ -1,3 +1,9 @@
-from repro.serving.serve_step import make_decode_step, make_prefill, init_serving_cache
+"""Serving: LM decode steps (``serve_step``) and trained-topographic-map
+batched inference (``maps.MapService`` — see ``repro.launch.serve_map``)."""
+from repro.serving.maps import (DEFAULT_BUCKETS, BmuEngine, MapService,
+                                ServiceStats)
+from repro.serving.serve_step import (init_serving_cache, make_decode_step,
+                                      make_prefill)
 
-__all__ = ["make_decode_step", "make_prefill", "init_serving_cache"]
+__all__ = ["BmuEngine", "DEFAULT_BUCKETS", "MapService", "ServiceStats",
+           "init_serving_cache", "make_decode_step", "make_prefill"]

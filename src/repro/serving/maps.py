@@ -1,0 +1,327 @@
+"""MapService — batched inference serving for trained topographic maps.
+
+The paper decouples training from use; this module is the "use" half. Two
+layers:
+
+``BmuEngine``
+    The shared batched-inference hot path: requests are padded up to a
+    small set of **buckets** and dispatched through one jit-compiled BMU
+    search, so the engine compiles at most once per (bucket, map-shape)
+    instead of once per ragged request size. On TPU the search runs the
+    ``kernels.bmu`` Pallas kernel; elsewhere the jnp oracle. A trace-time
+    counter (``trace_count``) makes the compile-once contract testable.
+    ``TopoMap.transform`` / ``predict`` run on this same engine.
+
+``MapService``
+    A serving front end over one map: ``transform`` / ``predict`` /
+    ``quantization_error`` / ``u_matrix`` endpoints, request statistics,
+    and **hot online updates** — ``update`` advances the served map by one
+    ``partial_fit``-style training step and atomically swaps the new state
+    in (readers always see a consistent map; in-flight requests finish on
+    the old weights). Construct from a fitted estimator, an artifact
+    directory, or a ``MapStore`` entry (``repro.api.persistence``).
+"""
+from __future__ import annotations
+
+import dataclasses
+import threading
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import metrics
+from repro.core import search as search_lib
+from repro.core.afm import AFMConfig, AFMState
+from repro.kernels.bmu import ops as bmu_ops
+
+#: Request sizes are padded up to the smallest fitting bucket; larger
+#: requests are chunked by the top bucket. Geometric spacing bounds padding
+#: waste at ~8x worst case while keeping the compile count at four.
+DEFAULT_BUCKETS = (8, 64, 512, 4096)
+
+
+class BmuEngine:
+    """Bucket-padded, jit-compiled exact-BMU search over a dense map.
+
+    ``use_pallas`` / ``interpret`` default to auto: the Pallas kernel on
+    TPU, the jnp oracle elsewhere (matching ``kernels.bmu.ops``).
+    """
+
+    def __init__(self, *, buckets=DEFAULT_BUCKETS,
+                 use_pallas: bool | None = None,
+                 interpret: bool | None = None):
+        self.use_pallas, self.interpret = bmu_ops.resolve_flags(use_pallas,
+                                                                interpret)
+        buckets = tuple(sorted({int(b) for b in buckets}))
+        if not buckets or buckets[0] < 1:
+            raise ValueError(f"buckets must be positive ints, got {buckets!r}")
+        self.buckets = buckets
+        self.trace_count = 0      # incremented at trace time == compile count
+        self.padded = 0           # total pad rows added across calls
+        self._counter_lock = threading.Lock()
+        self._call = jax.jit(self._traced)
+
+    def _traced(self, w, s):
+        # Runs only when jax traces a new (bucket, map-shape) signature, so
+        # this Python side effect counts compilations, not calls.
+        with self._counter_lock:
+            self.trace_count += 1
+        if self.use_pallas:
+            return bmu_ops.bmu(w, s, use_pallas=True, interpret=self.interpret)
+        return search_lib.exact_bmu(w, s)
+
+    def _plan(self, cap: int | None) -> tuple[int, ...]:
+        if cap is None:
+            return self.buckets
+        cap = max(1, int(cap))
+        return tuple(b for b in self.buckets if b < cap) + (cap,)
+
+    def bmu(self, w: jnp.ndarray, data: jnp.ndarray, *,
+            cap: int | None = None) -> tuple[jnp.ndarray, jnp.ndarray]:
+        """argmin_j |w_j - s_i|^2 for a (B, D) request of any B.
+
+        Returns (idx (B,) int32, q2 (B,) float32). ``cap`` bounds the
+        largest chunk (legacy ``chunk=`` escape hatch for memory ceilings).
+        """
+        data = jnp.asarray(data, jnp.float32)
+        if data.ndim != 2:
+            raise ValueError(f"expected (B, D) request, got shape "
+                             f"{data.shape}")
+        n = data.shape[0]
+        if n == 0:
+            return jnp.zeros((0,), jnp.int32), jnp.zeros((0,), jnp.float32)
+        buckets = self._plan(cap)
+        idxs, q2s = [], []
+        pos = 0
+        while pos < n:
+            take = min(n - pos, buckets[-1])
+            bucket = next(b for b in buckets if b >= take)
+            block = data[pos:pos + take]
+            if take < bucket:
+                block = jnp.pad(block, ((0, bucket - take), (0, 0)))
+                with self._counter_lock:
+                    self.padded += bucket - take
+            idx, q2 = self._call(w, block)
+            idxs.append(idx[:take].astype(jnp.int32))
+            q2s.append(q2[:take])
+            pos += take
+        if len(idxs) == 1:
+            return idxs[0], q2s[0]
+        return jnp.concatenate(idxs), jnp.concatenate(q2s)
+
+
+@dataclasses.dataclass
+class ServiceStats:
+    """Rolling counters for one ``MapService`` (samples/s, padding waste)."""
+    requests: int = 0
+    samples: int = 0
+    seconds: float = 0.0
+    updates: int = 0
+    swaps: int = 0
+
+    def throughput(self) -> float:
+        return self.samples / self.seconds if self.seconds > 0 else 0.0
+
+
+class _Unset:
+    pass
+
+
+_UNSET = _Unset()
+
+
+class MapService:
+    """Batched-inference service over one trained map.
+
+    State (``AFMState`` + optional unit labels) lives behind an atomic
+    swap: endpoints snapshot it once per request, ``swap``/``update``
+    replace it wholesale, so readers never observe a half-updated map.
+    Because the engine's jit cache is keyed on shapes only, swapping
+    same-shape weights never recompiles.
+    """
+
+    def __init__(self, cfg: AFMConfig, state: AFMState, *,
+                 unit_labels=None, labeling: str = "nearest",
+                 buckets=DEFAULT_BUCKETS, use_pallas: bool | None = None,
+                 interpret: bool | None = None,
+                 update_backend: str = "batched",
+                 update_backend_options: dict | None = None, seed: int = 0):
+        self._validate_state(cfg, state)
+        self.cfg = cfg
+        self.labeling = labeling
+        self.engine = BmuEngine(buckets=buckets, use_pallas=use_pallas,
+                                interpret=interpret)
+        self.stats = ServiceStats()
+        self._state = state
+        self._unit_labels = self._validate_labels(cfg, unit_labels)
+        self._lock = threading.Lock()           # guards the state snapshot
+        # serialises writers (update and external swap) against each other so
+        # an update's read-step-swap can't silently overwrite a concurrent
+        # swap; re-entrant because update() calls swap() while holding it
+        self._update_lock = threading.RLock()
+        self._update_backend_name = update_backend
+        self._update_backend_options = dict(update_backend_options or {})
+        self._update_backend = None
+        self._next_key = jax.random.PRNGKey(seed)
+
+    # --------------------------------------------------------- constructors
+
+    @classmethod
+    def from_estimator(cls, tm, **kwargs) -> "MapService":
+        """Serve a fitted ``TopoMap`` (shares no mutable state with it).
+
+        The estimator's resolved kernel flags carry over so the service's
+        BMU path is bit-identical to ``tm.transform`` on every platform.
+        """
+        kwargs.setdefault("labeling", tm.labeling)
+        kwargs.setdefault("use_pallas", tm.engine.use_pallas)
+        kwargs.setdefault("interpret", tm.engine.interpret)
+        return cls(tm.cfg, tm.state_, unit_labels=tm.unit_labels_, **kwargs)
+
+    @classmethod
+    def from_artifact(cls, path: str, **kwargs) -> "MapService":
+        """Serve a saved artifact directory (``TopoMap.save`` output)."""
+        from repro.api import persistence
+        art = persistence.load_artifact(path)
+        kwargs.setdefault("labeling", art.labeling)
+        return cls(art.cfg, art.state, unit_labels=art.unit_labels, **kwargs)
+
+    @classmethod
+    def from_store(cls, root: str, spec: str, **kwargs) -> "MapService":
+        """Serve ``name[@version]`` out of a ``MapStore`` directory."""
+        from repro.api import persistence
+        return cls.from_artifact(persistence.MapStore(root).path(spec),
+                                 **kwargs)
+
+    # ------------------------------------------------------------ endpoints
+
+    def transform(self, data, *, lattice: bool = False) -> jnp.ndarray:
+        """BMU projection: (B,) flat unit indices, or (B, 2) lattice
+        coordinates when ``lattice=True``."""
+        state, _ = self.snapshot()
+        idx, _ = self._serve(state.w, data)
+        if not lattice:
+            return idx
+        side = self.cfg.side
+        return jnp.stack([idx // side, idx % side], axis=-1)
+
+    def predict(self, data) -> jnp.ndarray:
+        """Classify each sample with its BMU's unit label."""
+        # one snapshot: weights and labels are always from the same map
+        # version, even when a swap lands mid-request
+        state, labels = self.snapshot()
+        if labels is None:
+            raise RuntimeError("predict endpoint needs unit labels — serve a "
+                               "labelled map or swap labels in")
+        idx, _ = self._serve(state.w, data)
+        return labels[idx]
+
+    def quantization_error(self, data) -> float:
+        """Mean Euclidean distance of the request batch to its BMUs."""
+        state, _ = self.snapshot()
+        _, q2 = self._serve(state.w, data)
+        return float(jnp.mean(jnp.sqrt(q2)))
+
+    def u_matrix(self) -> np.ndarray:
+        """(side, side) mean neighbour distance of the served map."""
+        state, _ = self.snapshot()
+        return metrics.u_matrix(state.w, self.cfg.side)
+
+    def _serve(self, w, data):
+        t0 = time.perf_counter()
+        idx, q2 = self.engine.bmu(w, data)
+        idx = jax.block_until_ready(idx)
+        with self._lock:
+            self.stats.requests += 1
+            self.stats.samples += int(idx.shape[0])
+            self.stats.seconds += time.perf_counter() - t0
+        return idx, q2
+
+    # --------------------------------------------------------- live updates
+
+    def snapshot(self) -> tuple[AFMState, jnp.ndarray | None]:
+        """Consistent (state, unit_labels) view of the served map."""
+        with self._lock:
+            return self._state, self._unit_labels
+
+    def swap(self, state: AFMState, unit_labels=_UNSET) -> None:
+        """Atomically replace the served map (and optionally its labels).
+
+        The new state must match the served (n_units, dim) so clients'
+        compiled signatures — and the meaning of unit indices — survive
+        the swap.
+        """
+        self._validate_state(self.cfg, state)
+        if unit_labels is not _UNSET:
+            unit_labels = self._validate_labels(self.cfg, unit_labels)
+        with self._update_lock:
+            with self._lock:
+                self._state = state
+                if unit_labels is not _UNSET:
+                    self._unit_labels = unit_labels
+                self.stats.swaps += 1
+
+    def update(self, batch, *, key: jax.Array | None = None):
+        """Hot online update: one ``partial_fit`` training step on the
+        served state, swapped in atomically. Returns the step's aux.
+
+        Unit labels are kept as-is (swap new ones in via ``swap`` after
+        relabeling offline). Updates are serialised; inference is never
+        blocked beyond the final swap.
+        """
+        batch = jnp.asarray(batch, jnp.float32)
+        with self._update_lock:
+            if key is None:
+                self._next_key, key = jax.random.split(self._next_key)
+            backend = self._backend()
+            state, _ = self.snapshot()
+            new_state, aux = backend.step(backend.from_dense(state), batch,
+                                          key)
+            self.swap(backend.to_dense(new_state))
+            with self._lock:
+                self.stats.updates += 1
+        return aux
+
+    def _backend(self):
+        if self._update_backend is None:
+            from repro.api import backends as backends_lib
+            self._update_backend = backends_lib.get_backend(
+                self._update_backend_name, self.cfg,
+                **self._update_backend_options)
+        return self._update_backend
+
+    # ------------------------------------------------------------- plumbing
+
+    @property
+    def compiles(self) -> int:
+        """How many (bucket, map-shape) signatures have been compiled."""
+        return self.engine.trace_count
+
+    @staticmethod
+    def _validate_state(cfg: AFMConfig, state: AFMState) -> None:
+        n = cfg.n_units
+        want = {"w": (n, cfg.dim), "c": (n,), "far": (n, cfg.phi),
+                "near": (n, 4)}
+        for field, shape in want.items():
+            got = tuple(getattr(state, field).shape)
+            if got != shape:
+                raise ValueError(f"state {field} shape {got} does not match "
+                                 f"config {shape}")
+
+    @staticmethod
+    def _validate_labels(cfg: AFMConfig, unit_labels):
+        if unit_labels is None:
+            return None
+        unit_labels = jnp.asarray(unit_labels, jnp.int32)
+        if unit_labels.shape != (cfg.n_units,):
+            raise ValueError(f"unit_labels shape {unit_labels.shape} != "
+                             f"({cfg.n_units},)")
+        return unit_labels
+
+    def __repr__(self):
+        labelled = "labelled" if self._unit_labels is not None else "unlabelled"
+        return (f"MapService(side={self.cfg.side}, dim={self.cfg.dim}, "
+                f"{labelled}, buckets={self.engine.buckets}, "
+                f"served={self.stats.samples})")

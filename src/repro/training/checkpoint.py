@@ -1,8 +1,13 @@
 """Checkpointing: msgpack-serialised pytrees with dtype/shape manifest.
 
 No orbax in this container; this is a compact, dependency-light format:
-a manifest (tree structure + dtypes + shapes) and raw little-endian buffers.
-Works for TrainState, AFMState, or any pytree of arrays/scalars.
+a manifest (format version + tree structure + dtypes + shapes) and raw
+little-endian buffers. Works for TrainState, AFMState, or any pytree of
+arrays/scalars.
+
+All structural checks raise ``ValueError`` (never bare ``assert``, which
+vanishes under ``python -O``) so callers — notably ``repro.api.persistence``
+— can surface corrupt or mismatched checkpoints with a clear message.
 """
 from __future__ import annotations
 
@@ -13,16 +18,44 @@ import jax.numpy as jnp
 import msgpack
 import numpy as np
 
+# Bump when the payload layout changes incompatibly. Version 1 payloads
+# (pre-dating the field) are identical except for the missing marker and
+# load fine; readers reject versions *newer* than they understand.
+FORMAT_VERSION = 2
+
 
 def _flatten(tree):
     leaves, treedef = jax.tree.flatten(tree)
     return leaves, treedef
 
 
+def describe_structure(tree):
+    """A jax-version-stable structure descriptor for the builtin container
+    types (dict / list / tuple / namedtuple / None), mirroring jax's flatten
+    order. Unlike ``str(PyTreeDef)``, whose repr format changes between jax
+    releases, equal descriptors mean equal structure on any version. Custom
+    pytree nodes degrade to an opaque leaf marker — for those, the per-leaf
+    count/shape checks remain the only structure gate."""
+    if tree is None:
+        return None
+    if isinstance(tree, dict):
+        return {"dict": {str(k): describe_structure(v)
+                         for k, v in sorted(tree.items())}}
+    if isinstance(tree, tuple) and hasattr(tree, "_fields"):
+        return {"namedtuple": [type(tree).__name__,
+                               {f: describe_structure(v)
+                                for f, v in zip(tree._fields, tree)}]}
+    if isinstance(tree, (list, tuple)):
+        return {type(tree).__name__: [describe_structure(v) for v in tree]}
+    return "*"
+
+
 def save(path: str, tree) -> None:
     leaves, treedef = _flatten(tree)
     payload = {
+        "format_version": FORMAT_VERSION,
         "treedef": str(treedef),
+        "structure": describe_structure(tree),
         "leaves": [
             {
                 "dtype": str(np.asarray(leaf).dtype),
@@ -41,17 +74,52 @@ def save(path: str, tree) -> None:
 
 
 def restore(path: str, like):
-    """Restore into the structure of ``like`` (shapes/dtypes must match)."""
+    """Restore into the structure of ``like`` (structure/shapes must match).
+
+    Raises ``ValueError`` when the payload's format version is unknown, its
+    tree structure differs from ``like``'s, or any leaf shape mismatches.
+    Structure is validated against the stored jax-version-stable descriptor
+    (``describe_structure``); the stored treedef string, whose repr format
+    jax changes between releases, is diagnostic only — a repr drift alone,
+    with the descriptor and every leaf matching, does not reject the
+    checkpoint.
+    """
     with open(path, "rb") as f:
         payload = msgpack.unpackb(f.read(), raw=False)
+    if not isinstance(payload, dict) or "leaves" not in payload:
+        raise ValueError(f"{path}: not a repro checkpoint payload")
+    version = payload.get("format_version", 1)
+    if version > FORMAT_VERSION:
+        raise ValueError(
+            f"{path}: checkpoint format version {version} is newer than this "
+            f"reader (understands <= {FORMAT_VERSION})")
     leaves, treedef = _flatten(like)
-    assert len(leaves) == len(payload["leaves"]), "structure mismatch"
+    stored_treedef = payload.get("treedef")
+    treedef_differs = (stored_treedef is not None
+                       and stored_treedef != str(treedef))
+    hint = (f"\n  stored treedef:   {stored_treedef}"
+            f"\n  expected treedef: {treedef}" if treedef_differs else "")
+    stored_structure = payload.get("structure")
+    if (stored_structure is not None
+            and stored_structure != describe_structure(like)):
+        raise ValueError(
+            f"{path}: checkpoint tree structure mismatch\n"
+            f"  stored:   {stored_structure}\n"
+            f"  expected: {describe_structure(like)}{hint}")
+    if len(leaves) != len(payload["leaves"]):
+        raise ValueError(
+            f"{path}: checkpoint tree structure mismatch — "
+            f"{len(payload['leaves'])} stored leaves, expected "
+            f"{len(leaves)}{hint}")
     out = []
-    for ref, rec in zip(leaves, payload["leaves"]):
+    for pos, (ref, rec) in enumerate(zip(leaves, payload["leaves"])):
+        ref_arr = np.asarray(ref)
+        if list(ref_arr.shape) != list(rec["shape"]):
+            kind = "tree structure" if treedef_differs else "leaf shape"
+            raise ValueError(
+                f"{path}: checkpoint {kind} mismatch — leaf {pos} stored "
+                f"{rec['shape']}, expected {list(ref_arr.shape)}{hint}")
         arr = np.frombuffer(rec["data"], dtype=np.dtype(rec["dtype"]))
         arr = arr.reshape(rec["shape"])
-        ref_arr = np.asarray(ref)
-        assert list(ref_arr.shape) == rec["shape"], (
-            f"shape mismatch {ref_arr.shape} vs {rec['shape']}")
         out.append(jnp.asarray(arr).astype(ref_arr.dtype))
     return jax.tree.unflatten(treedef, out)

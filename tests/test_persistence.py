@@ -1,0 +1,202 @@
+"""Artifact save/load round-trips, MapStore versioning, manifest validation.
+
+ISSUE 2 acceptance: ``TopoMap.save``/``load`` round-trips are bit-identical
+on ``transform`` and ``predict`` across the dense backends.
+"""
+import json
+import os
+
+import jax
+import numpy as np
+import pytest
+
+from repro.api import AFMConfig, MapStore, TopoMap, load_artifact
+from repro.api import persistence
+
+CFG = AFMConfig(side=6, dim=12, i_max=48, batch=4, e_factor=0.5)
+
+
+def _data(n=128, seed=3):
+    key = jax.random.PRNGKey(seed)
+    x = jax.random.normal(key, (n, CFG.dim))
+    y = jax.random.randint(jax.random.fold_in(key, 1), (n,), 0, 4)
+    return x, y
+
+
+@pytest.fixture(scope="module")
+def fitted():
+    x, y = _data()
+    return TopoMap(CFG).fit(x, y, key=jax.random.PRNGKey(7)), x, y
+
+
+@pytest.mark.parametrize("backend", ["reference", "batched", "pallas"])
+def test_roundtrip_bit_identical(tmp_path, backend):
+    """Acceptance: save -> load reproduces transform/predict bit-for-bit."""
+    x, y = _data()
+    tm = TopoMap(CFG, backend=backend).fit(x, y, key=jax.random.PRNGKey(5))
+    path = str(tmp_path / "art")
+    tm.save(path)
+    tm2 = TopoMap.load(path)
+    assert tm2.backend.name == backend
+    np.testing.assert_array_equal(np.asarray(tm.transform(x)),
+                                  np.asarray(tm2.transform(x)))
+    np.testing.assert_array_equal(np.asarray(tm.predict(x)),
+                                  np.asarray(tm2.predict(x)))
+
+
+def test_load_backend_override(tmp_path, fitted):
+    tm, x, _ = fitted
+    path = str(tmp_path / "art")
+    tm.save(path)
+    tm2 = TopoMap.load(path, backend="reference")
+    assert tm2.backend.name == "reference"
+    np.testing.assert_array_equal(np.asarray(tm.transform(x[:33])),
+                                  np.asarray(tm2.transform(x[:33])))
+
+
+def test_artifact_preserves_labeling_and_meta(tmp_path):
+    x, y = _data()
+    tm = TopoMap(CFG, labeling="majority").fit(x, y)
+    path = str(tmp_path / "art")
+    tm.save(path, extra_meta={"dataset": "toy"})
+    art = load_artifact(path)
+    assert art.labeling == "majority"
+    assert art.meta["extra"] == {"dataset": "toy"}
+    assert art.cfg == CFG
+    assert int(art.state.i) == CFG.total_samples
+    tm2 = TopoMap.load(path)
+    assert tm2.labeling == "majority"
+
+
+def test_from_state_restores_unit_labels(fitted):
+    """A loaded classifier map predicts without relabeling (satellite fix)."""
+    tm, x, _ = fitted
+    wrapped = TopoMap.from_state(tm.state_, CFG, unit_labels=tm.unit_labels_)
+    np.testing.assert_array_equal(np.asarray(wrapped.predict(x[:21])),
+                                  np.asarray(tm.predict(x[:21])))
+
+
+def test_save_unfitted_raises(tmp_path):
+    with pytest.raises(RuntimeError, match="not fitted"):
+        TopoMap(CFG).save(str(tmp_path / "art"))
+
+
+def test_resave_unlabelled_drops_stale_labels(tmp_path, fitted):
+    tm, x, _ = fitted
+    path = str(tmp_path / "art")
+    tm.save(path)                         # labelled artifact
+    unlabelled = TopoMap.from_state(tm.state_, CFG)
+    unlabelled.save(path)                 # overwrite without labels
+    assert not os.path.exists(os.path.join(path, "unit_labels.msgpack"))
+    assert TopoMap.load(path).unit_labels_ is None
+
+
+def test_unlabelled_roundtrip(tmp_path):
+    x, _ = _data()
+    tm = TopoMap(CFG).fit(x)
+    path = str(tmp_path / "art")
+    tm.save(path)
+    tm2 = TopoMap.load(path)
+    assert tm2.unit_labels_ is None
+    with pytest.raises(RuntimeError, match="unit labels"):
+        tm2.predict(x[:4])
+
+
+# ------------------------------------------------------------------ MapStore
+
+
+def test_store_versioning(tmp_path, fitted):
+    tm, x, _ = fitted
+    store = MapStore(str(tmp_path / "store"))
+    assert store.save(tm, "toy") == "toy@1"
+    assert store.save(tm, "toy") == "toy@2"
+    assert store.versions("toy") == [1, 2]
+    assert store.list() == ["toy@1", "toy@2"]
+    pinned = store.load("toy@1")
+    latest = store.load("toy")
+    np.testing.assert_array_equal(np.asarray(pinned.transform(x[:9])),
+                                  np.asarray(latest.transform(x[:9])))
+
+
+def test_store_unknown_raises(tmp_path):
+    store = MapStore(str(tmp_path / "store"))
+    with pytest.raises(KeyError, match="not in store"):
+        store.path("nope")
+
+
+def test_store_missing_version_raises(tmp_path, fitted):
+    tm, _, _ = fitted
+    store = MapStore(str(tmp_path / "store"))
+    store.save(tm, "toy")
+    with pytest.raises(KeyError, match="versions"):
+        store.path("toy@9")
+
+
+def test_store_save_rejects_versioned_name(tmp_path, fitted):
+    tm, _, _ = fitted
+    store = MapStore(str(tmp_path / "store"))
+    with pytest.raises(ValueError, match="bare name"):
+        store.save(tm, "toy@3")
+
+
+def test_parse_spec():
+    assert persistence.parse_spec("toy") == ("toy", None)
+    assert persistence.parse_spec("toy@3") == ("toy", 3)
+    with pytest.raises(ValueError, match="invalid map spec"):
+        persistence.parse_spec("toy@latest")
+    with pytest.raises(ValueError, match="invalid map name"):
+        persistence.parse_spec("to/y")
+
+
+# ------------------------------------------------------- manifest validation
+
+
+def _corrupt_manifest(path, **patch):
+    manifest_path = os.path.join(path, "manifest.json")
+    with open(manifest_path) as f:
+        manifest = json.load(f)
+    manifest.update(patch)
+    with open(manifest_path, "w") as f:
+        json.dump(manifest, f)
+
+
+def test_newer_artifact_version_rejected(tmp_path, fitted):
+    tm, _, _ = fitted
+    path = str(tmp_path / "art")
+    tm.save(path)
+    _corrupt_manifest(path, format_version=999)
+    with pytest.raises(ValueError, match="newer than this reader"):
+        load_artifact(path)
+
+
+def test_unknown_config_field_rejected(tmp_path, fitted):
+    tm, _, _ = fitted
+    path = str(tmp_path / "art")
+    tm.save(path)
+    _corrupt_manifest(path, config={"side": 6, "hyperdrive": 1})
+    with pytest.raises(ValueError, match="unknown AFMConfig fields"):
+        load_artifact(path)
+
+
+def test_wrong_format_marker_rejected(tmp_path, fitted):
+    tm, _, _ = fitted
+    path = str(tmp_path / "art")
+    tm.save(path)
+    _corrupt_manifest(path, format="something-else")
+    with pytest.raises(ValueError, match="manifest format"):
+        load_artifact(path)
+
+
+def test_not_an_artifact_raises(tmp_path):
+    with pytest.raises(FileNotFoundError, match="not a map artifact"):
+        load_artifact(str(tmp_path))
+
+
+def test_save_over_regular_file_rejected(tmp_path, fitted):
+    tm, _, _ = fitted
+    target = tmp_path / "occupied"
+    target.write_text("not an artifact")
+    with pytest.raises(ValueError, match="not a directory"):
+        tm.save(str(target))
+    # no temp-dir litter left behind on the failure path
+    assert [p.name for p in tmp_path.iterdir()] == ["occupied"]

@@ -1,0 +1,276 @@
+"""MapService / BmuEngine: batched-inference parity, compile-count contract,
+online-update swap semantics, and the serve_map CLI smoke test.
+
+ISSUE 2 acceptance: ``MapService`` batched inference matches
+``TopoMap.transform`` exactly while compiling at most once per
+(bucket, map-shape) — verified via the engine's trace counter.
+"""
+import json
+import sys
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.api import AFMConfig, TopoMap
+from repro.core import metrics
+from repro.launch import serve_map as serve_map_cli
+from repro.serving import BmuEngine, MapService
+
+CFG = AFMConfig(side=6, dim=12, i_max=48, batch=4, e_factor=0.5)
+
+
+def _data(n=256, seed=3):
+    key = jax.random.PRNGKey(seed)
+    x = jax.random.normal(key, (n, CFG.dim))
+    y = jax.random.randint(jax.random.fold_in(key, 1), (n,), 0, 4)
+    return x, y
+
+
+@pytest.fixture(scope="module")
+def fitted():
+    x, y = _data()
+    return TopoMap(CFG).fit(x, y, key=jax.random.PRNGKey(7)), x, y
+
+
+# --------------------------------------------------------------- BmuEngine
+
+
+def test_engine_matches_oracle_on_ragged_sizes(fitted):
+    tm, x, _ = fitted
+    engine = BmuEngine(buckets=(8, 64))
+    from repro.core import search as search_lib
+    for n in (1, 3, 8, 9, 64, 100):
+        idx, q2 = engine.bmu(tm.state_.w, x[:n])
+        ref_idx, ref_q2 = search_lib.exact_bmu(tm.state_.w, x[:n])
+        np.testing.assert_array_equal(np.asarray(idx), np.asarray(ref_idx))
+        # padding changes the matmul shape, so q2 may differ in the last ulp
+        np.testing.assert_allclose(np.asarray(q2), np.asarray(ref_q2),
+                                   rtol=1e-5)
+
+
+def test_engine_compiles_once_per_bucket(fitted):
+    """Acceptance: at most one compile per (bucket, map-shape)."""
+    tm, x, _ = fitted
+    engine = BmuEngine(buckets=(8, 64, 512))
+    for n in (3, 5, 8, 1, 7):          # all land in the 8-bucket
+        engine.bmu(tm.state_.w, x[:n])
+    assert engine.trace_count == 1
+    engine.bmu(tm.state_.w, x[:33])    # 64-bucket
+    engine.bmu(tm.state_.w, x[:64])
+    assert engine.trace_count == 2
+    engine.bmu(tm.state_.w, x[:200])   # 512-bucket
+    assert engine.trace_count == 3
+    # 1060 = 512 + 512 + 36-tail-in-64: every chunk reuses a signature
+    big = jnp.tile(x, (5, 1))[:1060]
+    engine.bmu(tm.state_.w, big)
+    assert engine.trace_count == 3
+
+
+def test_engine_new_map_shape_recompiles(fitted):
+    tm, x, _ = fitted
+    engine = BmuEngine(buckets=(8,))
+    engine.bmu(tm.state_.w, x[:4])
+    assert engine.trace_count == 1
+    w_small = tm.state_.w[:16]         # different map shape -> one more
+    engine.bmu(w_small, x[:4])
+    assert engine.trace_count == 2
+
+
+def test_engine_empty_request(fitted):
+    tm, x, _ = fitted
+    engine = BmuEngine()
+    idx, q2 = engine.bmu(tm.state_.w, x[:0])
+    assert idx.shape == (0,) and q2.shape == (0,)
+    assert engine.trace_count == 0
+
+
+def test_engine_rejects_bad_shapes(fitted):
+    tm, x, _ = fitted
+    with pytest.raises(ValueError, match=r"expected \(B, D\)"):
+        BmuEngine().bmu(tm.state_.w, x[0])
+    with pytest.raises(ValueError, match="buckets"):
+        BmuEngine(buckets=())
+
+
+def test_topomap_transform_compiles_once_per_bucket(fitted):
+    """The estimator's own inference rides the same bucketed engine."""
+    x, y = _data()
+    tm = TopoMap(CFG).fit(x, y, key=jax.random.PRNGKey(7))
+    for n in (5, 7, 3, 8):
+        tm.transform(x[:n])
+    assert tm.engine.trace_count == 1
+    tm.predict(x[:6])                  # same bucket: no new compile
+    assert tm.engine.trace_count == 1
+
+
+# -------------------------------------------------------------- MapService
+
+
+def test_service_matches_topomap_exactly(fitted):
+    """Acceptance: service batched inference == TopoMap.transform."""
+    tm, x, _ = fitted
+    svc = MapService.from_estimator(tm)
+    for n in (1, 17, 64, 200):
+        np.testing.assert_array_equal(np.asarray(svc.transform(x[:n])),
+                                      np.asarray(tm.transform(x[:n])))
+    np.testing.assert_array_equal(
+        np.asarray(svc.transform(x[:10], lattice=True)),
+        np.asarray(tm.transform(x[:10], lattice=True)))
+    np.testing.assert_array_equal(np.asarray(svc.predict(x[:50])),
+                                  np.asarray(tm.predict(x[:50])))
+    assert svc.stats.requests == 6
+    assert svc.stats.samples == 1 + 17 + 64 + 200 + 10 + 50
+
+
+def test_service_quantization_error_and_u_matrix(fitted):
+    tm, x, _ = fitted
+    svc = MapService.from_estimator(tm)
+    q_svc = svc.quantization_error(x)
+    q_ref = float(metrics.quantization_error(tm.state_.w, x))
+    assert abs(q_svc - q_ref) < 1e-5 * max(1.0, q_ref)
+    np.testing.assert_allclose(svc.u_matrix(), tm.u_matrix())
+
+
+def test_service_predict_needs_labels(fitted):
+    tm, x, _ = fitted
+    svc = MapService(CFG, tm.state_)
+    with pytest.raises(RuntimeError, match="unit labels"):
+        svc.predict(x[:4])
+
+
+def test_service_from_artifact_and_store(tmp_path, fitted):
+    tm, x, _ = fitted
+    path = str(tmp_path / "art")
+    tm.save(path)
+    svc = MapService.from_artifact(path)
+    np.testing.assert_array_equal(np.asarray(svc.transform(x[:13])),
+                                  np.asarray(tm.transform(x[:13])))
+    from repro.api import MapStore
+    store = MapStore(str(tmp_path / "store"))
+    store.save(tm, "toy")
+    svc2 = MapService.from_store(str(tmp_path / "store"), "toy")
+    np.testing.assert_array_equal(np.asarray(svc2.predict(x[:13])),
+                                  np.asarray(tm.predict(x[:13])))
+
+
+def test_service_rejects_mismatched_state(fitted):
+    tm, _, _ = fitted
+    bad_cfg = AFMConfig(side=5, dim=12)
+    with pytest.raises(ValueError, match="does not match config"):
+        MapService(bad_cfg, tm.state_)
+
+
+def test_service_rejects_mismatched_labels_at_construction(fitted):
+    tm, _, _ = fitted
+    with pytest.raises(ValueError, match="unit_labels shape"):
+        MapService(CFG, tm.state_, unit_labels=jnp.zeros((3,), jnp.int32))
+
+
+# ------------------------------------------------------------ hot updates
+
+
+def test_online_update_matches_partial_fit(fitted):
+    """`update` applies exactly one backend partial_fit step, then swaps."""
+    tm, x, _ = fitted
+    svc = MapService.from_estimator(tm)
+    key = jax.random.PRNGKey(5)
+    svc.update(x[:8], key=key)
+    mirror = TopoMap.from_state(tm.state_, CFG)
+    mirror.partial_fit(x[:8], key=key)
+    state, labels = svc.snapshot()
+    np.testing.assert_array_equal(np.asarray(state.w),
+                                  np.asarray(mirror.state_.w))
+    np.testing.assert_array_equal(np.asarray(labels),
+                                  np.asarray(tm.unit_labels_))
+    assert svc.stats.updates == 1 and svc.stats.swaps == 1
+    # the estimator that produced the service is untouched
+    assert tm.state_ is not state
+
+
+def test_update_does_not_recompile_inference(fitted):
+    tm, x, _ = fitted
+    svc = MapService.from_estimator(tm)
+    svc.transform(x[:8])
+    compiles = svc.compiles
+    svc.update(x[:8])
+    svc.transform(x[:8])
+    assert svc.compiles == compiles
+
+
+def test_swap_replaces_state_and_labels(fitted):
+    tm, x, _ = fitted
+    svc = MapService.from_estimator(tm)
+    before = np.asarray(svc.transform(x[:40]))
+    new_state = tm.state_._replace(w=jnp.flip(tm.state_.w, axis=0))
+    new_labels = jnp.flip(tm.unit_labels_)
+    svc.swap(new_state, new_labels)
+    after = np.asarray(svc.transform(x[:40]))
+    np.testing.assert_array_equal(after, CFG.n_units - 1 - before)
+    np.testing.assert_array_equal(np.asarray(svc.predict(x[:40])),
+                                  np.asarray(tm.predict(x[:40])))
+
+
+def test_swap_validates_shapes(fitted):
+    tm, _, _ = fitted
+    svc = MapService.from_estimator(tm)
+    with pytest.raises(ValueError, match="does not match config"):
+        svc.swap(tm.state_._replace(w=tm.state_.w[:, :4]))
+    with pytest.raises(ValueError, match="unit_labels shape"):
+        svc.swap(tm.state_, jnp.zeros((3,), jnp.int32))
+
+
+# ------------------------------------------------------------- CLI smoke
+
+
+def _run_cli(monkeypatch, capsys, argv):
+    monkeypatch.setattr(sys, "argv", ["serve_map"] + argv)
+    serve_map_cli.main()
+    return capsys.readouterr().out
+
+
+def test_serve_map_cli_random_batch(tmp_path, monkeypatch, capsys, fitted):
+    tm, _, _ = fitted
+    path = str(tmp_path / "art")
+    tm.save(path)
+    out = _run_cli(monkeypatch, capsys,
+                   ["--artifact", path, "--random", "32"])
+    assert "output shape: (32,)" in out
+    assert "1 compiles" in out
+
+
+def test_serve_map_cli_jsonl_predict(tmp_path, monkeypatch, capsys, fitted):
+    tm, x, _ = fitted
+    path = str(tmp_path / "art")
+    tm.save(path)
+    reqs = tmp_path / "reqs.jsonl"
+    with open(reqs, "w") as f:
+        for row in np.asarray(x[:5]):
+            f.write(json.dumps(row.tolist()) + "\n")
+        f.write(json.dumps({"x": np.asarray(x[5]).tolist()}) + "\n")
+    out_npy = str(tmp_path / "out.npy")
+    out = _run_cli(monkeypatch, capsys,
+                   ["--artifact", path, "--requests", str(reqs),
+                    "--endpoint", "predict", "--output", out_npy])
+    assert "output shape: (6,)" in out
+    np.testing.assert_array_equal(np.load(out_npy),
+                                  np.asarray(tm.predict(x[:6])))
+
+
+def test_serve_map_cli_npy_store_umatrix(tmp_path, monkeypatch, capsys,
+                                         fitted):
+    tm, x, _ = fitted
+    from repro.api import MapStore
+    store_root = str(tmp_path / "store")
+    MapStore(store_root).save(tm, "toy")
+    npy = str(tmp_path / "reqs.npy")
+    np.save(npy, np.asarray(x[:9]))
+    out = _run_cli(monkeypatch, capsys,
+                   ["--store", store_root, "--map", "toy",
+                    "--requests", npy])
+    assert "output shape: (9,)" in out
+    out = _run_cli(monkeypatch, capsys,
+                   ["--store", store_root, "--map", "toy@1",
+                    "--endpoint", "u-matrix"])
+    assert f"output shape: ({CFG.side}, {CFG.side})" in out

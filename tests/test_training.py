@@ -47,6 +47,73 @@ def test_loss_decreases_small_lm(rng):
     assert sum(losses[-5:]) < sum(losses[:5])
 
 
+def test_checkpoint_structure_mismatch_raises(tmp_path):
+    path = str(tmp_path / "ckpt.msgpack")
+    ckpt.save(path, {"a": jnp.ones((2,)), "b": jnp.ones((3,))})
+    # a key rename is rejected even when leaf count and shapes line up
+    with pytest.raises(ValueError, match="tree structure mismatch"):
+        ckpt.restore(path, {"a": jnp.zeros((2,)), "c": jnp.zeros((3,))})
+    with pytest.raises(ValueError, match="tree structure mismatch"):
+        ckpt.restore(path, {"a": jnp.zeros((2,))})
+    # legacy payloads without stored structure still get the leaf-count guard
+    import msgpack
+    with open(path, "rb") as f:
+        payload = msgpack.unpackb(f.read(), raw=False)
+    del payload["treedef"]
+    del payload["structure"]
+    with open(path, "wb") as f:
+        f.write(msgpack.packb(payload, use_bin_type=True))
+    with pytest.raises(ValueError, match="leaves"):
+        ckpt.restore(path, {"a": jnp.zeros((2,))})
+
+
+def test_checkpoint_tolerates_treedef_repr_drift(tmp_path):
+    """jax changes str(PyTreeDef) between releases; only the stable
+    structure descriptor may reject a checkpoint, never repr drift."""
+    import msgpack
+
+    path = str(tmp_path / "ckpt.msgpack")
+    tree = {"a": jnp.ones((2,)), "b": jnp.full((3,), 5.0)}
+    ckpt.save(path, tree)
+    with open(path, "rb") as f:
+        payload = msgpack.unpackb(f.read(), raw=False)
+    payload["treedef"] = "PyTreeDef(some other jax version's repr)"
+    with open(path, "wb") as f:
+        f.write(msgpack.packb(payload, use_bin_type=True))
+    restored = ckpt.restore(path, jax.tree.map(jnp.zeros_like, tree))
+    np.testing.assert_array_equal(np.asarray(restored["b"]), np.full((3,), 5.0))
+
+
+def test_checkpoint_shape_mismatch_raises(tmp_path):
+    path = str(tmp_path / "ckpt.msgpack")
+    ckpt.save(path, {"a": jnp.ones((2,))})
+    with pytest.raises(ValueError, match="shape mismatch"):
+        ckpt.restore(path, {"a": jnp.zeros((5,))})
+
+
+def test_checkpoint_format_version(tmp_path):
+    import msgpack
+
+    path = str(tmp_path / "ckpt.msgpack")
+    ckpt.save(path, {"a": jnp.ones((2,))})
+    with open(path, "rb") as f:
+        payload = msgpack.unpackb(f.read(), raw=False)
+    assert payload["format_version"] == ckpt.FORMAT_VERSION
+    # a payload from a future format is rejected with a clear error
+    payload["format_version"] = ckpt.FORMAT_VERSION + 1
+    with open(path, "wb") as f:
+        f.write(msgpack.packb(payload, use_bin_type=True))
+    with pytest.raises(ValueError, match="newer than this reader"):
+        ckpt.restore(path, {"a": jnp.zeros((2,))})
+    # version-1 payloads (no marker) still load
+    del payload["format_version"]
+    with open(path, "wb") as f:
+        f.write(msgpack.packb(payload, use_bin_type=True))
+    np.testing.assert_array_equal(
+        np.asarray(ckpt.restore(path, {"a": jnp.zeros((2,))})["a"]),
+        np.ones((2,)))
+
+
 def test_checkpoint_roundtrip(rng):
     cfg = configs.get_smoke("llama3.2-1b")
     from repro.models import transformer

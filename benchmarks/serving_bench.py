@@ -1,14 +1,23 @@
-"""Serving bench: MapService bucketed batched inference vs naive per-shape jit.
+"""Serving bench: bucketed batched inference vs naive per-shape jit, and
+gateway coalescing vs per-request dispatch under concurrent batch-1 load.
 
-Measures the thing the bucketing policy buys — steady-state throughput on a
-ragged request-size stream. The naive baseline jits one BMU call per request
-shape (what ``TopoMap.transform`` did pre-MapService): every new ragged size
-pays a compile. The bucketed engine pays at most one compile per bucket and
-amortises across the whole stream. Reports samples/s, compile counts, and
-padding overhead.
+Scenario 1 (single caller, ragged sizes) measures what the bucketing policy
+buys — steady-state throughput on a ragged request-size stream. The naive
+baseline jits one BMU call per request shape (what ``TopoMap.transform``
+did pre-MapService): every new ragged size pays a compile. The bucketed
+engine pays at most one compile per bucket and amortises across the whole
+stream. Reports samples/s, compile counts, and padding overhead.
+
+Scenario 2 (concurrent load) measures what the gateway's coalescer buys —
+K threaded clients each streaming batch-1 requests. Per-request dispatch
+pays one padded engine call per request; the gateway merges concurrent
+requests into bucket-sized dispatches under a small deadline, so the same
+traffic rides far fewer (bigger) engine calls. Reports samples/s both
+ways and the mean coalesced dispatch size.
 """
 from __future__ import annotations
 
+import threading
 import time
 
 import jax
@@ -18,7 +27,8 @@ from benchmarks import common
 from repro.api import AFMConfig
 from repro.core import afm
 from repro.core import search as search_lib
-from repro.serving.maps import BmuEngine
+from repro.serving.gateway import MapGateway
+from repro.serving.maps import BmuEngine, MapService
 
 
 def _ragged_stream(key, n_requests: int, dim: int, max_b: int):
@@ -28,6 +38,66 @@ def _ragged_stream(key, n_requests: int, dim: int, max_b: int):
     np.random.RandomState(8).shuffle(sizes)
     data = jax.random.normal(key, (max_b + 1, dim))
     return [np.asarray(data[:s]) for s in sizes]
+
+
+def _concurrent_clients(n_clients: int, per_client: int, queries, serve_one):
+    """K threads each streaming ``per_client`` batch-1 requests; returns
+    elapsed wall seconds."""
+    def client(cid):
+        for i in range(per_client):
+            serve_one(queries[(cid * per_client + i) % len(queries)])
+
+    threads = [threading.Thread(target=client, args=(c,))
+               for c in range(n_clients)]
+    t0 = time.time()
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    return time.time() - t0
+
+
+def _concurrent_load(key, quick: bool):
+    """Gateway coalescing vs per-request dispatch on batch-1 streams.
+
+    Uses a compute-heavy map (per-request engine calls dominate Python
+    overhead) so the 8x dispatch reduction shows up as wall-clock, not
+    noise: without coalescing every batch-1 caller pays a full padded
+    engine call; with it, ~n_clients requests ride each call.
+    """
+    n_clients = 8
+    per_client = 50 if quick else 400
+    cfg = AFMConfig(side=50, dim=256)
+    state = afm.init(key, cfg)
+    queries = [np.asarray(q)[None, :] for q in np.asarray(
+        jax.random.normal(jax.random.fold_in(key, 2), (256, cfg.dim)))]
+
+    direct_svc = MapService(cfg, state, use_pallas=False)
+    direct_svc.transform(queries[0])                   # warm the 8-bucket
+    t_direct = _concurrent_clients(
+        n_clients, per_client, queries,
+        lambda q: np.asarray(direct_svc.transform(q)))
+
+    gw_svc = MapService(cfg, state, use_pallas=False)
+    gw = MapGateway(max_delay=0.001)
+    gw.attach("map", gw_svc)
+    gw.transform("map", queries[0])                    # warm
+    t_gateway = _concurrent_clients(
+        n_clients, per_client, queries,
+        lambda q: np.asarray(gw.transform("map", q)))
+    gw.close()
+
+    total = n_clients * per_client
+    return {
+        "conc_clients": n_clients,
+        "conc_requests": total,
+        "conc_direct_sps": round(total / t_direct),
+        "conc_gateway_sps": round(total / t_gateway),
+        "conc_gateway_speedup": round(t_direct / t_gateway, 2),
+        "conc_mean_dispatch_reqs": round(
+            gw.stats.mean_coalesced_requests(), 1),
+        "conc_dispatches": gw.stats.dispatches,
+    }
 
 
 def run(quick: bool = True):
@@ -69,6 +139,7 @@ def run(quick: bool = True):
         "pad_overhead": round(engine.padded / (2 * total), 3),
         "cold_speedup": round(t_naive / t_bucketed, 2),
     }
+    derived.update(_concurrent_load(jax.random.fold_in(key, 3), quick))
     common.save("serving_bench", derived)
     return None, derived
 

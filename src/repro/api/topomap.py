@@ -178,7 +178,10 @@ class TopoMap:
         serves through the same kernel path it trains with; flagless
         backends auto-resolve exactly like ``MapService`` (the kernel on
         TPU, the jnp oracle elsewhere), so the two surfaces stay one
-        hot path on every platform.
+        hot path on every platform. Compiled signatures live in the
+        process-wide ``repro.serving.maps.CompileCache``: every estimator,
+        service, and gateway serving this map shape reuses one compile of
+        the bucket ladder instead of compiling per object.
         """
         if self._engine is None:
             from repro.serving import maps as maps_lib
@@ -191,7 +194,9 @@ class TopoMap:
                   chunk: int | None = None) -> jnp.ndarray:
         """BMU projection. Returns (B,) flat unit indices, or (B, 2)
         lattice (row, col) coordinates when ``lattice=True``. ``chunk``
-        optionally caps the engine's largest bucket (memory ceiling)."""
+        optionally caps the engine's largest bucket (memory ceiling); it is
+        clamped to the bucket ladder so no ``chunk`` value can add a jit
+        signature or an oversized dispatch."""
         self._check_fitted()
         flat, _ = self.engine.bmu(self.state_.w,
                                   jnp.asarray(data, jnp.float32), cap=chunk)

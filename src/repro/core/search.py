@@ -106,18 +106,54 @@ def heuristic_search(w, near, far, samples, key, e: int,
     return SearchResult(gmu, q2, steps, explored)
 
 
-def exact_bmu(w, samples):
+#: Unit-axis chunk applied when ``exact_bmu`` is called without an explicit
+#: ``unit_chunk``: maps up to this many units materialise one (B, N) block;
+#: larger maps stream (B, 4096) blocks with a running argmin.
+DEFAULT_UNIT_CHUNK = 4096
+
+
+def _bmu_block(w_rows, samples, base):
+    """Best unit within one block of ``w`` rows; indices offset by ``base``."""
+    s2 = jnp.sum(samples * samples, axis=-1)                # (B,)
+    w2 = jnp.sum(w_rows * w_rows, axis=-1)                  # (n_block,)
+    q2 = s2[:, None] - 2.0 * (samples @ w_rows.T) + w2[None, :]
+    idx = jnp.argmin(q2, axis=-1)
+    best = jnp.take_along_axis(q2, idx[:, None], axis=-1)[:, 0]
+    return (base + idx).astype(jnp.int32), best
+
+
+def exact_bmu(w, samples, *, unit_chunk: int | None = None):
     """Exact best-matching unit (the search's ground truth). (B,) idx, (B,) q2.
 
-    Chunked over units to bound memory for large maps; the Pallas kernel in
-    ``repro.kernels.bmu`` is the TPU fast path for this same computation.
+    Chunked over units to bound memory for large maps: the (B, N) distance
+    matrix is materialised at most ``unit_chunk`` columns at a time
+    (``DEFAULT_UNIT_CHUNK`` when None), folded with a running strict-min so
+    ties resolve to the lowest index exactly like a global argmin. Maps at
+    or under the chunk — every config in this repo — take the single-block
+    path, so chunking changes nothing there. Across block geometries XLA
+    may tile the distance matmul differently, so chunked q2 can wobble in
+    the last ulp at wide feature dims (bitwise parity is tested at the
+    AFM's dims; indices agree unless two units tie within that ulp). A
+    block is never a single row — that lowers to a matvec with a reliably
+    different reduction order. The Pallas kernel in ``repro.kernels.bmu``
+    is the TPU fast path for this same computation.
     """
-    s2 = jnp.sum(samples * samples, axis=-1)                # (B,)
-    w2 = jnp.sum(w * w, axis=-1)                            # (N,)
-    cross = samples @ w.T                                   # (B, N)
-    q2 = s2[:, None] - 2.0 * cross + w2[None, :]
-    idx = jnp.argmin(q2, axis=-1).astype(jnp.int32)
-    return idx, jnp.maximum(jnp.take_along_axis(q2, idx[:, None], axis=-1)[:, 0], 0.0)
+    n = w.shape[0]
+    # Blocks must never have a single row: XLA lowers a one-unit block to a
+    # matvec kernel whose reduction order differs in the last ulp, breaking
+    # bitwise parity. Hence the floor of 2 on the chunk AND merging a 1-row
+    # remainder (n % chunk == 1) into the preceding block.
+    chunk = DEFAULT_UNIT_CHUNK if unit_chunk is None else max(2, int(unit_chunk))
+    bounds = list(range(chunk, n, chunk))
+    if bounds and n - bounds[-1] < 2:
+        bounds.pop()
+    idx, best = _bmu_block(w[:bounds[0] if bounds else n], samples, 0)
+    for lo, hi in zip(bounds, bounds[1:] + [n]):
+        idx_c, best_c = _bmu_block(w[lo:hi], samples, lo)
+        better = best_c < best
+        idx = jnp.where(better, idx_c, idx)
+        best = jnp.where(better, best_c, best)
+    return idx, jnp.maximum(best, 0.0)
 
 
 def second_bmu(w, samples):

@@ -1,5 +1,5 @@
-"""Trained-map serving launcher — ``MapService`` as a CLI (mirrors
-``train_map``).
+"""Trained-map serving launcher — ``MapService`` / ``MapGateway`` as a CLI
+(mirrors ``train_map``).
 
 Loads a saved map from an artifact directory or a ``MapStore`` and runs
 request batches through a serving endpoint, reporting throughput:
@@ -14,20 +14,32 @@ request batches through a serving endpoint, reporting throughput:
     PYTHONPATH=src python -m repro.launch.serve_map --store /tmp/maps \
         --map satimage-10x10@2 --requests - --endpoint predict
 
+    # 8 threaded clients streaming batch-1 requests through the coalescing
+    # gateway (merged into bucket-sized dispatches under a 2 ms deadline)
+    PYTHONPATH=src python -m repro.launch.serve_map --artifact /tmp/m \
+        --random 4096 --batch 1 --concurrency 8 --gateway
+
 Request formats: ``.npy`` (B, D) arrays, or newline-delimited JSON — each
 line one sample, either a bare array ``[0.1, ...]`` or ``{"x": [...]}``.
 ``--random N`` generates N Gaussian queries for smoke runs.
+
+Throughput is reported on two clocks: **wall** (first request start to
+last request end — honest under ``--concurrency``) and **busy** (summed
+per-request engine spans, which overlap under concurrent load).
 """
 from __future__ import annotations
 
 import argparse
+import functools
 import json
 import sys
+import threading
 import time
 
 import jax
 import numpy as np
 
+from repro.serving.gateway import MapGateway
 from repro.serving.maps import DEFAULT_BUCKETS, MapService
 
 ENDPOINTS = ("transform", "predict", "quantization-error", "u-matrix")
@@ -68,6 +80,58 @@ def build_service(args) -> MapService:
     return MapService.from_store(args.store, args.map, **opts)
 
 
+def _serve_blocks(args, svc, blocks):
+    """Run request ``blocks`` through the chosen endpoint, optionally from
+    ``--concurrency`` threads (and through the coalescing gateway). Returns
+    per-block outputs in request order, plus the gateway (for stats)."""
+    outs = [None] * len(blocks)
+    method = {"transform": "transform", "predict": "predict",
+              "quantization-error": "quantization_errors"}[args.endpoint]
+    gw = None
+    if args.gateway:
+        # share the service's ladder so coalesce_max tracks its top bucket
+        gw = MapGateway(max_delay=args.coalesce_ms / 1000.0,
+                        buckets=svc.engine.buckets)
+        gw.attach("map", svc)
+        call = functools.partial(getattr(gw, method), "map")
+    else:
+        call = getattr(svc, method)
+    kwargs = {"lattice": args.lattice} if args.endpoint == "transform" else {}
+
+    def one(i, block):
+        outs[i] = np.asarray(call(block, **kwargs))
+
+    workers = max(1, args.concurrency)
+    errors = []
+    try:
+        if workers == 1:
+            for i, block in enumerate(blocks):
+                one(i, block)
+        else:
+            # round-robin the block stream over worker threads (each worker
+            # is one serving client; the gateway merges their concurrent
+            # requests)
+            def client(worker):
+                try:
+                    for i in range(worker, len(blocks), workers):
+                        one(i, blocks[i])
+                except BaseException as e:  # noqa: BLE001 — re-raised below
+                    errors.append(e)
+
+            threads = [threading.Thread(target=client, args=(w,))
+                       for w in range(workers)]
+            for t in threads:
+                t.start()
+            for t in threads:
+                t.join()
+            if errors:
+                raise errors[0]
+    finally:
+        if gw is not None:
+            gw.close()
+    return outs, gw
+
+
 def main():
     ap = argparse.ArgumentParser()
     src = ap.add_mutually_exclusive_group(required=True)
@@ -83,6 +147,13 @@ def main():
     ap.add_argument("--endpoint", default="transform", choices=ENDPOINTS)
     ap.add_argument("--batch", type=int, default=1024,
                     help="request batch size fed to the service per call")
+    ap.add_argument("--concurrency", type=int, default=1,
+                    help="number of threaded clients issuing requests")
+    ap.add_argument("--gateway", action="store_true",
+                    help="route requests through the coalescing MapGateway "
+                         "(merges concurrent small requests per bucket)")
+    ap.add_argument("--coalesce-ms", type=float, default=1.0,
+                    help="gateway coalescing deadline in milliseconds")
     ap.add_argument("--lattice", action="store_true",
                     help="transform endpoint: return (row, col) coordinates")
     ap.add_argument("--buckets", default=None,
@@ -90,11 +161,18 @@ def main():
     ap.add_argument("--update-backend", default="batched",
                     help="backend for online updates (unused by read paths)")
     ap.add_argument("--output", default=None,
-                    help="write endpoint outputs to this .npy file")
+                    help="write endpoint outputs to this .npy file "
+                         "(quantization-error: (B,) per-sample Euclidean "
+                         "BMU distances, one row per request sample)")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
     if args.store and not args.map:
         raise SystemExit("--store needs --map 'name[@version]'")
+    if args.artifact and args.map:
+        raise SystemExit("--map selects from a --store; it does nothing "
+                         "with --artifact (remove one of them)")
+    if args.concurrency < 1:
+        raise SystemExit("--concurrency must be >= 1")
 
     svc = build_service(args)
     cfg = svc.cfg
@@ -114,28 +192,30 @@ def main():
                 jax.random.PRNGKey(args.seed), (args.random, cfg.dim)))
         else:
             raise SystemExit("give --requests FILE or --random N")
-        outs = []
+        blocks = [reqs[lo:lo + args.batch]
+                  for lo in range(0, reqs.shape[0], args.batch)]
         t0 = time.time()
-        for lo in range(0, reqs.shape[0], args.batch):
-            block = reqs[lo:lo + args.batch]
-            if args.endpoint == "transform":
-                outs.append(np.asarray(
-                    svc.transform(block, lattice=args.lattice)))
-            elif args.endpoint == "predict":
-                outs.append(np.asarray(svc.predict(block)))
-            else:
-                outs.append(np.float32(svc.quantization_error(block)))
+        outs, gw = _serve_blocks(args, svc, blocks)
         wall = time.time() - t0
+        out = np.concatenate(outs, axis=0)
         if args.endpoint == "quantization-error":
-            out = np.asarray(outs)
-            print(f"quantization error per batch: "
-                  f"{[f'{float(q):.4f}' for q in outs]}")
-        else:
-            out = np.concatenate(outs, axis=0)
+            print(f"quantization error: mean={out.mean():.4f} over "
+                  f"{out.shape[0]} samples")
         s = svc.stats
-        print(f"served {s.samples} samples in {s.seconds:.3f}s engine-time "
-              f"/ {wall:.3f}s wall ({s.throughput():.0f} samples/s), "
-              f"{s.requests} requests, {svc.compiles} compiles")
+        # under the gateway, service-level "requests" are merged engine
+        # dispatches — report the client-side request count instead
+        n_requests = gw.stats.requests if gw is not None else s.requests
+        print(f"served {s.samples} samples in {wall:.3f}s wall "
+              f"({s.throughput():.0f} samples/s wall-window, "
+              f"{s.busy_throughput():.0f} samples/s busy; "
+              f"busy {s.busy_seconds:.3f}s), {n_requests} requests, "
+              f"{args.concurrency} clients, {svc.compiles} compiles")
+        if gw is not None:
+            g = gw.stats
+            print(f"gateway: {g.dispatches} coalesced dispatches "
+                  f"(mean {g.mean_coalesced_requests():.1f} requests / "
+                  f"{g.mean_dispatch_size():.1f} samples per dispatch, "
+                  f"max {g.max_dispatch}), {g.direct} direct")
 
     print(f"output shape: {tuple(np.asarray(out).shape)}")
     if args.output:

@@ -1,9 +1,14 @@
 """Serving: LM decode steps (``serve_step``) and trained-topographic-map
-batched inference (``maps.MapService`` — see ``repro.launch.serve_map``)."""
-from repro.serving.maps import (DEFAULT_BUCKETS, BmuEngine, MapService,
+batched inference (``maps.MapService`` single-map endpoints,
+``gateway.MapGateway`` concurrent multi-map front end with cross-request
+coalescing — see ``repro.launch.serve_map``)."""
+from repro.serving.gateway import GatewayStats, MapGateway
+from repro.serving.maps import (DEFAULT_BUCKETS, GLOBAL_COMPILE_CACHE,
+                                BmuEngine, CompileCache, MapService,
                                 ServiceStats)
 from repro.serving.serve_step import (init_serving_cache, make_decode_step,
                                       make_prefill)
 
-__all__ = ["BmuEngine", "DEFAULT_BUCKETS", "MapService", "ServiceStats",
+__all__ = ["BmuEngine", "CompileCache", "DEFAULT_BUCKETS", "GatewayStats",
+           "GLOBAL_COMPILE_CACHE", "MapGateway", "MapService", "ServiceStats",
            "init_serving_cache", "make_decode_step", "make_prefill"]

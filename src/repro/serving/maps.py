@@ -1,15 +1,21 @@
 """MapService — batched inference serving for trained topographic maps.
 
-The paper decouples training from use; this module is the "use" half. Two
+The paper decouples training from use; this module is the "use" half. Three
 layers:
+
+``CompileCache``
+    A process-wide jit cache keyed ``(bucket, n_units, dim, flags)``. Every
+    ``BmuEngine`` dispatches through it, so serving K same-shape maps — or
+    mixing ``TopoMap`` inference with ``MapService`` endpoints — compiles
+    the bucket ladder **once per shape for the whole process**, not once
+    per engine. A trace-time counter makes the contract testable.
 
 ``BmuEngine``
     The shared batched-inference hot path: requests are padded up to a
     small set of **buckets** and dispatched through one jit-compiled BMU
     search, so the engine compiles at most once per (bucket, map-shape)
     instead of once per ragged request size. On TPU the search runs the
-    ``kernels.bmu`` Pallas kernel; elsewhere the jnp oracle. A trace-time
-    counter (``trace_count``) makes the compile-once contract testable.
+    ``kernels.bmu`` Pallas kernel; elsewhere the jnp oracle.
     ``TopoMap.transform`` / ``predict`` run on this same engine.
 
 ``MapService``
@@ -20,6 +26,9 @@ layers:
     in (readers always see a consistent map; in-flight requests finish on
     the old weights). Construct from a fitted estimator, an artifact
     directory, or a ``MapStore`` entry (``repro.api.persistence``).
+
+``repro.serving.gateway.MapGateway`` fronts many services and coalesces
+concurrent requests into bucket-sized dispatches.
 """
 from __future__ import annotations
 
@@ -42,48 +51,119 @@ from repro.kernels.bmu import ops as bmu_ops
 DEFAULT_BUCKETS = (8, 64, 512, 4096)
 
 
+class CompileCache:
+    """Process-wide jit cache for the bucketed BMU search.
+
+    One jitted callable exists per kernel-flag pair; jax keys its own cache
+    on argument shapes, so the effective signature is
+    ``(bucket, n_units, dim, use_pallas, interpret)``. ``trace_count``
+    increments inside the traced function — it counts real compilations,
+    not calls — and ``keys`` records every traced signature.
+
+    ``GLOBAL_COMPILE_CACHE`` is the default shared by every ``BmuEngine``
+    (and therefore every ``TopoMap`` / ``MapService`` / ``MapGateway`` in
+    the process); pass a fresh instance for isolated compile accounting.
+    """
+
+    def __init__(self):
+        self._lock = threading.Lock()
+        self._fns: dict[tuple[bool, bool], callable] = {}
+        self._claimed: set[tuple] = set()
+        self.keys: set[tuple] = set()
+        self.trace_count = 0
+
+    def _record(self, key: tuple) -> None:
+        with self._lock:
+            self.trace_count += 1
+            self.keys.add(key)
+
+    def claim(self, key: tuple) -> bool:
+        """Atomically claim first-dispatch attribution for ``key`` — True
+        for exactly one caller per key, ever. Engines use this to count
+        the compiles they triggered without racing on concurrent cold
+        dispatches of the same signature."""
+        with self._lock:
+            if key in self._claimed:
+                return False
+            self._claimed.add(key)
+            return True
+
+    def fn(self, use_pallas: bool, interpret: bool):
+        """The jitted BMU callable for one resolved flag pair."""
+        flags = (bool(use_pallas), bool(interpret))
+        with self._lock:
+            cached = self._fns.get(flags)
+        if cached is not None:
+            return cached
+
+        def traced(w, s):
+            # Runs only when jax traces a new (bucket, map-shape) signature,
+            # so this side effect counts compilations, not calls.
+            self._record((s.shape[0], w.shape[0], w.shape[1]) + flags)
+            if flags[0]:
+                return bmu_ops.bmu(w, s, use_pallas=True, interpret=flags[1])
+            return search_lib.exact_bmu(w, s)
+
+        jitted = jax.jit(traced)
+        with self._lock:
+            # lost a construction race: keep the first, it owns the jit cache
+            return self._fns.setdefault(flags, jitted)
+
+
+#: Default process-wide cache — see ``CompileCache``.
+GLOBAL_COMPILE_CACHE = CompileCache()
+
+
 class BmuEngine:
     """Bucket-padded, jit-compiled exact-BMU search over a dense map.
 
     ``use_pallas`` / ``interpret`` default to auto: the Pallas kernel on
-    TPU, the jnp oracle elsewhere (matching ``kernels.bmu.ops``).
+    TPU, the jnp oracle elsewhere (matching ``kernels.bmu.ops``). Compiled
+    code lives in ``cache`` (the process-wide ``GLOBAL_COMPILE_CACHE`` by
+    default), so same-shape engines share every signature.
+
+    ``trace_count`` counts the compilations *this engine* caused — cache
+    hits left behind by other engines don't inflate it.
     """
 
     def __init__(self, *, buckets=DEFAULT_BUCKETS,
                  use_pallas: bool | None = None,
-                 interpret: bool | None = None):
+                 interpret: bool | None = None,
+                 cache: CompileCache | None = None):
         self.use_pallas, self.interpret = bmu_ops.resolve_flags(use_pallas,
                                                                 interpret)
         buckets = tuple(sorted({int(b) for b in buckets}))
         if not buckets or buckets[0] < 1:
             raise ValueError(f"buckets must be positive ints, got {buckets!r}")
         self.buckets = buckets
-        self.trace_count = 0      # incremented at trace time == compile count
+        self.cache = cache if cache is not None else GLOBAL_COMPILE_CACHE
+        self.trace_count = 0      # compiles attributed to this engine
         self.padded = 0           # total pad rows added across calls
         self._counter_lock = threading.Lock()
-        self._call = jax.jit(self._traced)
-
-    def _traced(self, w, s):
-        # Runs only when jax traces a new (bucket, map-shape) signature, so
-        # this Python side effect counts compilations, not calls.
-        with self._counter_lock:
-            self.trace_count += 1
-        if self.use_pallas:
-            return bmu_ops.bmu(w, s, use_pallas=True, interpret=self.interpret)
-        return search_lib.exact_bmu(w, s)
+        self._call = self.cache.fn(self.use_pallas, self.interpret)
 
     def _plan(self, cap: int | None) -> tuple[int, ...]:
+        """The bucket ladder under an optional chunk ``cap``.
+
+        ``cap`` clamps the largest chunk to the biggest ladder bucket
+        ``<= cap`` — never to ``cap`` itself — so every dispatch reuses an
+        existing bucket signature and no ``cap`` value can append an
+        oversized bucket or a fresh jit signature. A ``cap`` below the
+        smallest bucket still pads up to it (the ladder floor).
+        """
         if cap is None:
             return self.buckets
         cap = max(1, int(cap))
-        return tuple(b for b in self.buckets if b < cap) + (cap,)
+        eligible = tuple(b for b in self.buckets if b <= cap)
+        return eligible or self.buckets[:1]
 
     def bmu(self, w: jnp.ndarray, data: jnp.ndarray, *,
             cap: int | None = None) -> tuple[jnp.ndarray, jnp.ndarray]:
         """argmin_j |w_j - s_i|^2 for a (B, D) request of any B.
 
         Returns (idx (B,) int32, q2 (B,) float32). ``cap`` bounds the
-        largest chunk (legacy ``chunk=`` escape hatch for memory ceilings).
+        largest chunk (legacy ``chunk=`` escape hatch for memory ceilings);
+        it is clamped into the bucket ladder — see ``_plan``.
         """
         data = jnp.asarray(data, jnp.float32)
         if data.ndim != 2:
@@ -92,6 +172,7 @@ class BmuEngine:
         n = data.shape[0]
         if n == 0:
             return jnp.zeros((0,), jnp.int32), jnp.zeros((0,), jnp.float32)
+        w = jnp.asarray(w, jnp.float32)
         buckets = self._plan(cap)
         idxs, q2s = [], []
         pos = 0
@@ -103,6 +184,11 @@ class BmuEngine:
                 block = jnp.pad(block, ((0, bucket - take), (0, 0)))
                 with self._counter_lock:
                     self.padded += bucket - take
+            key = (bucket, w.shape[0], w.shape[1], self.use_pallas,
+                   self.interpret)
+            if self.cache.claim(key):
+                with self._counter_lock:
+                    self.trace_count += 1
             idx, q2 = self._call(w, block)
             idxs.append(idx[:take].astype(jnp.int32))
             q2s.append(q2[:take])
@@ -114,15 +200,47 @@ class BmuEngine:
 
 @dataclasses.dataclass
 class ServiceStats:
-    """Rolling counters for one ``MapService`` (samples/s, padding waste)."""
+    """Rolling counters for one ``MapService``.
+
+    Two clocks, because concurrent requests overlap:
+
+    ``busy_seconds``
+        Summed per-request engine spans (dispatch + device time, lock wait
+        excluded). Under concurrency the spans overlap, so this can exceed
+        wall time — it measures work attributed, not elapsed.
+    ``window_seconds()``
+        The wall-clock window from the first request's start to the latest
+        request's end. ``throughput()`` divides by this, so it stays honest
+        under concurrent load; ``busy_throughput()`` is the per-request
+        serial rate.
+    """
     requests: int = 0
     samples: int = 0
-    seconds: float = 0.0
+    busy_seconds: float = 0.0
     updates: int = 0
     swaps: int = 0
+    window_start: float | None = None
+    window_end: float | None = None
+
+    @property
+    def seconds(self) -> float:
+        """Back-compat alias for ``busy_seconds``."""
+        return self.busy_seconds
+
+    def window_seconds(self) -> float:
+        if self.window_start is None or self.window_end is None:
+            return 0.0
+        return self.window_end - self.window_start
 
     def throughput(self) -> float:
-        return self.samples / self.seconds if self.seconds > 0 else 0.0
+        """Samples/s over the wall-clock request window."""
+        w = self.window_seconds()
+        return self.samples / w if w > 0 else 0.0
+
+    def busy_throughput(self) -> float:
+        """Samples/s per second of attributed engine time."""
+        return (self.samples / self.busy_seconds
+                if self.busy_seconds > 0 else 0.0)
 
 
 class _Unset:
@@ -130,6 +248,29 @@ class _Unset:
 
 
 _UNSET = _Unset()
+
+
+def postprocess(side: int, kind: str, lattice: bool, idx, q2, labels, *,
+                xp=jnp):
+    """One request's endpoint view of a BMU dispatch (idx, q2, labels).
+
+    The single postprocessing implementation behind both ``MapService``
+    endpoints (``xp=jnp``) and the gateway's numpy-native coalesced
+    dispatches (``xp=np``) — predict/lattice/QE semantics and error
+    messages cannot drift between the two surfaces.
+    """
+    if kind == "predict":
+        if labels is None:
+            raise RuntimeError("predict endpoint needs unit labels — serve a "
+                               "labelled map or swap labels in")
+        return labels[idx]
+    if kind == "quantization_errors":
+        return xp.sqrt(q2)
+    if kind != "transform":
+        raise ValueError(f"unknown endpoint kind {kind!r}")
+    if lattice:
+        return xp.stack([idx // side, idx % side], axis=-1)
+    return idx
 
 
 class MapService:
@@ -140,19 +281,25 @@ class MapService:
     replace it wholesale, so readers never observe a half-updated map.
     Because the engine's jit cache is keyed on shapes only, swapping
     same-shape weights never recompiles.
+
+    Pass ``engine`` to share one ``BmuEngine`` (and its padding/compile
+    stats) across services; by default each service gets its own engine,
+    which still shares compiled code through the process-wide
+    ``CompileCache``.
     """
 
     def __init__(self, cfg: AFMConfig, state: AFMState, *,
                  unit_labels=None, labeling: str = "nearest",
                  buckets=DEFAULT_BUCKETS, use_pallas: bool | None = None,
                  interpret: bool | None = None,
+                 engine: BmuEngine | None = None,
                  update_backend: str = "batched",
                  update_backend_options: dict | None = None, seed: int = 0):
         self._validate_state(cfg, state)
         self.cfg = cfg
         self.labeling = labeling
-        self.engine = BmuEngine(buckets=buckets, use_pallas=use_pallas,
-                                interpret=interpret)
+        self.engine = engine if engine is not None else BmuEngine(
+            buckets=buckets, use_pallas=use_pallas, interpret=interpret)
         self.stats = ServiceStats()
         self._state = state
         self._unit_labels = self._validate_labels(cfg, unit_labels)
@@ -173,7 +320,8 @@ class MapService:
         """Serve a fitted ``TopoMap`` (shares no mutable state with it).
 
         The estimator's resolved kernel flags carry over so the service's
-        BMU path is bit-identical to ``tm.transform`` on every platform.
+        BMU path is bit-identical to ``tm.transform`` on every platform
+        (and, through the shared ``CompileCache``, reuses its compiles).
         """
         kwargs.setdefault("labeling", tm.labeling)
         kwargs.setdefault("use_pallas", tm.engine.use_pallas)
@@ -197,32 +345,42 @@ class MapService:
 
     # ------------------------------------------------------------ endpoints
 
+    def serve_bmu(self, data) -> tuple[jnp.ndarray, jnp.ndarray,
+                                       jnp.ndarray | None]:
+        """One snapshot-consistent BMU dispatch: (idx, q2, unit_labels).
+
+        The building block under every read endpoint (and the gateway's
+        coalesced dispatches): weights and labels come from a single
+        snapshot, so the triple is consistent even when a swap lands
+        mid-request.
+        """
+        state, labels = self.snapshot()
+        idx, q2 = self._serve(state.w, data)
+        return idx, q2, labels
+
     def transform(self, data, *, lattice: bool = False) -> jnp.ndarray:
         """BMU projection: (B,) flat unit indices, or (B, 2) lattice
         coordinates when ``lattice=True``."""
-        state, _ = self.snapshot()
-        idx, _ = self._serve(state.w, data)
-        if not lattice:
-            return idx
-        side = self.cfg.side
-        return jnp.stack([idx // side, idx % side], axis=-1)
+        idx, q2, labels = self.serve_bmu(data)
+        return postprocess(self.cfg.side, "transform", lattice, idx, q2,
+                           labels)
 
     def predict(self, data) -> jnp.ndarray:
         """Classify each sample with its BMU's unit label."""
         # one snapshot: weights and labels are always from the same map
         # version, even when a swap lands mid-request
-        state, labels = self.snapshot()
-        if labels is None:
-            raise RuntimeError("predict endpoint needs unit labels — serve a "
-                               "labelled map or swap labels in")
-        idx, _ = self._serve(state.w, data)
-        return labels[idx]
+        idx, q2, labels = self.serve_bmu(data)
+        return postprocess(self.cfg.side, "predict", False, idx, q2, labels)
+
+    def quantization_errors(self, data) -> jnp.ndarray:
+        """(B,) per-sample Euclidean distance of each sample to its BMU."""
+        idx, q2, labels = self.serve_bmu(data)
+        return postprocess(self.cfg.side, "quantization_errors", False, idx,
+                           q2, labels)
 
     def quantization_error(self, data) -> float:
         """Mean Euclidean distance of the request batch to its BMUs."""
-        state, _ = self.snapshot()
-        _, q2 = self._serve(state.w, data)
-        return float(jnp.mean(jnp.sqrt(q2)))
+        return float(jnp.mean(self.quantization_errors(data)))
 
     def u_matrix(self) -> np.ndarray:
         """(side, side) mean neighbour distance of the served map."""
@@ -233,10 +391,16 @@ class MapService:
         t0 = time.perf_counter()
         idx, q2 = self.engine.bmu(w, data)
         idx = jax.block_until_ready(idx)
+        t1 = time.perf_counter()          # span ends before any lock wait
         with self._lock:
-            self.stats.requests += 1
-            self.stats.samples += int(idx.shape[0])
-            self.stats.seconds += time.perf_counter() - t0
+            st = self.stats
+            st.requests += 1
+            st.samples += int(idx.shape[0])
+            st.busy_seconds += t1 - t0
+            st.window_start = t0 if st.window_start is None else min(
+                st.window_start, t0)
+            st.window_end = t1 if st.window_end is None else max(
+                st.window_end, t1)
         return idx, q2
 
     # --------------------------------------------------------- live updates
@@ -296,7 +460,7 @@ class MapService:
 
     @property
     def compiles(self) -> int:
-        """How many (bucket, map-shape) signatures have been compiled."""
+        """How many (bucket, map-shape) compiles this service triggered."""
         return self.engine.trace_count
 
     @staticmethod

@@ -22,6 +22,54 @@ def test_exact_bmu_matches_bruteforce(rng):
     np.testing.assert_allclose(np.asarray(q2), d.min(1) ** 2, rtol=1e-4, atol=1e-4)
 
 
+def test_exact_bmu_unit_chunking_bitwise_parity(rng):
+    """ISSUE 3: chunking over the unit axis (the documented memory bound)
+    must be bitwise identical to the unchunked path — indices AND q2."""
+    cfg, state = _setup(rng)                   # 64 units
+    s = jax.random.normal(jax.random.fold_in(rng, 9), (23, cfg.dim))
+    idx_full, q2_full = search_lib.exact_bmu(state.w, s)
+    for chunk in (1, 7, 17, 64, 1000):
+        idx, q2 = search_lib.exact_bmu(state.w, s, unit_chunk=chunk)
+        np.testing.assert_array_equal(np.asarray(idx), np.asarray(idx_full))
+        np.testing.assert_array_equal(np.asarray(q2), np.asarray(q2_full))
+    # jit parity too: the serving engine traces exact_bmu on CPU
+    idx, q2 = jax.jit(lambda w, x: search_lib.exact_bmu(w, x, unit_chunk=5))(
+        state.w, s)
+    np.testing.assert_array_equal(np.asarray(idx), np.asarray(idx_full))
+    np.testing.assert_array_equal(np.asarray(q2), np.asarray(q2_full))
+
+
+def test_exact_bmu_one_row_remainder_merges(rng):
+    """n % chunk == 1 must not leave a 1-row tail block: a single-unit
+    block lowers to a differently-reduced matvec (regression: 65 units,
+    chunk 64, dim 784). With the tail merged, chunk=64 collapses to the
+    single-block path (bitwise); smaller chunks at this very wide dim may
+    still wobble one ulp from XLA tiling, but indices and distances agree
+    to float32 precision."""
+    w = jax.random.normal(rng, (65, 784))
+    s = jax.random.normal(jax.random.fold_in(rng, 11), (33, 784))
+    idx_full, q2_full = search_lib.exact_bmu(w, s)
+    idx, q2 = search_lib.exact_bmu(w, s, unit_chunk=64)
+    np.testing.assert_array_equal(np.asarray(idx), np.asarray(idx_full))
+    np.testing.assert_array_equal(np.asarray(q2), np.asarray(q2_full))
+    for chunk in (2, 8):
+        idx, q2 = search_lib.exact_bmu(w, s, unit_chunk=chunk)
+        np.testing.assert_array_equal(np.asarray(idx), np.asarray(idx_full))
+        np.testing.assert_allclose(np.asarray(q2), np.asarray(q2_full),
+                                   rtol=1e-6)
+
+
+def test_exact_bmu_chunk_ties_resolve_to_lowest_index(rng):
+    """Duplicate units across chunk boundaries must keep argmin-first ties."""
+    cfg, state = _setup(rng)
+    w = jnp.concatenate([state.w, state.w], axis=0)   # every unit duplicated
+    s = jax.random.normal(jax.random.fold_in(rng, 10), (11, cfg.dim))
+    idx_full, _ = search_lib.exact_bmu(w, s)
+    for chunk in (3, 64, 65):
+        idx, _ = search_lib.exact_bmu(w, s, unit_chunk=chunk)
+        np.testing.assert_array_equal(np.asarray(idx), np.asarray(idx_full))
+
+
 def test_greedy_never_worsens(rng):
     cfg, state = _setup(rng)
     s = jax.random.normal(jax.random.fold_in(rng, 2), (9, cfg.dim))

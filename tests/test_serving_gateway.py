@@ -1,0 +1,293 @@
+"""MapGateway: endpoint parity with MapService, cross-request coalescing,
+multi-map compile sharing, store-backed open/hot-reload, and lifecycle.
+
+ISSUE 3 acceptance: concurrent batch-1 requests merge into bucket-sized
+dispatches (dispatch count << request count), and K same-shape served maps
+compile the bucket ladder once, not K times.
+"""
+import threading
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.api import AFMConfig, MapStore, TopoMap
+from repro.core import search as search_lib
+from repro.serving import CompileCache, MapGateway, MapService
+from repro.serving import maps as maps_lib
+
+CFG = AFMConfig(side=6, dim=12, i_max=48, batch=4, e_factor=0.5)
+
+
+def _data(n=256, seed=3):
+    key = jax.random.PRNGKey(seed)
+    x = jax.random.normal(key, (n, CFG.dim))
+    y = jax.random.randint(jax.random.fold_in(key, 1), (n,), 0, 4)
+    return x, y
+
+
+@pytest.fixture(scope="module")
+def fitted():
+    x, y = _data()
+    return TopoMap(CFG).fit(x, y, key=jax.random.PRNGKey(7)), x, y
+
+
+@pytest.fixture
+def gateway(fitted):
+    tm, _, _ = fitted
+    with MapGateway(max_delay=0.001) as gw:
+        gw.attach("toy", MapService.from_estimator(tm))
+        yield gw
+
+
+# ----------------------------------------------------------------- parity
+
+
+def test_gateway_endpoints_match_service(gateway, fitted):
+    tm, x, _ = fitted
+    svc = MapService.from_estimator(tm)
+    for n in (1, 7, 64, 200):
+        np.testing.assert_array_equal(
+            np.asarray(gateway.transform("toy", x[:n])),
+            np.asarray(svc.transform(x[:n])))
+    np.testing.assert_array_equal(
+        np.asarray(gateway.transform("toy", x[:9], lattice=True)),
+        np.asarray(svc.transform(x[:9], lattice=True)))
+    np.testing.assert_array_equal(np.asarray(gateway.predict("toy", x[:33])),
+                                  np.asarray(svc.predict(x[:33])))
+    np.testing.assert_allclose(
+        np.asarray(gateway.quantization_errors("toy", x[:12])),
+        np.asarray(svc.quantization_errors(x[:12])), rtol=1e-6)
+    assert gateway.quantization_error("toy", x[:12]) == pytest.approx(
+        svc.quantization_error(x[:12]), rel=1e-5)
+
+
+def test_gateway_validates_requests(gateway, fitted):
+    _, x, _ = fitted
+    with pytest.raises(KeyError, match="no map 'nope'"):
+        gateway.transform("nope", x[:2])
+    with pytest.raises(ValueError, match=r"expected \(B, 12\)"):
+        gateway.transform("toy", x[:2, :5])
+    with pytest.raises(ValueError, match="kind"):
+        gateway.submit("toy", x[:2], kind="u_matrix")
+    idx = gateway.transform("toy", x[:0])
+    assert idx.shape == (0,)
+
+
+def test_gateway_predict_without_labels_errors(fitted):
+    tm, x, _ = fitted
+    with MapGateway(max_delay=0.001) as gw:
+        gw.attach("bare", MapService(CFG, tm.state_))
+        with pytest.raises(RuntimeError, match="unit labels"):
+            gw.predict("bare", x[:3])
+        # the queued path surfaces the error through the future too
+        with pytest.raises(RuntimeError, match="unit labels"):
+            gw.submit("bare", x[:1], kind="predict").result(10)
+
+
+# ------------------------------------------------------------- coalescing
+
+
+def test_gateway_coalesces_concurrent_small_requests(fitted):
+    """Acceptance: a burst of batch-1 requests rides far fewer dispatches."""
+    tm, x, _ = fitted
+    with MapGateway(max_delay=0.05, coalesce_max=64) as gw:
+        gw.attach("toy", MapService.from_estimator(tm))
+        futures = [gw.submit("toy", x[i:i + 1]) for i in range(48)]
+        results = [f.result(30) for f in futures]
+    ref, _ = search_lib.exact_bmu(tm.state_.w, x[:48])
+    np.testing.assert_array_equal(
+        np.concatenate([np.asarray(r) for r in results]), np.asarray(ref))
+    # 48 batch-1 requests under one generous deadline: at most a handful of
+    # 64-sample dispatches (vs 48 per-request dispatches without coalescing)
+    assert gw.stats.dispatches <= 6
+    assert gw.stats.dispatch_requests == 48
+    assert gw.stats.mean_coalesced_requests() >= 8
+    assert gw.stats.direct == 0
+
+
+def test_gateway_mixed_endpoints_share_one_dispatch(fitted):
+    """transform/predict/qe requests coalesce into the same BMU dispatch."""
+    tm, x, _ = fitted
+    with MapGateway(max_delay=0.05, coalesce_max=64) as gw:
+        gw.attach("toy", MapService.from_estimator(tm))
+        f_t = gw.submit("toy", x[:2], kind="transform")
+        f_p = gw.submit("toy", x[2:4], kind="predict")
+        f_q = gw.submit("toy", x[4:6], kind="quantization_errors")
+        svc = MapService.from_estimator(tm)
+        np.testing.assert_array_equal(np.asarray(f_t.result(30)),
+                                      np.asarray(svc.transform(x[:2])))
+        np.testing.assert_array_equal(np.asarray(f_p.result(30)),
+                                      np.asarray(svc.predict(x[2:4])))
+        np.testing.assert_allclose(
+            np.asarray(f_q.result(30)),
+            np.asarray(svc.quantization_errors(x[4:6])), rtol=1e-6)
+        assert gw.stats.dispatches == 1
+
+
+def test_gateway_large_requests_go_direct(fitted):
+    """Requests of coalesce_max samples or more skip the queue entirely."""
+    tm, x, _ = fitted
+    ref, _ = search_lib.exact_bmu(tm.state_.w, x)
+    with MapGateway(max_delay=0.05, coalesce_max=64) as gw:
+        gw.attach("toy", MapService.from_estimator(tm))
+        out = gw.transform("toy", x)           # 256 >= coalesce_max
+        assert gw.stats.direct == 1 and gw.stats.dispatches == 0
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(ref))
+
+
+def test_gateway_threaded_clients_match_oracle(fitted):
+    """Many threads, batch-1 streams: every caller gets its own answer."""
+    tm, x, _ = fitted
+    ref = np.asarray(search_lib.exact_bmu(tm.state_.w, x[:64])[0])
+    failures = []
+    with MapGateway(max_delay=0.01) as gw:
+        gw.attach("toy", MapService.from_estimator(tm))
+
+        def client(cid):
+            for i in range(cid, 64, 8):
+                got = int(np.asarray(gw.transform("toy", x[i:i + 1]))[0])
+                if got != int(ref[i]):
+                    failures.append((i, got, int(ref[i])))
+
+        threads = [threading.Thread(target=client, args=(c,))
+                   for c in range(8)]
+        for t in threads:
+            t.start()
+        for t in threads:
+            t.join()
+        assert not failures, failures[:3]
+        assert gw.stats.requests == 64
+        # concurrent batch-1 traffic actually coalesced
+        assert gw.stats.dispatches < 64
+
+
+# -------------------------------------------------- multi-map compile cost
+
+
+def test_k_same_shape_maps_compile_ladder_once(fitted, monkeypatch):
+    """ISSUE 3 acceptance: total compiles across K same-shape served maps
+    <= ladder size, not K x ladder."""
+    tm, x, _ = fitted
+    cache = CompileCache()
+    monkeypatch.setattr(maps_lib, "GLOBAL_COMPILE_CACHE", cache)
+    with MapGateway(max_delay=0.001, buckets=(8, 64)) as gw:
+        for k in range(4):
+            state = tm.state_._replace(w=jnp.roll(tm.state_.w, k, axis=0))
+            gw.attach(f"map{k}", MapService(CFG, state, buckets=(8, 64),
+                                            unit_labels=tm.unit_labels_))
+        for k in range(4):
+            gw.transform(f"map{k}", x[:5])
+            gw.predict(f"map{k}", x[:40])
+    assert cache.trace_count <= 2              # == ladder size, not 4 x 2
+
+
+# ------------------------------------------------------- store / reload
+
+
+def test_gateway_open_and_hot_reload(tmp_path, fitted):
+    tm, x, y = fitted
+    store = MapStore(str(tmp_path / "store"))
+    store.save(tm, "toy")
+    with MapGateway(store=str(tmp_path / "store"), max_delay=0.001) as gw:
+        name = gw.open("toy")
+        assert name == "toy" and gw.names() == ["toy"]
+        before = np.asarray(gw.transform("toy", x[:32]))
+        np.testing.assert_array_equal(before, np.asarray(tm.transform(x[:32])))
+        compiles = gw.service("toy").engine.trace_count
+
+        # publish v2 (flipped weights + labels) and hot-reload it
+        tm2 = TopoMap.from_state(
+            tm.state_._replace(w=jnp.flip(tm.state_.w, axis=0)), CFG,
+            unit_labels=jnp.flip(tm.unit_labels_))
+        store.save(tm2, "toy")
+        assert gw.reload("toy") == 2
+        after = np.asarray(gw.transform("toy", x[:32]))
+        np.testing.assert_array_equal(after, CFG.n_units - 1 - before)
+        # same service object, same shape: swapped in place, no recompiles
+        assert gw.service("toy").engine.trace_count == compiles
+        assert gw.service("toy").stats.swaps == 1
+        # reloading again is a no-op at the same version
+        assert gw.reload("toy") == 2
+        assert gw.service("toy").stats.swaps == 1
+
+
+def test_gateway_reload_under_alias(tmp_path, fitted):
+    """open(spec, name=alias) must stay reloadable — reload resolves the
+    underlying store name, not the registry alias."""
+    tm, x, _ = fitted
+    store = MapStore(str(tmp_path / "store"))
+    store.save(tm, "toy")
+    with MapGateway(store=str(tmp_path / "store"), max_delay=0.001) as gw:
+        assert gw.open("toy@1", name="prod") == "prod"
+        before = np.asarray(gw.transform("prod", x[:16]))
+        tm2 = TopoMap.from_state(
+            tm.state_._replace(w=jnp.flip(tm.state_.w, axis=0)), CFG,
+            unit_labels=jnp.flip(tm.unit_labels_))
+        store.save(tm2, "toy")
+        assert gw.reload("prod") == 2
+        np.testing.assert_array_equal(np.asarray(gw.transform("prod", x[:16])),
+                                      CFG.n_units - 1 - before)
+
+
+def test_gateway_reload_shape_change_replaces_service(tmp_path, fitted):
+    tm, x, y = fitted
+    store = MapStore(str(tmp_path / "store"))
+    store.save(tm, "toy")
+    with MapGateway(store=str(tmp_path / "store"), max_delay=0.001) as gw:
+        gw.open("toy")
+        old_svc = gw.service("toy")
+        bigger = TopoMap(AFMConfig(side=8, dim=12, i_max=48, batch=4,
+                                   e_factor=0.5))
+        bigger.fit(x, y, key=jax.random.PRNGKey(9))
+        store.save(bigger, "toy")
+        gw.reload("toy")
+        assert gw.service("toy") is not old_svc
+        np.testing.assert_array_equal(
+            np.asarray(gw.transform("toy", x[:16])),
+            np.asarray(bigger.transform(x[:16])))
+
+
+def test_gateway_without_store_refuses_open(fitted):
+    tm, _, _ = fitted
+    with MapGateway(max_delay=0.001) as gw:
+        with pytest.raises(RuntimeError, match="no store"):
+            gw.open("toy")
+        gw.attach("toy", MapService.from_estimator(tm))
+        with pytest.raises(RuntimeError, match="store"):
+            gw.reload("toy")
+
+
+# -------------------------------------------------------------- lifecycle
+
+
+def test_gateway_survives_cancelled_futures(fitted):
+    """A caller cancelling its future must not kill the dispatcher thread
+    (set_result on a cancelled future raises InvalidStateError)."""
+    tm, x, _ = fitted
+    ref, _ = search_lib.exact_bmu(tm.state_.w, x[:8])
+    with MapGateway(max_delay=0.2) as gw:
+        gw.attach("toy", MapService.from_estimator(tm))
+        doomed = gw.submit("toy", x[:1])
+        cancelled = doomed.cancel()        # False if dispatch already won
+        # the dispatcher must keep serving afterwards either way
+        for i in range(1, 8):
+            got = int(np.asarray(gw.submit("toy", x[i:i + 1]).result(30))[0])
+            assert got == int(np.asarray(ref)[i])
+        if cancelled:
+            assert doomed.cancelled()
+
+
+def test_gateway_close_flushes_and_rejects_new_work(fitted):
+    tm, x, _ = fitted
+    gw = MapGateway(max_delay=5.0)             # deadline far in the future
+    gw.attach("toy", MapService.from_estimator(tm))
+    futures = [gw.submit("toy", x[i:i + 1]) for i in range(5)]
+    gw.close()                                 # must flush, not strand them
+    ref, _ = search_lib.exact_bmu(tm.state_.w, x[:5])
+    for i, f in enumerate(futures):
+        assert int(np.asarray(f.result(1))[0]) == int(np.asarray(ref)[i])
+    with pytest.raises(RuntimeError, match="closed"):
+        gw.submit("toy", x[:1])
+    gw.close()                                 # idempotent

@@ -21,6 +21,7 @@ MODULES = [
     ("complexity", "benchmarks.complexity"),
     ("kernel_bench", "benchmarks.kernel_bench"),
     ("serving_bench", "benchmarks.serving_bench"),
+    ("async_bench", "benchmarks.async_bench"),
     ("roofline", "benchmarks.roofline"),
 ]
 

@@ -9,6 +9,7 @@ import argparse
 import jax
 
 from repro.api import AFMConfig, TopoMap, precision_recall
+from repro.api.backends import add_backend_argument
 from repro.core import classifier, som
 from repro.data import DATASETS, make_dataset
 
@@ -24,7 +25,7 @@ def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--datasets", default="satimage,letters")
     ap.add_argument("--side", type=int, default=12)
-    ap.add_argument("--backend", default="batched")
+    add_backend_argument(ap, default="batched")
     args = ap.parse_args()
     key = jax.random.PRNGKey(0)
 

@@ -27,7 +27,9 @@ def main():
         i_max=40 * 100,    # paper uses 600N; reduced here
         batch=16,          # bulk-asynchronous samples in flight
     )
-    tm = TopoMap(cfg)      # backend="batched"; try "reference" or "pallas"
+    # backend="batched" by default; any registry key works — see
+    # repro.api.available_backends() ("reference", "pallas", "async", ...)
+    tm = TopoMap(cfg)
     print(f"map {cfg.side}x{cfg.side}, {cfg.e} exploration hops/sample, "
           f"{cfg.num_steps} steps, backend={tm.backend.name}")
 

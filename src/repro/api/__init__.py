@@ -5,11 +5,12 @@
     pred = tm.predict(xte)
     tm.save("artifacts/my-map")        # ... later: TopoMap.load(...)
 
-One ``TopoMap`` surface, four execution backends (``reference``, ``batched``,
-``pallas``, ``sharded``) behind a string-keyed registry — see
-``repro.api.backends`` and DESIGN.md. Trained maps persist as versioned
-artifacts, optionally organised in a ``MapStore`` (``repro.api.persistence``)
-and served by ``repro.serving.maps.MapService``.
+One ``TopoMap`` surface, five execution backends (``reference``,
+``batched``, ``pallas``, ``sharded``, ``async``) behind a string-keyed
+registry — see ``repro.api.backends`` and DESIGN.md §1/§7. Trained maps
+persist as versioned artifacts, optionally organised in a ``MapStore``
+(``repro.api.persistence``) and served by ``repro.serving.maps.MapService``;
+``repro.launch.stream_train`` trains and serves one map concurrently.
 """
 from repro.api.backends import (BACKENDS, Backend, available_backends,
                                 get_backend, register_backend)

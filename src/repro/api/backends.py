@@ -13,6 +13,10 @@ under a string key (same idiom as the ``repro.configs`` registry):
                on CPU (``use_pallas=False``) unless interpret mode is forced.
 ``sharded``    ``shard_map`` mesh training (``core.distributed``): lattice
                rows over the ``model`` axis, samples over ``data``.
+``async``      Event-driven training (``core.events`` via
+               ``training.async_trainer``): timestamped sample/weight
+               messages under a latency model; zero latency reproduces
+               ``reference`` bitwise on the same sample order.
 =============  ==============================================================
 
 Every backend implements the ``Backend`` protocol:
@@ -54,6 +58,18 @@ def register_backend(name: str):
 
 def available_backends() -> tuple[str, ...]:
     return tuple(sorted(BACKENDS))
+
+
+def add_backend_argument(parser, *, default: str = "batched",
+                         flag: str = "--backend"):
+    """Add a ``--backend`` CLI argument whose choices and help text come
+    from the live registry — launchers and examples can never drift from
+    the set of registered backends (new entries appear automatically)."""
+    choices = sorted(available_backends())
+    return parser.add_argument(
+        flag, default=default, choices=choices,
+        help=f"execution backend ({', '.join(choices)}; "
+             f"default: {default})")
 
 
 def get_backend(name: str, cfg: AFMConfig, **options):
@@ -274,3 +290,9 @@ class ShardedBackend:
 
     def bmu(self, w, samples):
         return search_lib.exact_bmu(w, samples)
+
+
+# The event-driven trainer lives with the training code; importing it here
+# (after the registry machinery above exists — the module imports us back)
+# keeps "async" registered whenever the registry is.
+from repro.training import async_trainer as _async_trainer  # noqa: E402,F401

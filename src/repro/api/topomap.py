@@ -38,10 +38,12 @@ class TopoMap:
     Args:
       cfg: an ``AFMConfig``; omit to build one from ``**overrides``
            (e.g. ``TopoMap(side=12, dim=36, batch=16)``).
-      backend: registry key — 'reference' | 'batched' | 'pallas' | 'sharded'.
+      backend: registry key — any entry of ``available_backends()``
+           ('reference', 'batched', 'pallas', 'sharded', 'async', ...).
       backend_options: forwarded to the backend constructor (e.g.
            ``{"mesh": mesh}`` for 'sharded', ``{"interpret": True}`` for
-           'pallas').
+           'pallas', ``{"latency": "exponential", "delay": 0.5}`` for
+           'async').
       seed: default PRNG seed when ``fit`` is not given an explicit key.
       labeling: unit-labelling rule for ``predict`` — 'nearest' (Eq. 7) or
            'majority' (vote of the unit's basin, Eq.-7 fallback when empty).

@@ -21,6 +21,15 @@ A step decomposes into three injectable stages (see DESIGN.md §2) so the
 ``Stages`` bundles the three; ``DEFAULT_STAGES`` is the paper-faithful
 heuristic-search pipeline, ``EXACT_STAGES`` replaces the relay-race search
 with the exact BMU (the probe / Pallas fast path).
+
+A third execution route exists beside the two step flavours: the
+discrete-event runtime (``repro.core.events``, the ``async`` backend)
+replays the *same* search/adapt stages per timestamped message instead of
+per global step, and reduces to ``train_step`` bitwise when message
+latency is zero. The equation numbers used throughout follow
+``repro.core.schedules``: Eq. (1) sample-unit distance, Eq. (3) GMU
+adaptation, Eq. (5) cascading learning rate l_c(i), Eq. (6) cascading
+probability p_i, Eq. (7) unit labelling.
 """
 from __future__ import annotations
 
@@ -37,7 +46,19 @@ from repro.core import search as search_lib
 
 @dataclasses.dataclass(frozen=True)
 class AFMConfig:
-    """Paper §3 'Default configuration' unless overridden."""
+    """Paper §3 'Default configuration' unless overridden.
+
+    ``batch`` and ``max_waves`` interact: one step seeds **one** cascade
+    from all B threshold crossings of the batch (the bulk-asynchronous
+    merge), and ``max_waves`` caps that cascade's wave count
+    (``None`` -> 8·side², effectively quiescence). When the cap cuts a
+    cascade short, the cut units keep their super-threshold counters and
+    fire at the start of the *next* step's cascade — firings are
+    deferred, never lost. The event engine (``repro.core.events``)
+    applies ``max_waves`` per cascade id; under per-message delivery
+    (exponential latency) each round delivers one message, so the cap
+    counts delivery rounds there.
+    """
     side: int = 30                 # map is side x side units (N = side^2)
     dim: int = 784                 # sample-space dimensionality
     phi: int = 20                  # far links per unit

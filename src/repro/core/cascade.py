@@ -20,6 +20,14 @@ a mean-field merge of the paper's sequential per-message rule (equal up to
 O(l_c^2) ordering terms; validated against the sequential oracle in tests).
 
 Cascade size a_i counts firing incidents (paper's definition); A_i = a_i / N.
+
+This wave form is the synchronous projection of the paper's event system:
+``repro.core.events`` implements the same two rules (adapt on receipt,
+broadcast after theta) as timestamped messages and reproduces these waves
+bitwise when message latency is zero — the engine's delivery rounds *are*
+the wave fronts, drawing the same (4, side, side) Bernoulli tensor per
+wave from the same key chain. ``repro.core.sandpile`` is the same counter
+dynamics with the weights stripped out (the stat-mech oracle).
 """
 from __future__ import annotations
 
@@ -96,7 +104,13 @@ def cascade(w: jnp.ndarray, c: jnp.ndarray, fired0: jnp.ndarray, *,
       p:       scalar cascading probability p_i (Eq. 6).
       theta:   firing threshold (paper/stat-mech mapping: theta = 4).
       key:     PRNG key for the Bernoulli drive.
-      max_waves: safety bound on wave count (default 8 * side * side).
+      max_waves: safety bound on wave count (default 8 * side * side, in
+               practice quiescence). A cascade cut short leaves its last
+               firing front un-reset and super-threshold; those units are
+               picked up by the next ``drive_and_cascade`` call's global
+               ``fired0`` scan, so capped firings are deferred to the next
+               step rather than lost (see ``AFMConfig`` on the
+               batch/max_waves interaction).
       wave_fn: counter-wave implementation ``(c, fired, bern, theta) ->
                (new_c, new_fired, n_recv)``; defaults to the pure-jnp stencil.
                The Pallas kernel (``repro.kernels.cascade.ops.cascade_wave``)

@@ -1,0 +1,445 @@
+"""Discrete-event asynchronous training runtime (the paper's execution model).
+
+Every other backend steps a global synchronous loop; this module executes the
+paper's *actual* model: N autonomous units with local logical clocks that
+interact only through messages. Two message kinds exist —
+
+- **sample delivery**: the heuristic search routes a sample to its GMU, which
+  adapts by Eq. (3) and increments its cascading counter with probability
+  ``p_i`` (Eq. 6);
+- **weight broadcast**: a unit whose counter reaches ``theta`` fires — it
+  resets the counter and sends its *current* weight vector to its 4 lattice
+  neighbours; a receiver adapts by ``w_j += l_c (w_k - w_j)`` (Eq. 5 rate)
+  and is driven with probability ``p_i``, possibly firing in turn.
+
+Those are exactly the paper's two rules (adapt on receipt of a sample or a
+neighbour's weights; broadcast after ``theta`` adaptations), implemented as
+event handlers over a fixed-capacity message pool. Messages carry their
+payload (the sender's weights *at send time*) plus a delivery timestamp from
+a configurable latency model (``zero`` / ``constant`` / ``exponential``), so
+stale-weight effects — the thing bulk-async approximations cannot express —
+are first-class.
+
+Execution is a vectorized discrete-event simulation: a ``lax.while_loop``
+pops *rounds* — all messages sharing the minimal ``(time, generation,
+cascade-id)`` key, or the next sample arrival — and each round's handler is
+data-parallel over units and pool slots. Under zero latency a round is
+precisely one cascade wave, the handlers consume the PRNG stream in the same
+order and shapes as ``core.cascade.drive_and_cascade``, and the engine
+reproduces the ``reference`` backend **bitwise** on the same sample order
+(DESIGN.md §7 gives the argument; ``tests/test_async_trainer.py`` enforces
+it). Avalanche sizes are accounted per originating sample with the same
+firing-incident definition as ``core.cascade`` / ``core.sandpile``, so the
+event engine's cascade-size distribution is directly comparable to the
+BTW-sandpile oracle (and equals it exactly at p = 1).
+
+``repro.training.async_trainer`` wraps this engine as the ``async`` backend
+of ``TopoMap``; ``repro.launch.stream_train`` runs it as a continuous
+train-and-serve loop.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import afm as afm_lib
+from repro.core import schedules
+from repro.core.afm import AFMConfig, AFMState
+
+LATENCIES = ("zero", "constant", "exponential")
+
+#: Direction codes, from the *receiver*'s perspective, matching the slot
+#: order of ``core.cascade._shift4``: 0 = from row+1 (below), 1 = from row-1
+#: (above), 2 = from col+1 (right), 3 = from col-1 (left). A sender's 4
+#: outgoing messages use its ``near`` table order (up, down, left, right),
+#: which lands on exactly these receiver slots — the same (4, side, side)
+#: Bernoulli tensor indexes both implementations identically.
+
+
+@dataclasses.dataclass(frozen=True)
+class EventConfig:
+    """Static configuration of the event engine (hashable: keys a jit cache).
+
+    latency:        message latency model — 'zero' (cascades complete between
+                    sample arrivals; recovers ``reference`` bitwise),
+                    'constant' (every message takes ``delay`` time units), or
+                    'exponential' (i.i.d. Exp(mean=``delay``) per message).
+    delay:          the latency scale, in the same units as sample spacing.
+    sample_spacing: simulated time between consecutive sample arrivals (1.0
+                    by default, so ``delay`` is measured in sample periods).
+    capacity:       message-pool slots; ``None`` -> 8 * N. Overflowing
+                    messages are dropped and counted (``EventReport.dropped``
+                    stays 0 in every supported regime; a nonzero value means
+                    the pool is undersized for the latency/traffic mix).
+    max_rounds:     safety bound on total simulation rounds; ``None`` derives
+                    a generous bound from the cascade wave cap.
+    """
+    latency: str = "zero"
+    delay: float = 0.0
+    sample_spacing: float = 1.0
+    capacity: int | None = None
+    max_rounds: int | None = None
+
+    def __post_init__(self):
+        if self.latency not in LATENCIES:
+            raise ValueError(f"latency must be one of {LATENCIES}, got "
+                             f"{self.latency!r}")
+        if self.delay < 0:
+            raise ValueError(f"delay must be >= 0, got {self.delay}")
+        if self.latency == "zero" and self.delay:
+            raise ValueError("latency='zero' takes no delay; use 'constant'")
+        if self.sample_spacing <= 0:
+            raise ValueError("sample_spacing must be > 0")
+
+
+class EventState(NamedTuple):
+    """The full simulation state carried through the round loop."""
+    # AFM core (the dense trainable state)
+    w: jnp.ndarray          # (N, D) f32
+    c: jnp.ndarray          # (N,)  i32 cascading counters
+    far: jnp.ndarray        # (N, phi) i32
+    near: jnp.ndarray       # (N, 4) i32
+    i: jnp.ndarray          # () i32 — samples consumed (drives schedules)
+    # per-unit locality
+    clock: jnp.ndarray      # (N,) f32 — each unit's last-event time
+    nevents: jnp.ndarray    # (N,) i32 — events processed per unit
+    # message pool (capacity M; time = +inf marks a free slot)
+    msg_t: jnp.ndarray      # (M,) f32 delivery time
+    msg_gen: jnp.ndarray    # (M,) i32 sub-time generation (zero-latency order)
+    msg_cid: jnp.ndarray    # (M,) i32 originating sample event (cascade id)
+    msg_dst: jnp.ndarray    # (M,) i32 receiving unit
+    msg_dir: jnp.ndarray    # (M,) i32 receiver-side direction code (0..3)
+    msg_w: jnp.ndarray      # (M, D) f32 payload: sender weights at send time
+    # per-cascade bookkeeping (one row per sample event of this run)
+    casc_key: jnp.ndarray   # (E, 2) u32 — per-cascade PRNG chain
+    wcount: jnp.ndarray     # (E,) i32 — delivery rounds so far (== waves)
+    sizes: jnp.ndarray      # (E,) i32 — firing incidents (a_i)
+    gmu: jnp.ndarray        # (E,) i32 aux
+    q2: jnp.ndarray         # (E,) f32 aux
+    greedy: jnp.ndarray     # (E,) i32 aux
+    # global simulation counters
+    ev: jnp.ndarray         # () i32 — next sample event index
+    t: jnp.ndarray          # () f32 — last processed round time
+    rounds: jnp.ndarray     # () i32
+    deliveries: jnp.ndarray  # () i32 — weight messages delivered
+    dropped: jnp.ndarray    # () i32 — messages lost to pool overflow
+    lat_key: jnp.ndarray    # (2,) u32 — exponential-latency stream (separate
+    #                         from the training chains, so zero/constant runs
+    #                         consume exactly the reference PRNG stream)
+
+
+class EventReport(NamedTuple):
+    """Per-run accounting (event-throughput benchmarks read this)."""
+    rounds: jnp.ndarray      # () i32 — simulation rounds executed
+    samples: jnp.ndarray     # () i32 — sample deliveries actually consumed
+    #                          (< the requested E only on a max_rounds exit)
+    deliveries: jnp.ndarray  # () i32 — weight-broadcast deliveries
+    dropped: jnp.ndarray    # () i32 — pool-overflow drops + messages
+    #                          stranded by a max_rounds exit (0 in practice)
+    t_end: jnp.ndarray       # () f32 — final simulated time
+    clock: jnp.ndarray       # (N,) f32 — per-unit logical clocks
+    nevents: jnp.ndarray     # (N,) i32 — per-unit event counts
+
+    @property
+    def events(self):
+        """Total events processed (samples + weight deliveries)."""
+        return self.samples + self.deliveries
+
+
+def _resolve(cfg: AFMConfig, ecfg: EventConfig, num_events: int):
+    """Static derived quantities: (pool size M, alloc width K, wave cap,
+    round cap)."""
+    n = cfg.n_units
+    m = ecfg.capacity if ecfg.capacity is not None else 8 * n
+    m = max(int(m), 4)
+    k = min(4 * n, m)
+    max_waves = (8 * cfg.side * cfg.side if cfg.max_waves is None
+                 else cfg.max_waves)
+    max_rounds = (ecfg.max_rounds if ecfg.max_rounds is not None
+                  else num_events * (max_waves + 2) + 1)
+    return m, k, max_waves, int(max_rounds)
+
+
+def init_events(state: AFMState, cfg: AFMConfig, ecfg: EventConfig,
+                num_events: int, lat_key: jax.Array) -> EventState:
+    """Fresh simulation state around an ``AFMState`` for ``num_events``
+    sample arrivals. Simulated time restarts at 0 per run; ``state.i``
+    (samples consumed historically) keeps driving the schedules."""
+    n, d, e = cfg.n_units, cfg.dim, num_events
+    m, _, _, _ = _resolve(cfg, ecfg, num_events)
+    z = jnp.zeros
+    return EventState(
+        w=state.w, c=state.c, far=state.far, near=state.near,
+        i=jnp.asarray(state.i, jnp.int32),
+        clock=z((n,), jnp.float32), nevents=z((n,), jnp.int32),
+        msg_t=jnp.full((m,), jnp.inf, jnp.float32),
+        msg_gen=z((m,), jnp.int32), msg_cid=z((m,), jnp.int32),
+        msg_dst=z((m,), jnp.int32), msg_dir=z((m,), jnp.int32),
+        msg_w=z((m, d), jnp.float32),
+        casc_key=z((e, 2), jnp.uint32), wcount=z((e,), jnp.int32),
+        sizes=z((e,), jnp.int32), gmu=z((e,), jnp.int32),
+        q2=z((e,), jnp.float32), greedy=z((e,), jnp.int32),
+        ev=jnp.int32(0), t=jnp.float32(0.0), rounds=jnp.int32(0),
+        deliveries=jnp.int32(0), dropped=jnp.int32(0),
+        lat_key=jnp.asarray(lat_key, jnp.uint32),
+    )
+
+
+def _default_p(i, cfg: AFMConfig):
+    return schedules.cascade_probability(i, cfg.total_samples, cfg.n_units,
+                                         cfg.c_m, cfg.c_d)
+
+
+def _default_l_c(i, cfg: AFMConfig):
+    return schedules.cascade_learning_rate(i, cfg.total_samples, cfg.c_o,
+                                           cfg.c_s)
+
+
+def _msg_min(es: EventState):
+    """Lexicographic min over active messages: (t, gen, cid) -> the round."""
+    active = jnp.isfinite(es.msg_t)
+    tmin = jnp.min(jnp.where(active, es.msg_t, jnp.inf))
+    big = jnp.int32(2 ** 30)
+    m1 = active & (es.msg_t == tmin)
+    gmin = jnp.min(jnp.where(m1, es.msg_gen, big))
+    m2 = m1 & (es.msg_gen == gmin)
+    cmin = jnp.min(jnp.where(m2, es.msg_cid, big))
+    sel = m2 & (es.msg_cid == cmin)
+    return tmin, gmin, cmin, sel, jnp.any(active)
+
+
+def _make_round_fns(cfg: AFMConfig, ecfg: EventConfig, num_events: int,
+                    search: Callable, p_fn: Callable, l_c_fn: Callable,
+                    i0):
+    """Build the (sample-round, delivery-round) handlers as closures.
+
+    ``i0`` is the run's starting sample count: cascade ``cid`` uses the
+    schedules evaluated at ``i0 + cid`` throughout its lifetime — exactly
+    the value its own sample round saw, matching the reference semantics
+    where one step's cascade runs entirely under that step's l_c / p_i.
+    """
+    n, d, side, theta = cfg.n_units, cfg.dim, cfg.side, cfg.theta
+    m, k_alloc, max_waves, _ = _resolve(cfg, ecfg, num_events)
+    dirs4 = jnp.arange(4, dtype=jnp.int32)
+
+    def fire(es: EventState, fired, cid, t, gen) -> EventState:
+        """Broadcast-after-theta: ``fired`` units reset their counters and
+        enqueue weight messages to their near neighbours (payload = the
+        sender's current w), timestamped by the latency model."""
+        sizes = es.sizes.at[cid].add(jnp.sum(fired, dtype=jnp.int32))
+        c = jnp.where(fired, 0, es.c)
+        # candidate messages: (N, 4) in near-table order (up, down, left,
+        # right) == receiver direction codes (below, above, right, left)
+        valid = (fired[:, None] & (es.near >= 0)).reshape(-1)       # (4N,)
+        dst = es.near.reshape(-1)
+        dircode = jnp.tile(dirs4, (n, 1)).reshape(-1)
+        src = jnp.repeat(jnp.arange(n, dtype=jnp.int32), 4)
+        lat_key = es.lat_key
+        if ecfg.latency == "exponential":
+            lat_key, sub = jax.random.split(lat_key)
+            delay = jax.random.exponential(sub, (4 * n,)) * ecfg.delay
+        elif ecfg.latency == "constant":
+            delay = jnp.full((4 * n,), ecfg.delay, jnp.float32)
+        else:
+            delay = jnp.zeros((4 * n,), jnp.float32)
+        # allocate pool slots: r-th valid candidate -> r-th free slot
+        free = jnp.isinf(es.msg_t)
+        free_slots = jnp.nonzero(free, size=k_alloc, fill_value=m)[0]
+        rank = jnp.cumsum(valid.astype(jnp.int32)) - 1
+        slot = jnp.where(valid & (rank < k_alloc),
+                         free_slots[jnp.clip(rank, 0, k_alloc - 1)], m)
+        dropped = jnp.sum(valid & (slot >= m), dtype=jnp.int32)
+        return es._replace(
+            c=c, sizes=sizes, lat_key=lat_key,
+            dropped=es.dropped + dropped,
+            msg_t=es.msg_t.at[slot].set(t + delay, mode="drop"),
+            msg_gen=es.msg_gen.at[slot].set(gen, mode="drop"),
+            msg_cid=es.msg_cid.at[slot].set(cid, mode="drop"),
+            msg_dst=es.msg_dst.at[slot].set(dst, mode="drop"),
+            msg_dir=es.msg_dir.at[slot].set(dircode, mode="drop"),
+            msg_w=es.msg_w.at[slot].set(es.w[src], mode="drop"),
+        )
+
+    def sample_round(es: EventState, samples, step_keys) -> EventState:
+        """Deliver the next sample: search routes it, the GMU adapts
+        (Eq. 3) and is driven w.p. p_i; a threshold crossing fires.
+
+        PRNG discipline is byte-for-byte the reference step's:
+        ``split(step_key) -> (k_search, k_cascade)``, then
+        ``split(k_cascade) -> (k_drive, k_cascade_chain)`` with the drive's
+        (8, side, side) uniform tensor — so at zero latency the whole round
+        sequence replays ``afm._step`` exactly.
+        """
+        ev = es.ev
+        t_s = ev.astype(jnp.float32) * ecfg.sample_spacing
+        sample = samples[ev]
+        k_search, k_cascade = jax.random.split(step_keys[ev])
+        p_i = p_fn(es.i, cfg)
+        st = AFMState(es.w, es.c, es.far, es.near, es.i)
+        res = search(st, sample[None, :], k_search, cfg)
+        w, counts = afm_lib.adapt_gmu(st, sample[None, :], res.gmu, cfg)
+        k_drive, k_chain = jax.random.split(k_cascade)
+        gmu_mask = counts.astype(jnp.int32).reshape(side, side)
+        draws = jax.random.uniform(k_drive, (8, side, side)) < p_i
+        inc = jnp.sum(
+            draws.astype(jnp.int32)
+            * (jnp.arange(8)[:, None, None] < jnp.minimum(gmu_mask, 8)),
+            axis=0)
+        c = es.c + inc.reshape(-1)
+        fired0 = c >= theta
+        g = res.gmu[0]
+        es = es._replace(
+            w=w, c=c, i=es.i + 1, ev=ev + 1, t=t_s,
+            clock=es.clock.at[g].set(t_s),
+            nevents=es.nevents.at[g].add(1),
+            casc_key=es.casc_key.at[ev].set(k_chain),
+            gmu=es.gmu.at[ev].set(g), q2=es.q2.at[ev].set(res.q2[0]),
+            greedy=es.greedy.at[ev].set(res.greedy_steps[0]),
+            rounds=es.rounds + 1,
+        )
+        if max_waves >= 1:
+            es = fire(es, fired0, ev, t_s, jnp.int32(1))
+        return es
+
+    def delivery_round(es: EventState, tmin, gmin, cmin, sel) -> EventState:
+        """Deliver one round of weight broadcasts (one cascade wave): every
+        receiver adapts by the merged rule, is Bernoulli-driven once per
+        received message, and newly super-threshold receivers fire.
+
+        The merged adaptation sums the four direction slots in the same
+        order as ``core.cascade._shift_sum`` and draws the same
+        (4, side, side) Bernoulli tensor from the cascade's own key chain,
+        so a zero-latency round is bitwise one ``core.cascade`` wave.
+        """
+        cid = cmin
+        sched_i = i0 + cid
+        l_c = l_c_fn(sched_i, cfg)
+        p_i = p_fn(sched_i, cfg)
+        ck, sub = jax.random.split(es.casc_key[cid])
+        k_wave = es.wcount[cid] + 1
+        bern = (jax.random.uniform(sub, (4, side, side)) < p_i).reshape(4, n)
+        seli = sel.astype(jnp.int32)
+        dst = jnp.where(sel, es.msg_dst, n)          # n -> dropped scatter
+        recv4 = jnp.zeros((4, n), jnp.int32).at[es.msg_dir, dst].add(
+            seli, mode="drop")
+        n_recv = jnp.sum(recv4, axis=0)
+        pay4 = jnp.zeros((4, n, d), jnp.float32).at[es.msg_dir, dst].add(
+            es.msg_w * seli[:, None].astype(jnp.float32), mode="drop")
+        sum_wk = pay4[0] + pay4[1] + pay4[2] + pay4[3]
+        c = es.c + jnp.sum(bern.astype(jnp.int32) * recv4, axis=0)
+        new_fired = (c >= theta) & (n_recv > 0)
+        nf = n_recv.astype(es.w.dtype)
+        w = es.w + l_c * (sum_wk - nf[:, None] * es.w)
+        received = n_recv > 0
+        es = es._replace(
+            w=w, c=c, t=tmin,
+            clock=jnp.where(received, tmin, es.clock),
+            nevents=es.nevents + n_recv,
+            msg_t=jnp.where(sel, jnp.inf, es.msg_t),
+            casc_key=es.casc_key.at[cid].set(ck),
+            wcount=es.wcount.at[cid].set(k_wave),
+            deliveries=es.deliveries + jnp.sum(seli),
+            rounds=es.rounds + 1,
+        )
+        allowed = new_fired & (k_wave < max_waves)
+        return fire(es, allowed, cid, tmin, gmin + 1)
+
+    return sample_round, delivery_round
+
+
+@functools.lru_cache(maxsize=32)
+def _compiled_runner(cfg: AFMConfig, ecfg: EventConfig, num_events: int,
+                     search: Callable, p_fn: Callable, l_c_fn: Callable):
+    """One jitted simulation loop per static (config, latency, E, stages)."""
+    _, _, _, max_rounds = _resolve(cfg, ecfg, num_events)
+    e = num_events
+
+    def go(state: AFMState, samples, step_keys, lat_key):
+        es0 = init_events(state, cfg, ecfg, e, lat_key)
+        sample_round, delivery_round = _make_round_fns(
+            cfg, ecfg, e, search, p_fn, l_c_fn, i0=es0.i)
+
+        def cond(es):
+            return ((es.ev < e) | jnp.any(jnp.isfinite(es.msg_t))) \
+                & (es.rounds < max_rounds)
+
+        def body(es):
+            tmin, gmin, cmin, sel, have = _msg_min(es)
+            t_next = jnp.where(es.ev < e,
+                               es.ev.astype(jnp.float32) * ecfg.sample_spacing,
+                               jnp.inf)
+            # messages first on a time tie: an in-flight cascade front is
+            # older than a fresh arrival at the same instant
+            do_msg = have & (tmin <= t_next)
+            return jax.lax.cond(
+                do_msg,
+                lambda s: delivery_round(s, tmin, gmin, cmin, sel),
+                lambda s: sample_round(s, samples, step_keys),
+                es)
+
+        es = jax.lax.while_loop(cond, body, es0)
+        final = AFMState(es.w, es.c, es.far, es.near, es.i)
+        aux = afm_lib.StepAux(
+            gmu=es.gmu[:, None], q2=es.q2[:, None], cascade_size=es.sizes,
+            waves=es.wcount, greedy_steps=es.greedy[:, None])
+        # a max_rounds exit can strand in-flight messages and unconsumed
+        # samples; count the former as dropped and report the latter via
+        # the true consumed count, so truncation is never silent
+        stranded = jnp.sum(jnp.isfinite(es.msg_t), dtype=jnp.int32)
+        report = EventReport(
+            rounds=es.rounds, samples=es.ev,
+            deliveries=es.deliveries, dropped=es.dropped + stranded,
+            t_end=es.t, clock=es.clock, nevents=es.nevents)
+        return final, aux, report
+
+    return jax.jit(go)
+
+
+def run_events(state: AFMState, samples: jnp.ndarray, step_keys: jnp.ndarray,
+               cfg: AFMConfig, ecfg: EventConfig = EventConfig(), *,
+               search: Callable = afm_lib.search_heuristic,
+               p_fn: Callable = _default_p, l_c_fn: Callable = _default_l_c,
+               lat_key: jax.Array | None = None,
+               ) -> tuple[AFMState, afm_lib.StepAux, EventReport]:
+    """Simulate ``E`` sample-delivery events (plus their cascades) to
+    quiescence: the queue drains completely before returning, so the result
+    is a plain dense ``AFMState`` with no in-flight messages. The only
+    exception is the ``max_rounds`` safety bound firing early — messages
+    stranded by that exit are counted into ``report.dropped`` so the
+    truncation is never silent.
+
+    Args:
+      state:     dense starting state.
+      samples:   (E, D) — the explicit per-event sample sequence.
+      step_keys: (E, 2) uint32 — one PRNG key per sample event, split
+                 exactly as the caller's training loop would (the ``async``
+                 backend mirrors ``reference``'s key discipline, which is
+                 what makes the zero-latency bitwise contract testable).
+      cfg/ecfg:  AFM dynamics + event-engine configuration.
+      search:    the search stage (``afm.search_heuristic`` or
+                 ``afm.search_exact`` signature).
+      p_fn/l_c_fn: schedule overrides ``(i, cfg) -> scalar`` — the sandpile
+                 parity tests pin p = 1 through these.
+      lat_key:   PRNG key for the exponential latency stream (ignored by
+                 the zero/constant models, which consume no extra bits).
+    """
+    e = int(samples.shape[0])
+    if e == 0:
+        zero = jnp.int32(0)
+        n = cfg.n_units
+        return state, afm_lib.StepAux(
+            gmu=jnp.zeros((0, 1), jnp.int32), q2=jnp.zeros((0, 1)),
+            cascade_size=jnp.zeros((0,), jnp.int32),
+            waves=jnp.zeros((0,), jnp.int32),
+            greedy_steps=jnp.zeros((0, 1), jnp.int32)), EventReport(
+                zero, zero, zero, zero, jnp.float32(0),
+                jnp.zeros((n,), jnp.float32), jnp.zeros((n,), jnp.int32))
+    if lat_key is None:
+        lat_key = jax.random.PRNGKey(0)
+    fn = _compiled_runner(cfg, ecfg, e, search, p_fn, l_c_fn)
+    return fn(state, jnp.asarray(samples, jnp.float32),
+              jnp.asarray(step_keys, jnp.uint32), lat_key)

@@ -1,0 +1,253 @@
+"""Continuous train-and-serve loop — a map that learns online while serving.
+
+The trainer consumes a sample stream (any registered backend; the
+event-driven ``async`` backend by default) and periodically publishes its
+dense state into the serving stack, while client threads keep reading
+through a ``MapGateway``. Publication reuses the PR-3 atomic swap paths, so
+readers never observe a torn map:
+
+- **in-memory** (default): ``MapService.swap`` on the attached service —
+  in-flight requests finish on the old weights, compiled signatures
+  survive, zero disk traffic;
+- **store-backed** (``--store``): each publication saves a new artifact
+  version and calls ``MapGateway.reload`` — the same hot-reload a separate
+  serving process would use, so the loop doubles as an integration test of
+  the store/reload path.
+
+    PYTHONPATH=src python -m repro.launch.stream_train --dataset satimage \
+        --side 6 --events 1024 --swap-every 256 --clients 2
+
+    # store-backed publication (artifact version per swap + gateway reload)
+    PYTHONPATH=src python -m repro.launch.stream_train --dataset satimage \
+        --side 6 --events 1024 --store /tmp/stream-maps
+
+The run reports training-event throughput, swap count, client request
+count, and the final per-sample quantization error of the served map —
+``qe ... finite=True`` is the line CI's smoke step asserts on.
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import threading
+import time
+
+import jax
+import numpy as np
+
+from repro.api import AFMConfig, MapStore, TopoMap
+from repro.api.backends import add_backend_argument
+from repro.data import DATASETS, make_dataset
+from repro.serving import GatewayStats, MapGateway, MapService
+
+
+@dataclasses.dataclass
+class StreamReport:
+    """Outcome of one ``run_stream`` — returned to callers and printed by
+    the CLI (tests assert on it directly)."""
+    events: int                 # training samples consumed
+    seconds: float              # trainer wall time
+    swaps: int                  # publications into the serving stack
+    client_requests: int        # gateway reads served during training
+    client_errors: list         # exceptions raised in client threads
+    qe: np.ndarray              # final per-sample quantization errors
+    gateway: GatewayStats
+
+    @property
+    def events_per_sec(self) -> float:
+        return self.events / self.seconds if self.seconds > 0 else 0.0
+
+    @property
+    def qe_finite(self) -> bool:
+        return bool(np.isfinite(self.qe).all())
+
+
+def run_stream(cfg: AFMConfig, train_data, eval_data, *,
+               backend: str = "async", backend_options: dict | None = None,
+               events: int = 1024, chunk: int = 64, swap_every: int = 256,
+               clients: int = 2, client_batch: int = 8,
+               store_root: str | None = None, name: str = "stream",
+               max_delay: float = 0.001, seed: int = 0,
+               min_client_reads: int = 1, log=None) -> StreamReport:
+    """Train on ``events`` samples while serving concurrent gateway reads.
+
+    The stream is ``train_data`` cycled in ``chunk``-sized
+    ``partial_fit`` steps; every ``swap_every`` consumed samples the
+    trainer publishes its state (see module docstring for the two
+    publication paths). ``clients`` reader threads issue
+    ``client_batch``-sized ``quantization_errors`` requests against the
+    gateway for the whole duration — the concurrency that makes this a
+    torn-read test, not just a loop. A fast trainer can finish before a
+    client completes its first (compile-paying) read, so the loop keeps
+    serving until at least ``min_client_reads`` requests landed (bounded
+    wait) — the report always reflects genuine train/serve overlap.
+    """
+    log = log or (lambda *_: None)
+    train_data = np.asarray(train_data, np.float32)
+    eval_data = np.asarray(eval_data, np.float32)
+    chunk = max(1, min(chunk, events))
+    tm = TopoMap(cfg, backend=backend,
+                 backend_options=dict(backend_options or {}), seed=seed)
+
+    # warm start: the serving stack needs a fitted state to open with
+    consumed = 0
+    first = train_data[:chunk]
+    tm.partial_fit(first, key=jax.random.fold_in(jax.random.PRNGKey(seed), 0))
+    consumed += len(first)
+
+    store = MapStore(store_root) if store_root else None
+    svc = None
+    if store is not None:
+        store.save(tm, name)
+        gw = MapGateway(store=store, max_delay=max_delay)
+        gw.open(name)
+    else:
+        gw = MapGateway(max_delay=max_delay)
+        svc = MapService.from_estimator(tm)
+        gw.attach(name, svc)
+
+    stop = threading.Event()
+    requests = [0] * max(clients, 1)
+    errors: list = []
+
+    def client(worker: int):
+        rng = np.random.default_rng(seed + 1 + worker)
+        try:
+            while not stop.is_set():
+                lo = int(rng.integers(0, max(1, len(eval_data) - client_batch)))
+                q = gw.quantization_errors(name, eval_data[lo:lo + client_batch])
+                if not np.isfinite(q).all():
+                    raise AssertionError(f"non-finite QE from client {worker}")
+                requests[worker] += 1
+        except BaseException as e:  # noqa: BLE001 — reported to the caller
+            errors.append(e)
+
+    threads = [threading.Thread(target=client, args=(w,), daemon=True)
+               for w in range(clients)]
+
+    def publish() -> None:
+        if store is not None:
+            store.save(tm, name)
+            gw.reload(name)
+        else:
+            svc.swap(tm.state_)
+
+    swaps = 0
+    t0 = time.perf_counter()
+    try:
+        for t in threads:
+            t.start()
+        since_swap, pos, step = consumed, consumed % len(train_data), 1
+        while consumed < events:
+            take = min(chunk, events - consumed)
+            batch = np.take(train_data, range(pos, pos + take), axis=0,
+                            mode="wrap")
+            pos = (pos + take) % len(train_data)
+            tm.partial_fit(batch, key=jax.random.fold_in(
+                jax.random.PRNGKey(seed), step))
+            consumed += take
+            since_swap += take
+            step += 1
+            if since_swap >= swap_every:
+                publish()
+                swaps += 1
+                since_swap = 0
+                log(f"  published after {consumed} events "
+                    f"(swap {swaps}, {sum(requests)} reads served)")
+        if since_swap:                  # final state always reaches serving
+            publish()
+            swaps += 1
+        seconds = time.perf_counter() - t0
+        if clients > 0:
+            deadline = time.perf_counter() + 30.0
+            while (sum(requests) < min_client_reads and not errors
+                   and time.perf_counter() < deadline):
+                time.sleep(0.002)
+        stop.set()
+        for t in threads:
+            t.join(timeout=10)
+        # the served map answers the final QE — reads go through the same
+        # gateway the clients used, against the just-published state
+        qe = np.asarray(gw.quantization_errors(name, eval_data))
+        stats = dataclasses.replace(gw.stats)
+    finally:
+        stop.set()
+        gw.close()
+    return StreamReport(events=consumed, seconds=seconds, swaps=swaps,
+                        client_requests=sum(requests), client_errors=errors,
+                        qe=qe, gateway=stats)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--dataset", default="satimage", choices=sorted(DATASETS))
+    add_backend_argument(ap, default="async")
+    ap.add_argument("--side", type=int, default=6)
+    ap.add_argument("--events", type=int, default=1024,
+                    help="total training samples to stream")
+    ap.add_argument("--chunk", type=int, default=64,
+                    help="samples per partial_fit step")
+    ap.add_argument("--swap-every", type=int, default=256,
+                    help="publish the map into serving every N samples")
+    ap.add_argument("--clients", type=int, default=2,
+                    help="concurrent gateway reader threads")
+    ap.add_argument("--client-batch", type=int, default=8)
+    ap.add_argument("--store", default=None,
+                    help="MapStore root: publish as artifact versions + "
+                         "gateway reload (default: in-memory atomic swap)")
+    ap.add_argument("--name", default=None,
+                    help="served map name (default: DATASET-SIDExSIDE)")
+    ap.add_argument("--latency", default="zero",
+                    choices=("zero", "constant", "exponential"),
+                    help="async backend: message latency model")
+    ap.add_argument("--delay", type=float, default=0.0,
+                    help="async backend: latency scale (sample periods)")
+    ap.add_argument("--search", default=None,
+                    choices=(None, "heuristic", "exact"))
+    ap.add_argument("--e-factor", type=float, default=0.5)
+    ap.add_argument("--train-size", type=int, default=2000)
+    ap.add_argument("--eval-size", type=int, default=256)
+    ap.add_argument("--coalesce-ms", type=float, default=1.0)
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+
+    spec = DATASETS[args.dataset]
+    xtr, _, xte, _ = make_dataset(args.dataset,
+                                  train_size=min(spec.train, args.train_size),
+                                  test_size=min(spec.test, args.eval_size))
+    cfg = AFMConfig(side=args.side, dim=spec.features,
+                    e_factor=args.e_factor, i_max=args.events)
+    opts: dict = {}
+    if args.backend == "async":
+        opts.update(latency=args.latency, delay=args.delay)
+    elif args.latency != "zero" or args.delay:
+        raise SystemExit("--latency/--delay only apply to the async backend")
+    if args.search:
+        if args.backend == "sharded":
+            raise SystemExit("--search is not supported by the sharded "
+                             "backend")
+        opts["search"] = args.search
+    name = args.name or f"{args.dataset}-{args.side}x{args.side}"
+
+    print(f"streaming {args.events} events into a {args.side}x{args.side} "
+          f"map (backend={args.backend}, latency={args.latency}), serving "
+          f"{args.clients} clients, publish every {args.swap_every}")
+    rep = run_stream(cfg, xtr, xte, backend=args.backend,
+                     backend_options=opts, events=args.events,
+                     chunk=args.chunk, swap_every=args.swap_every,
+                     clients=args.clients, client_batch=args.client_batch,
+                     store_root=args.store, name=name,
+                     max_delay=args.coalesce_ms / 1000.0, seed=args.seed,
+                     log=print)
+    print(f"stream: trained {rep.events} events in {rep.seconds:.2f}s "
+          f"({rep.events_per_sec:.0f} events/s), {rep.swaps} swaps, "
+          f"{rep.client_requests} client reads "
+          f"({rep.gateway.dispatches} coalesced dispatches)")
+    print(f"stream qe: mean={float(rep.qe.mean()):.4f} over {len(rep.qe)} "
+          f"samples, finite={rep.qe_finite}")
+    if rep.client_errors:
+        raise SystemExit(f"client errors: {rep.client_errors!r}")
+
+
+if __name__ == "__main__":
+    main()

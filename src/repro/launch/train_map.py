@@ -15,6 +15,11 @@ reports map quality + classification metrics:
     PYTHONPATH=src python -m repro.launch.train_map --dataset letters \
         --backend pallas --interpret
 
+    # event-driven asynchronous training (zero latency == reference bitwise;
+    # nonzero delay lets cascades overlap and broadcasts go stale):
+    PYTHONPATH=src python -m repro.launch.train_map --dataset satimage \
+        --backend async --latency exponential --delay 0.5
+
     # persist the fitted map for repro.launch.serve_map:
     PYTHONPATH=src python -m repro.launch.train_map --dataset satimage \
         --save-artifact /tmp/satimage-map           # one artifact dir
@@ -28,7 +33,8 @@ import time
 
 import jax
 
-from repro.api import AFMConfig, TopoMap, available_backends, precision_recall
+from repro.api import AFMConfig, TopoMap, precision_recall
+from repro.api.backends import add_backend_argument
 from repro.data import DATASETS, make_dataset
 
 
@@ -52,6 +58,10 @@ def build_backend_options(args) -> dict:
         if args.backend != "pallas":
             raise SystemExit("--interpret only applies to the pallas backend")
         opts.update(interpret=True, use_pallas=True)
+    if args.backend == "async":
+        opts.update(latency=args.latency, delay=args.delay)
+    elif args.latency != "zero" or args.delay:
+        raise SystemExit("--latency/--delay only apply to the async backend")
     if args.search:
         opts["search"] = args.search
     return opts
@@ -60,8 +70,7 @@ def build_backend_options(args) -> dict:
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--dataset", default="satimage", choices=sorted(DATASETS))
-    ap.add_argument("--backend", default="batched",
-                    choices=sorted(available_backends()))
+    add_backend_argument(ap, default="batched")
     ap.add_argument("--side", type=int, default=10)
     ap.add_argument("--batch", type=int, default=16)
     ap.add_argument("--e-factor", type=float, default=1.0)
@@ -74,6 +83,11 @@ def main():
                     help="sharded backend mesh, 'DATAxMODEL' (e.g. 2x4)")
     ap.add_argument("--interpret", action="store_true",
                     help="pallas backend: run kernels in interpreter mode")
+    ap.add_argument("--latency", default="zero",
+                    choices=("zero", "constant", "exponential"),
+                    help="async backend: message latency model")
+    ap.add_argument("--delay", type=float, default=0.0,
+                    help="async backend: latency scale in sample periods")
     ap.add_argument("--search", default=None,
                     choices=(None, "heuristic", "exact"),
                     help="override the backend's search stage")

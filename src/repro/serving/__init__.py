@@ -1,7 +1,10 @@
 """Serving: LM decode steps (``serve_step``) and trained-topographic-map
 batched inference (``maps.MapService`` single-map endpoints,
 ``gateway.MapGateway`` concurrent multi-map front end with cross-request
-coalescing — see ``repro.launch.serve_map``)."""
+coalescing — see ``repro.launch.serve_map``). A training loop can publish
+into a live service/gateway between requests via the atomic ``swap`` /
+``reload`` paths — ``repro.launch.stream_train`` is the canonical
+train-and-serve consumer (DESIGN.md §7)."""
 from repro.serving.gateway import GatewayStats, MapGateway
 from repro.serving.maps import (DEFAULT_BUCKETS, GLOBAL_COMPILE_CACHE,
                                 BmuEngine, CompileCache, MapService,

@@ -3,3 +3,8 @@ from repro.training.train_step import TrainState, make_train_step, init_train_st
 
 __all__ = ["AdamWConfig", "adamw_init", "adamw_update",
            "TrainState", "make_train_step", "init_train_state"]
+
+# NOTE: repro.training.async_trainer (the event-driven "async" backend) is
+# intentionally not imported here — repro.api.backends imports it to
+# register the backend, and importing it from the package root would close
+# an import cycle through repro.api.

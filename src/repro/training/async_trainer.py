@@ -1,0 +1,130 @@
+"""The ``async`` execution backend: event-driven asynchronous training.
+
+Wires the discrete-event engine (``repro.core.events``) into the ``Backend``
+protocol of ``repro.api.backends``. Where ``batched`` *approximates* the
+paper's asynchrony by merging B concurrent relay races into one synchronous
+step, ``async`` *executes* it: sample deliveries and weight broadcasts are
+timestamped messages between autonomous units, cascades from different
+samples can overlap in flight, and a latency model controls how stale the
+weights a message carries may be.
+
+Contract (enforced by ``tests/test_async_trainer.py``): with the ``zero``
+latency model, every cascade completes between consecutive sample arrivals
+and the backend reproduces ``reference`` **bitwise** on the same sample
+order — ``step`` mirrors ``ReferenceBackend.step``'s per-sample key split
+and ``run`` mirrors ``ReferenceBackend.run``'s sample selection, so the two
+backends consume identical PRNG streams. Nonzero latency is where the new
+physics lives: overlapping avalanches and stale broadcasts, measured by
+``benchmarks/async_bench.py``.
+
+State between calls is the plain dense ``AFMState``: ``run_events`` drains
+the message queue to quiescence before returning, so ``to_dense`` /
+``from_dense`` are identity and artifacts saved from an async-trained map
+are indistinguishable from any other backend's.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.api import backends as backends_lib
+from repro.core import afm
+from repro.core import events as events_lib
+from repro.core import search as search_lib
+from repro.core.afm import AFMConfig, AFMState
+from repro.core.events import EventConfig, EventReport  # re-export  # noqa: F401
+
+_SEARCHES = {"heuristic": afm.search_heuristic, "exact": afm.search_exact}
+
+
+@backends_lib.register_backend("async")
+class AsyncBackend:
+    """Event-driven training — per-sample dynamics under a message-latency
+    model (``repro.core.events``).
+
+    Options:
+      latency:   'zero' (reference-equivalent; default) | 'constant' |
+                 'exponential'.
+      delay:     latency scale in sample periods (see ``EventConfig``).
+      sample_spacing / capacity / max_rounds: forwarded to ``EventConfig``.
+      search:    'heuristic' (paper relay race) or 'exact' (full BMU).
+      lat_seed:  seed of the exponential-latency stream (kept separate from
+                 the training keys so zero/constant runs stay bitwise
+                 reproducible against ``reference``).
+
+    Like ``reference``, the config is forced to ``batch=1`` — the engine is
+    inherently per-sample, and the full ``i_max`` sample budget maps to
+    ``i_max`` events. ``last_report`` holds the most recent run's
+    ``EventReport`` (rounds, deliveries, per-unit clocks) for benchmarks.
+    """
+
+    def __init__(self, cfg: AFMConfig, *, latency: str = "zero",
+                 delay: float = 0.0, sample_spacing: float = 1.0,
+                 capacity: int | None = None, max_rounds: int | None = None,
+                 search: str = "heuristic", lat_seed: int = 0):
+        if search not in _SEARCHES:
+            raise ValueError(f"search must be one of {sorted(_SEARCHES)}, "
+                             f"got {search!r}")
+        self.cfg = dataclasses.replace(cfg, batch=1)
+        self.ecfg = EventConfig(latency=latency, delay=delay,
+                                sample_spacing=sample_spacing,
+                                capacity=capacity, max_rounds=max_rounds)
+        self.search = _SEARCHES[search]
+        self._lat_key = jax.random.PRNGKey(lat_seed)
+        self.last_report: EventReport | None = None
+
+    def _next_lat_key(self):
+        self._lat_key, sub = jax.random.split(self._lat_key)
+        return sub
+
+    def init(self, key, samples=None) -> AFMState:
+        return afm.init(key, self.cfg, samples)
+
+    def step(self, state: AFMState, samples, key):
+        """Consume a (B, D) batch as B timestamped sample-delivery events.
+
+        Per-sample keys come from one ``split(key, B)`` — the same
+        discipline as ``ReferenceBackend.step`` — so at zero latency the
+        two backends stay bitwise interchangeable under ``partial_fit``.
+        """
+        samples = jnp.asarray(samples, jnp.float32)
+        step_keys = jax.random.split(key, samples.shape[0])
+        state, aux, report = events_lib.run_events(
+            state, samples, step_keys, self.cfg, self.ecfg,
+            search=self.search, lat_key=self._next_lat_key())
+        self.last_report = report
+        return state, aux
+
+    def run(self, state: AFMState, data, key, num_steps=None):
+        """Full training run: ``num_steps`` events drawn with replacement.
+
+        Sample selection replays ``ReferenceBackend.run`` exactly — per
+        event ``split(k) -> (k_step, k_data)`` and a ``randint`` draw — so
+        the zero-latency engine sees the same sample order and step keys
+        as the reference scan.
+        """
+        num_steps = self.cfg.num_steps if num_steps is None else num_steps
+        data = jnp.asarray(data, jnp.float32)
+        keys = jax.random.split(key, num_steps)
+        pairs = jax.vmap(jax.random.split)(keys)        # (steps, 2, 2)
+        step_keys, data_keys = pairs[:, 0], pairs[:, 1]
+        idx = jax.vmap(
+            lambda k: jax.random.randint(k, (1,), 0, data.shape[0])
+        )(data_keys)[:, 0]
+        state, aux, report = events_lib.run_events(
+            state, data[idx], step_keys, self.cfg, self.ecfg,
+            search=self.search, lat_key=self._next_lat_key())
+        jax.block_until_ready(state.w)
+        self.last_report = report
+        return state, aux
+
+    def to_dense(self, state: AFMState) -> AFMState:
+        return state
+
+    def from_dense(self, state: AFMState) -> AFMState:
+        return state
+
+    def bmu(self, w, samples):
+        return search_lib.exact_bmu(w, samples)

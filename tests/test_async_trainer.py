@@ -1,0 +1,360 @@
+"""Event-driven ``async`` backend (ISSUE 4 acceptance).
+
+Contracts under test:
+- zero-latency ``async`` == ``reference`` **bitwise** (fit and step; the
+  acceptance 10x10 seeded map included);
+- the broadcast-after-theta rule fires exactly at the threshold;
+- the engine's avalanche sizes equal ``core.sandpile``'s chain exactly at
+  p = 1 (the BTW-abelian regime);
+- nonzero latency changes the dynamics (stale broadcasts) but stays finite
+  and conserves message accounting;
+- ``stream_train``'s publish-while-serving loop is torn-read safe against
+  concurrent gateway clients, in-memory and store-backed.
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.api import AFMConfig, TopoMap, available_backends, get_backend
+from repro.core import afm, events, sandpile
+from repro.core import search as search_lib
+from repro.core.afm import AFMState
+from repro.data import make_dataset
+from repro.launch.stream_train import run_stream
+
+CFG = AFMConfig(side=6, dim=12, i_max=48, batch=1, e_factor=0.5)
+
+
+def _tiny_data(dim=12, n=256, seed=3):
+    key = jax.random.PRNGKey(seed)
+    return jax.random.normal(key, (n, dim))
+
+
+# ------------------------------------------------------- backend contract
+
+
+def test_async_backend_registered():
+    assert "async" in available_backends()
+    b = get_backend("async", CFG)
+    assert b.cfg.batch == 1          # per-sample semantics, like reference
+
+
+def test_async_rejects_bad_options():
+    with pytest.raises(ValueError, match="latency"):
+        get_backend("async", CFG, latency="warp")
+    with pytest.raises(ValueError, match="search"):
+        get_backend("async", CFG, search="oracle")
+    with pytest.raises(ValueError, match="delay"):
+        events.EventConfig(latency="constant", delay=-1.0)
+    with pytest.raises(ValueError, match="no delay"):
+        events.EventConfig(latency="zero", delay=0.5)
+
+
+# ------------------------------------------- zero-latency == reference
+
+
+def test_zero_latency_fit_matches_reference_bitwise():
+    x = _tiny_data()
+    key = jax.random.PRNGKey(7)
+    ref = TopoMap(CFG, backend="reference").fit(x, key=key)
+    asy = TopoMap(CFG, backend="async").fit(x, key=key)
+    np.testing.assert_array_equal(np.asarray(ref.state_.w),
+                                  np.asarray(asy.state_.w))
+    np.testing.assert_array_equal(np.asarray(ref.state_.c),
+                                  np.asarray(asy.state_.c))
+    assert int(asy.state_.i) == int(ref.state_.i) == CFG.i_max
+    # the whole per-step trajectory matches, not just the endpoint
+    for field in ("gmu", "q2", "cascade_size", "waves", "greedy_steps"):
+        np.testing.assert_array_equal(
+            np.asarray(getattr(ref.fit_aux_, field)),
+            np.asarray(getattr(asy.fit_aux_, field)), err_msg=field)
+    rep = asy.backend.last_report
+    assert int(rep.dropped) == 0
+    assert int(rep.samples) == CFG.i_max
+    # at zero latency: one round per sample + one per cascade wave
+    assert int(rep.rounds) == CFG.i_max + int(np.sum(
+        np.asarray(asy.fit_aux_.waves)))
+
+
+def test_zero_latency_10x10_seeded_map_bitwise():
+    """Acceptance: bitwise weight parity on a seeded 10x10 map."""
+    cfg = AFMConfig(side=10, dim=8, i_max=100, batch=1, e_factor=0.3)
+    x = _tiny_data(dim=8, n=512, seed=11)
+    key = jax.random.PRNGKey(42)
+    w_ref = TopoMap(cfg, backend="reference").fit(x, key=key).state_.w
+    w_asy = TopoMap(cfg, backend="async").fit(x, key=key).state_.w
+    np.testing.assert_array_equal(np.asarray(w_ref), np.asarray(w_asy))
+
+
+def test_zero_latency_step_matches_reference_bitwise():
+    """partial_fit parity: same per-sample key split as ReferenceBackend."""
+    x = _tiny_data()
+    ref = get_backend("reference", CFG)
+    asy = get_backend("async", CFG)
+    state = ref.init(jax.random.PRNGKey(1), x)
+    k = jax.random.PRNGKey(9)
+    s_ref, aux_ref = ref.step(state, x[:16], k)
+    s_asy, aux_asy = asy.step(state, x[:16], k)
+    np.testing.assert_array_equal(np.asarray(s_ref.w), np.asarray(s_asy.w))
+    np.testing.assert_array_equal(np.asarray(s_ref.c), np.asarray(s_asy.c))
+    np.testing.assert_array_equal(np.asarray(aux_ref.gmu),
+                                  np.asarray(aux_asy.gmu))
+
+
+def test_zero_latency_exact_search_matches_reference_bitwise():
+    x = _tiny_data()
+    key = jax.random.PRNGKey(5)
+    w_ref = TopoMap(CFG, backend="reference",
+                    backend_options={"search": "exact"}).fit(x, key=key) \
+        .state_.w
+    w_asy = TopoMap(CFG, backend="async",
+                    backend_options={"search": "exact"}).fit(x, key=key) \
+        .state_.w
+    np.testing.assert_array_equal(np.asarray(w_ref), np.asarray(w_asy))
+
+
+# -------------------------------------------------- event-handler rules
+
+
+def _site_search(state, samples, key, cfg):
+    """Deterministic routing stage: the sample's value *is* the target unit."""
+    del key, cfg
+    gmu = samples[:, 0].astype(jnp.int32)
+    zeros = jnp.zeros_like(gmu)
+    return search_lib.SearchResult(gmu, jnp.zeros(gmu.shape, jnp.float32),
+                                   zeros, zeros)
+
+
+def _p_one(i, cfg):
+    del i, cfg
+    return jnp.float32(1.0)
+
+
+def _l_c_const(i, cfg):
+    del i, cfg
+    return jnp.float32(0.25)
+
+
+def _unit_state(cfg, seed=0):
+    return afm.init(jax.random.PRNGKey(seed), cfg)
+
+
+def test_broadcast_fires_exactly_at_theta():
+    """Rule ii): a unit broadcasts after theta adaptations, not before."""
+    cfg = AFMConfig(side=5, dim=1, theta=4, l_s=0.1, i_max=16)
+    center = 12                      # (2, 2): all 4 neighbours on-lattice
+    state = _unit_state(cfg)
+    w0 = np.asarray(state.w).copy()
+    keys = jax.random.split(jax.random.PRNGKey(0), 4)
+    target = jnp.full((4, 1), float(center), jnp.float32)
+
+    # theta - 1 sample deliveries: adaptations but no broadcast
+    st3, aux3, rep3 = events.run_events(
+        state, target[:3], keys[:3], cfg, events.EventConfig(),
+        search=_site_search, p_fn=_p_one, l_c_fn=_l_c_const)
+    assert int(rep3.deliveries) == 0
+    assert int(st3.c[center]) == 3
+    assert np.asarray(aux3.cascade_size).sum() == 0
+    neigh = [center - 5, center + 5, center - 1, center + 1]
+    np.testing.assert_array_equal(np.asarray(st3.w)[neigh], w0[neigh])
+
+    # the theta-th adaptation fires: counter resets, 4 neighbours receive
+    st4, aux4, rep4 = events.run_events(
+        state, target, keys, cfg, events.EventConfig(),
+        search=_site_search, p_fn=_p_one, l_c_fn=_l_c_const)
+    assert int(rep4.deliveries) == 4
+    assert int(st4.c[center]) == 0
+    assert list(np.asarray(aux4.cascade_size)) == [0, 0, 0, 1]
+    w_center = float(st4.w[center, 0])
+    for j in neigh:
+        # receiver rule: w_j += l_c (w_k - w_j), with the sender's weights
+        # as broadcast (post its theta adaptations)
+        expect = w0[j, 0] + 0.25 * (w_center - w0[j, 0])
+        assert float(st4.w[j, 0]) == pytest.approx(expect, rel=1e-6)
+        assert int(st4.c[j]) == 1    # driven once per received broadcast
+    # per-unit logical clocks: only touched units advanced
+    touched = np.asarray(rep4.nevents)
+    assert touched[center] == 4 and all(touched[j] == 1 for j in neigh)
+    assert touched.sum() == 8
+
+
+def test_max_rounds_truncation_is_reported():
+    """A max_rounds exit must be visible: stranded messages count as
+    dropped and the report's sample count reflects what actually ran."""
+    cfg = AFMConfig(side=5, dim=1, theta=4, l_s=0.1, i_max=8)
+    state = _unit_state(cfg)
+    target = jnp.full((8, 1), 12.0, jnp.float32)
+    keys = jax.random.split(jax.random.PRNGKey(0), 8)
+    # 4 sample rounds reach theta and enqueue 4 broadcasts; the bound
+    # stops the loop before the delivery round
+    _, _, rep = events.run_events(
+        state, target, keys, cfg, events.EventConfig(max_rounds=4),
+        search=_site_search, p_fn=_p_one, l_c_fn=_l_c_const)
+    assert int(rep.rounds) == 4
+    assert int(rep.samples) == 4         # not the requested 8
+    assert int(rep.dropped) == 4         # the stranded broadcasts
+
+
+def test_avalanche_sizes_match_sandpile_at_p1():
+    """At p = 1 (BTW-abelian regime) the event engine's per-sample cascade
+    sizes equal the pure sandpile chain's exactly — same sites, same
+    toppling multiset, message passing notwithstanding."""
+    side, steps = 12, 300
+    # replicate sandpile.run_chain's site sequence key-for-key
+    keys = jax.random.split(jax.random.PRNGKey(0), steps)
+    sites = jax.vmap(
+        lambda k: jax.random.randint(jax.random.split(k)[0], (2,), 0, side)
+    )(keys)
+    flat = (sites[:, 0] * side + sites[:, 1]).astype(jnp.float32)
+
+    cfg = AFMConfig(side=side, dim=1, l_s=0.0, theta=4, i_max=steps)
+    state = _unit_state(cfg)._replace(c=jnp.zeros((side * side,), jnp.int32))
+    _, aux, rep = events.run_events(
+        state, flat[:, None], jax.random.split(jax.random.PRNGKey(1), steps),
+        cfg, events.EventConfig(), search=_site_search, p_fn=_p_one,
+        l_c_fn=_l_c_const)
+    ref_sizes = sandpile.run_chain(jax.random.PRNGKey(0), side=side,
+                                   steps=steps, p=1.0)
+    np.testing.assert_array_equal(np.asarray(aux.cascade_size),
+                                  np.asarray(ref_sizes))
+    assert int(rep.dropped) == 0
+    assert np.asarray(aux.cascade_size).max() >= 5   # real avalanches ran
+
+
+# ------------------------------------------------------- latency models
+
+
+def test_latency_changes_dynamics_but_stays_sound():
+    """Stale broadcasts and overlapping cascades: nonzero delay must change
+    the trajectory (it is the asynchrony) without breaking accounting."""
+    cfg = dataclasses.replace(CFG, i_max=64)
+    x = _tiny_data()
+    key = jax.random.PRNGKey(3)
+    state = afm.init(jax.random.PRNGKey(1), cfg, x)
+    samples = x[:64]
+    step_keys = jax.random.split(key, 64)
+
+    def run(ecfg):
+        return events.run_events(state, samples, step_keys, cfg, ecfg,
+                                 p_fn=_p_one, l_c_fn=_l_c_const)
+
+    st0, aux0, rep0 = run(events.EventConfig())
+    st_c, aux_c, rep_c = run(events.EventConfig(latency="constant",
+                                                delay=2.0))
+    st_e, _, rep_e = run(events.EventConfig(latency="exponential",
+                                            delay=2.0, capacity=2048))
+    assert not np.array_equal(np.asarray(st0.w), np.asarray(st_c.w))
+    assert not np.array_equal(np.asarray(st0.w), np.asarray(st_e.w))
+    for st, rep in ((st0, rep0), (st_c, rep_c), (st_e, rep_e)):
+        assert np.isfinite(np.asarray(st.w)).all()
+        assert int(rep.dropped) == 0
+        assert int(st.i) == 64
+        # each firing broadcasts to 2..4 on-lattice neighbours
+        fired = int(np.sum(np.asarray(
+            aux0.cascade_size if rep is rep0 else aux_c.cascade_size)))
+        if rep is not rep_e:
+            assert 2 * fired <= int(rep.deliveries) <= 4 * fired
+    # exponential mode delivers messages one at a time: at least as many
+    # rounds as the wave-synchronous modes
+    assert int(rep_e.rounds) >= int(rep_c.rounds) - 1
+
+
+def test_zero_latency_report_clocks_monotone():
+    x = _tiny_data()
+    tm = TopoMap(CFG, backend="async").fit(x, key=jax.random.PRNGKey(7))
+    rep = tm.backend.last_report
+    clock = np.asarray(rep.clock)
+    assert clock.max() <= float(rep.t_end)
+    assert int(rep.events) == int(rep.samples) + int(rep.deliveries)
+
+
+# ------------------------------------------------ stream train-and-serve
+
+
+STREAM_CFG = AFMConfig(side=4, dim=12, i_max=96, e_factor=0.5)
+
+
+def test_stream_train_swap_is_torn_read_safe():
+    """Concurrent gateway clients read per-sample QE for the whole run
+    while the trainer hot-swaps state in; every read must be finite and
+    error-free (clients assert in-thread)."""
+    x = _tiny_data(n=200)
+    rep = run_stream(STREAM_CFG, x, x[:64], backend="async", events=96,
+                     chunk=16, swap_every=32, clients=2, client_batch=4)
+    assert rep.client_errors == []
+    assert rep.events == 96
+    assert rep.swaps >= 3
+    assert rep.client_requests >= 1
+    assert rep.qe_finite and rep.qe.shape == (64,)
+
+
+def test_stream_train_store_backed_reload(tmp_path):
+    """Store-backed publication: artifact versions append and the gateway
+    serves the reloaded map."""
+    from repro.api import MapStore
+    x = _tiny_data(n=200)
+    root = str(tmp_path / "maps")
+    rep = run_stream(STREAM_CFG, x, x[:32], backend="batched", events=96,
+                     chunk=16, swap_every=48, clients=1, client_batch=4,
+                     store_root=root, name="stream-test")
+    assert rep.client_errors == []
+    assert rep.qe_finite
+    assert len(MapStore(root).versions("stream-test")) >= 3
+    assert rep.swaps >= 2
+
+
+def test_stream_train_works_without_clients():
+    x = _tiny_data(n=128)
+    rep = run_stream(STREAM_CFG, x, x[:16], backend="batched", events=64,
+                     chunk=32, swap_every=32, clients=0)
+    assert rep.qe_finite and rep.client_requests == 0
+
+
+# ------------------------------------------------------------- plumbing
+
+
+def test_backend_argument_helper_tracks_registry():
+    import argparse
+    from repro.api.backends import add_backend_argument
+    ap = argparse.ArgumentParser()
+    add_backend_argument(ap, default="batched")
+    assert ap.parse_args(["--backend", "async"]).backend == "async"
+    with pytest.raises(SystemExit):
+        ap.parse_args(["--backend", "warp-drive"])
+
+
+def test_async_artifact_roundtrip(tmp_path):
+    """Async-trained maps persist/load like any other backend's."""
+    x = _tiny_data()
+    tm = TopoMap(CFG, backend="async").fit(x, key=jax.random.PRNGKey(2))
+    path = str(tmp_path / "async-map")
+    tm.save(path)
+    tm2 = TopoMap.load(path)
+    np.testing.assert_array_equal(np.asarray(tm.transform(x[:9])),
+                                  np.asarray(tm2.transform(x[:9])))
+    assert tm2.backend.name == "async"
+
+
+@pytest.mark.slow
+def test_async_quality_on_dataset():
+    """End-to-end: async training reaches batched-level map quality."""
+    xtr, ytr, xte, yte = make_dataset("satimage", train_size=600,
+                                      test_size=150)
+    cfg = AFMConfig(side=6, dim=36, i_max=720, e_factor=1.0)
+    key = jax.random.PRNGKey(0)
+    q_asy = TopoMap(cfg, backend="async").fit(xtr, key=key) \
+        .quantization_error(xte)
+    q_bat = TopoMap(cfg, backend="batched", batch=8).fit(xtr, key=key) \
+        .quantization_error(xte)
+    assert abs(q_asy - q_bat) / q_bat < 0.25, (q_asy, q_bat)
+
+
+def test_run_events_empty_batch():
+    state = afm.init(jax.random.PRNGKey(0), CFG)
+    st, aux, rep = events.run_events(
+        state, jnp.zeros((0, CFG.dim)), jnp.zeros((0, 2), jnp.uint32), CFG)
+    assert st is state and aux.cascade_size.shape == (0,)
+    assert int(rep.rounds) == 0

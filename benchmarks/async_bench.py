@@ -1,5 +1,5 @@
 """Event-engine benchmarks: throughput of the discrete-event runtime and
-async-vs-batched map quality (ISSUE 4 acceptance).
+async-vs-batched map quality (ISSUE 4 acceptance; sparse rounds ISSUE 5).
 
 Two scenarios:
 
@@ -7,10 +7,13 @@ Two scenarios:
    (zero / constant / exponential) on one map shape: ``samples_per_s`` is
    the cross-backend comparable training rate, ``events_per_s``
    additionally counts weight-broadcast deliveries (the engine's real
-   workload). ``reference_one_shot`` is the fused-scan baseline at the
-   same sample budget — both sides timed as a one-shot fit including
-   their jit cost (the reference backend re-traces per ``run()`` call),
-   i.e. the CLI-visible rates, not a warm-loop kernel duel.
+   workload). ``zero`` is the production zero-latency path (the fused
+   reference scan, ISSUE 5); ``zero_engine`` forces the discrete-event
+   simulation on the same run (``engine='event'``) — the gap between the
+   two is the event-simulation tax. ``reference_one_shot`` is the fused
+   scan baseline at the same sample budget; both sides are timed warm
+   (the backends cache their jitted scans across ``run()`` calls), so the
+   numbers compare steady-state training rates, not trace time.
 
 2. **Map quality** — quantization / topographic error of ``async``
    (zero-latency and exponential-latency) vs ``batched`` on an
@@ -20,9 +23,16 @@ Two scenarios:
    broadcasts cost in map quality.
 
     PYTHONPATH=src python -m benchmarks.async_bench [--full]
+
+CI runs the perf-smoke variant — throughput only, with a non-regression
+floor on the zero-latency rate and a machine-readable artifact:
+
+    PYTHONPATH=src python -m benchmarks.async_bench --no-quality \\
+        --json-out BENCH_async.json --assert-zero-floor 0.25
 """
 from __future__ import annotations
 
+import json
 import time
 
 import jax
@@ -39,19 +49,36 @@ def _fit(cfg, data, backend, options=None, key=0):
     return tm, time.perf_counter() - t0
 
 
+def _timed_fit(cfg, data, backend, options=None, key=0, reps=5):
+    """Warm-compile once, then best-of-``reps`` fits on the same estimator
+    (the backends cache their jitted runners, so repeat fits measure the
+    steady-state rate; single-shot wall times on a shared CPU are too noisy
+    to gate perf acceptance on)."""
+    tm = TopoMap(cfg, backend=backend, backend_options=options or {})
+    tm.fit(data, key=jax.random.PRNGKey(key))        # compile warm-up
+    best = float("inf")
+    for _ in range(reps):
+        t0 = time.perf_counter()
+        tm.fit(data, key=jax.random.PRNGKey(key))
+        best = min(best, time.perf_counter() - t0)
+    return tm, best
+
+
 def throughput(quick: bool) -> dict:
     side, dim = (8, 16) if quick else (16, 64)
     events = 1024 if quick else 16384
     cfg = AFMConfig(side=side, dim=dim, i_max=events, e_factor=0.5)
     data = np.asarray(jax.random.normal(jax.random.PRNGKey(0), (2048, dim)))
     out = {}
-    for latency, delay in (("zero", 0.0), ("constant", 0.5),
-                           ("exponential", 0.5)):
-        opts = {"latency": latency, "delay": delay}
-        _fit(cfg, data, "async", opts)               # compile warm-up
-        tm, dt = _fit(cfg, data, "async", opts)
+    for name, latency, delay, engine in (
+            ("zero", "zero", 0.0, "auto"),
+            ("zero_engine", "zero", 0.0, "event"),
+            ("constant", "constant", 0.5, "auto"),
+            ("exponential", "exponential", 0.5, "auto")):
+        opts = {"latency": latency, "delay": delay, "engine": engine}
+        tm, dt = _timed_fit(cfg, data, "async", opts)
         rep = tm.backend.last_report
-        out[latency] = {
+        out[name] = {
             "seconds": dt,
             # samples/s is the cross-backend comparable rate; events/s
             # additionally counts weight-broadcast deliveries (engine work)
@@ -62,12 +89,11 @@ def throughput(quick: bool) -> dict:
             "deliveries": int(rep.deliveries),
             "dropped": int(rep.dropped),
         }
-    # the fused-scan baseline on the same sample budget. NB: the reference
-    # backend re-jits its scan per run() call, so its time includes one
-    # retrace — this is the CLI-visible cost of a one-shot fit on both
-    # sides, not a warm-loop kernel comparison.
-    _fit(cfg, data, "reference")
-    _, dt_ref = _fit(cfg, data, "reference")
+    # the fused-scan baseline on the same sample budget, timed warm: the
+    # backend caches its jitted scan across run() calls, so the second fit
+    # below reuses the first's trace — same steady-state basis as the async
+    # rows above
+    _, dt_ref = _timed_fit(cfg, data, "reference")
     out["reference_one_shot"] = {"seconds": dt_ref,
                                  "samples_per_s": events / dt_ref}
     return out
@@ -94,19 +120,27 @@ def quality(quick: bool) -> dict:
     return out
 
 
-def run(quick: bool = True):
-    results = {"throughput": throughput(quick), "quality": quality(quick)}
-    common.save("async_bench", results)
+def run(quick: bool = True, with_quality: bool = True):
+    results = {"throughput": throughput(quick)}
     thr = results["throughput"]
-    qual = results["quality"]
     derived = {
         "zero_samples_per_s": round(thr["zero"]["samples_per_s"]),
+        "zero_engine_samples_per_s":
+            round(thr["zero_engine"]["samples_per_s"]),
+        "const_samples_per_s": round(thr["constant"]["samples_per_s"]),
         "exp_samples_per_s": round(thr["exponential"]["samples_per_s"]),
         "zero_events_per_s": round(thr["zero"]["events_per_s"]),
-        "async_zero_qe": round(qual["async_zero"]["qe"], 4),
-        "async_exp_qe": round(qual["async_exp"]["qe"], 4),
-        "batched_qe": round(qual["batched_b16"]["qe"], 4),
+        "reference_samples_per_s":
+            round(thr["reference_one_shot"]["samples_per_s"]),
     }
+    if with_quality:
+        results["quality"] = qual = quality(quick)
+        derived.update({
+            "async_zero_qe": round(qual["async_zero"]["qe"], 4),
+            "async_exp_qe": round(qual["async_exp"]["qe"], 4),
+            "batched_qe": round(qual["batched_b16"]["qe"], 4),
+        })
+    common.save("async_bench", results)
     return results, derived
 
 
@@ -114,7 +148,33 @@ if __name__ == "__main__":
     import argparse
     ap = argparse.ArgumentParser()
     ap.add_argument("--full", action="store_true")
+    ap.add_argument("--no-quality", action="store_true",
+                    help="throughput only (the CI perf-smoke variant)")
+    ap.add_argument("--json-out", default=None, metavar="PATH",
+                    help="also write results+derived as JSON (e.g. "
+                         "BENCH_async.json, the perf-trajectory artifact)")
+    ap.add_argument("--assert-zero-floor", type=float, default=None,
+                    metavar="RATIO",
+                    help="fail unless zero-latency async samples/s >= "
+                         "RATIO * reference one-shot samples/s (generous "
+                         "non-regression floor for CI)")
     args = ap.parse_args()
-    _, derived = run(quick=not args.full)
+    results, derived = run(quick=not args.full,
+                           with_quality=not args.no_quality)
     for k, v in derived.items():
         print(f"{k}: {v}")
+    if args.json_out:
+        with open(args.json_out, "w") as f:
+            json.dump({"results": results, "derived": derived}, f, indent=1)
+        print(f"wrote {args.json_out}")
+    if args.assert_zero_floor is not None:
+        zero = derived["zero_samples_per_s"]
+        ref = derived["reference_samples_per_s"]
+        floor = args.assert_zero_floor * ref
+        if zero < floor:
+            raise SystemExit(
+                f"perf smoke FAILED: zero-latency async {zero} samples/s "
+                f"< floor {floor:.0f} ({args.assert_zero_floor} x "
+                f"reference {ref})")
+        print(f"perf smoke OK: zero {zero} >= {args.assert_zero_floor} x "
+              f"reference {ref}")

@@ -4,10 +4,17 @@ Prints ``name,us_per_call,derived`` CSV per the repo convention, where
 us_per_call is the module's wall time and ``derived`` the claim-check summary.
 
     PYTHONPATH=src python -m benchmarks.run [--quick/--full] [--only fig2,...]
+
+``--json-out DIR`` additionally writes one ``BENCH_<name>.json`` per module
+run (``async_bench`` -> ``BENCH_async.json``: the ``_bench`` suffix is
+dropped) holding ``{"results": ..., "derived": ...}`` — machine-readable
+snapshots that seed the perf trajectory across PRs (CI keeps the async one).
 """
 from __future__ import annotations
 
 import argparse
+import json
+import os
 import sys
 import time
 
@@ -31,6 +38,8 @@ def main() -> None:
     ap.add_argument("--full", action="store_true",
                     help="paper-scale budgets (hours on CPU; for real hw)")
     ap.add_argument("--only", default=None)
+    ap.add_argument("--json-out", default=None, metavar="DIR",
+                    help="write BENCH_<name>.json per module run")
     args = ap.parse_args()
     only = set(args.only.split(",")) if args.only else None
 
@@ -44,8 +53,16 @@ def main() -> None:
         try:
             mod = importlib.import_module(modname)
             print(f"## {name}", file=sys.stderr, flush=True)
-            _, derived = mod.run(quick=not args.full)
+            results, derived = mod.run(quick=not args.full)
             us = (time.time() - t0) * 1e6
+            if args.json_out:
+                os.makedirs(args.json_out, exist_ok=True)
+                short = name[:-len("_bench")] if name.endswith("_bench") \
+                    else name
+                path = os.path.join(args.json_out, f"BENCH_{short}.json")
+                with open(path, "w") as f:
+                    json.dump({"results": results, "derived": derived}, f,
+                              indent=1)
             dstr = ";".join(f"{k}={v}" for k, v in (derived or {}).items())
             print(f"{name},{us:.0f},{dstr}", flush=True)
         except Exception as e:  # noqa: BLE001

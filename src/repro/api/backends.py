@@ -119,6 +119,7 @@ class _DenseBackend:
         self.cfg = cfg
         self.stages = _stages_for(search)
         self._jit_step = None
+        self._jit_run = None
 
     def init(self, key, samples=None) -> AFMState:
         return afm.init(key, self.cfg, samples)
@@ -132,10 +133,16 @@ class _DenseBackend:
         return self._jit_step(state, samples, key)
 
     def run(self, state, data, key, num_steps=None):
+        # the jitted scan is cached on the instance across run() calls
+        # (one trace per distinct (num_steps, data shape)); a fresh lambda
+        # per call used to force a full retrace every fit
         num_steps = self.cfg.num_steps if num_steps is None else num_steps
-        fn = jax.jit(lambda s, d, k: afm.train(
-            s, d, k, self.cfg, num_steps=num_steps, stages=self.stages))
-        state, aux = fn(state, data, key)
+        if self._jit_run is None:
+            self._jit_run = jax.jit(
+                lambda s, d, k, n: afm.train(s, d, k, self.cfg, num_steps=n,
+                                             stages=self.stages),
+                static_argnums=3)
+        state, aux = self._jit_run(state, data, key, num_steps)
         jax.block_until_ready(state.w)
         return state, aux
 
@@ -181,15 +188,19 @@ class ReferenceBackend(_DenseBackend):
 
     def run(self, state, data, key, num_steps=None):
         num_steps = self.cfg.num_steps if num_steps is None else num_steps
-
-        def body(s, k):
-            ks, kd = jax.random.split(k)
-            idx = jax.random.randint(kd, (1,), 0, data.shape[0])
-            return afm.train_step(s, data[idx][0], ks, self.cfg,
-                                  stages=self.stages)
-
-        fn = jax.jit(lambda s, ks: jax.lax.scan(body, s, ks))
-        state, aux = fn(state, jax.random.split(key, num_steps))
+        if self._jit_run is None:
+            # data enters as an argument (not a closure constant) so the
+            # cached trace is reused across run() calls and datasets
+            def _run(s, d, ks):
+                def body(s, k):
+                    kstep, kd = jax.random.split(k)
+                    idx = jax.random.randint(kd, (1,), 0, d.shape[0])
+                    return afm.train_step(s, d[idx][0], kstep, self.cfg,
+                                          stages=self.stages)
+                return jax.lax.scan(body, s, ks)
+            self._jit_run = jax.jit(_run)
+        state, aux = self._jit_run(state, data,
+                                   jax.random.split(key, num_steps))
         jax.block_until_ready(state.w)
         return state, aux
 
@@ -212,6 +223,7 @@ class PallasBackend(_DenseBackend):
         use_pallas, interpret = bmu_ops.resolve_flags(use_pallas, interpret)
         self.cfg = cfg
         self._jit_step = None
+        self._jit_run = None
         self.use_pallas = use_pallas
         self.interpret = interpret
         wave_fn = functools.partial(cascade_ops.cascade_wave,
@@ -243,6 +255,7 @@ class ShardedBackend:
             mesh = compat.make_mesh((1, 1), ("data", "model"))
         self.cfg = cfg
         self._jit_step = None
+        self._jit_run = None
         self.mesh = mesh
         self.model_axis = model_axis
         self.step_fn, self.state_specs = distributed.make_sharded_train_step(
@@ -267,14 +280,16 @@ class ShardedBackend:
     def run(self, state, data, key, num_steps=None):
         num_steps = self.cfg.num_steps if num_steps is None else num_steps
         batch = self.cfg.batch
-
-        def body(s, k):
-            ks, kd = jax.random.split(k)
-            idx = jax.random.randint(kd, (batch,), 0, data.shape[0])
-            return self.step_fn(s, data[idx], ks)
-
-        fn = jax.jit(lambda s, ks: jax.lax.scan(body, s, ks))
-        state, aux = fn(state, jax.random.split(key, num_steps))
+        if self._jit_run is None:
+            def _run(s, d, ks):
+                def body(s, k):
+                    kstep, kd = jax.random.split(k)
+                    idx = jax.random.randint(kd, (batch,), 0, d.shape[0])
+                    return self.step_fn(s, d[idx], kstep)
+                return jax.lax.scan(body, s, ks)
+            self._jit_run = jax.jit(_run)
+        state, aux = self._jit_run(state, data,
+                                   jax.random.split(key, num_steps))
         jax.block_until_ready(state.w)
         return state, aux
 

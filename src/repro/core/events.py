@@ -20,18 +20,36 @@ a configurable latency model (``zero`` / ``constant`` / ``exponential``), so
 stale-weight effects — the thing bulk-async approximations cannot express —
 are first-class.
 
-Execution is a vectorized discrete-event simulation: a ``lax.while_loop``
-pops *rounds* — all messages sharing the minimal ``(time, generation,
-cascade-id)`` key, or the next sample arrival — and each round's handler is
-data-parallel over units and pool slots. Under zero latency a round is
-precisely one cascade wave, the handlers consume the PRNG stream in the same
-order and shapes as ``core.cascade.drive_and_cascade``, and the engine
-reproduces the ``reference`` backend **bitwise** on the same sample order
-(DESIGN.md §7 gives the argument; ``tests/test_async_trainer.py`` enforces
-it). Avalanche sizes are accounted per originating sample with the same
-firing-incident definition as ``core.cascade`` / ``core.sandpile``, so the
-event engine's cascade-size distribution is directly comparable to the
-BTW-sandpile oracle (and equals it exactly at p = 1).
+Execution pops *rounds* — all messages sharing the minimal ``(time,
+generation, cascade-id)`` key, or the next sample arrival — and each round's
+handler is data-parallel over the messages actually in the round, not over
+the whole map. Three statically-chosen runners implement the same round
+semantics (DESIGN.md §7 "round cost model"):
+
+- **fused zero-latency scan** — ``latency='zero'`` runs replay the
+  ``reference`` backend's fused step scan op-for-op (plus an accounting
+  sidecar for the ``EventReport``), so the common case pays no
+  event-simulation tax. Bitwise-equal to the engine by the PR-4 parity
+  argument; ``tests/test_async_trainer.py`` enforces it.
+- **sample-scan engine** (the default) — an outer ``lax.scan`` over sample
+  arrivals with an inner ``while_loop`` that drains due messages before each
+  arrival. Per-round work is sized by the active message set: a packed
+  single-key min finds the round, a free-list ring allocates pool slots in
+  O(1) amortized, and delivery gathers/scatters only the ≤K selected slots
+  and their receiver rows instead of rewriting the dense (N, D) state.
+- **budgeted loop** — only when ``EventConfig.max_rounds`` is set: the
+  original single ``while_loop`` with a global round budget, preserving the
+  exact truncation accounting (stranded messages count as dropped).
+
+Under zero latency a round is precisely one cascade wave, the handlers
+consume the PRNG stream in the same order and shapes as
+``core.cascade.drive_and_cascade``, and every runner reproduces the
+``reference`` backend **bitwise** on the same sample order (DESIGN.md §7
+gives the argument). Avalanche sizes are accounted per originating sample
+with the same firing-incident definition as ``core.cascade`` /
+``core.sandpile``, so the event engine's cascade-size distribution is
+directly comparable to the BTW-sandpile oracle (and equals it exactly at
+p = 1).
 
 ``repro.training.async_trainer`` wraps this engine as the ``async`` backend
 of ``TopoMap``; ``repro.launch.stream_train`` runs it as a continuous
@@ -47,10 +65,18 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import afm as afm_lib
+from repro.core import cascade as cascade_lib
 from repro.core import schedules
 from repro.core.afm import AFMConfig, AFMState
 
 LATENCIES = ("zero", "constant", "exponential")
+ENGINES = ("auto", "event")
+
+#: Bit pattern of float32 +inf. ``msg_t`` is always ≥ 0 (sample times and
+#: delays are non-negative), so bit-casting it to uint32 is order-preserving
+#: and a free slot (t = +inf) carries the largest key — the round-selection
+#: min needs no separate ``isfinite`` mask.
+_INF_BITS = 0x7F800000
 
 #: Direction codes, from the *receiver*'s perspective, matching the slot
 #: order of ``core.cascade._shift4``: 0 = from row+1 (below), 1 = from row-1
@@ -75,19 +101,30 @@ class EventConfig:
                     messages are dropped and counted (``EventReport.dropped``
                     stays 0 in every supported regime; a nonzero value means
                     the pool is undersized for the latency/traffic mix).
-    max_rounds:     safety bound on total simulation rounds; ``None`` derives
-                    a generous bound from the cascade wave cap.
+    max_rounds:     safety bound on total simulation rounds; ``None`` (the
+                    default) lets the engine run to quiescence — cascades are
+                    intrinsically bounded by ``max_waves`` — and enables the
+                    fast scan-structured runners. Setting a value selects the
+                    budgeted loop with exact truncation accounting.
+    engine:         'auto' (default) dispatches eligible ``latency='zero'``
+                    runs to the fused reference scan; 'event' always runs the
+                    discrete-event simulation (benchmarks and the parity
+                    suite use it to measure/pin the engine itself).
     """
     latency: str = "zero"
     delay: float = 0.0
     sample_spacing: float = 1.0
     capacity: int | None = None
     max_rounds: int | None = None
+    engine: str = "auto"
 
     def __post_init__(self):
         if self.latency not in LATENCIES:
             raise ValueError(f"latency must be one of {LATENCIES}, got "
                              f"{self.latency!r}")
+        if self.engine not in ENGINES:
+            raise ValueError(f"engine must be one of {ENGINES}, got "
+                             f"{self.engine!r}")
         if self.delay < 0:
             raise ValueError(f"delay must be >= 0, got {self.delay}")
         if self.latency == "zero" and self.delay:
@@ -97,23 +134,31 @@ class EventConfig:
 
 
 class EventState(NamedTuple):
-    """The full simulation state carried through the round loop."""
+    """The full simulation state carried through the round loop.
+
+    The lattice tables (``far`` / ``near``) are loop-invariant and live as
+    closures of the compiled runner, not in the carry."""
     # AFM core (the dense trainable state)
     w: jnp.ndarray          # (N, D) f32
     c: jnp.ndarray          # (N,)  i32 cascading counters
-    far: jnp.ndarray        # (N, phi) i32
-    near: jnp.ndarray       # (N, 4) i32
     i: jnp.ndarray          # () i32 — samples consumed (drives schedules)
     # per-unit locality
     clock: jnp.ndarray      # (N,) f32 — each unit's last-event time
     nevents: jnp.ndarray    # (N,) i32 — events processed per unit
     # message pool (capacity M; time = +inf marks a free slot)
     msg_t: jnp.ndarray      # (M,) f32 delivery time
-    msg_gen: jnp.ndarray    # (M,) i32 sub-time generation (zero-latency order)
-    msg_cid: jnp.ndarray    # (M,) i32 originating sample event (cascade id)
+    msg_key: jnp.ndarray    # (M,) u32 packed gen·E+cid lane (packed mode)
+    msg_gen: jnp.ndarray    # (M,) i32 sub-time generation (lex mode)
+    msg_cid: jnp.ndarray    # (M,) i32 originating sample event (lex mode)
     msg_dst: jnp.ndarray    # (M,) i32 receiving unit
     msg_dir: jnp.ndarray    # (M,) i32 receiver-side direction code (0..3)
     msg_w: jnp.ndarray      # (M, D) f32 payload: sender weights at send time
+    # O(1)-amortized slot allocator: ring queue of free slot ids.
+    # Invariant: entries [free_head, free_head + free_n) (mod M) are the ids
+    # of exactly the free pool slots; free_n == M - #active messages.
+    free_ring: jnp.ndarray  # (M,) i32
+    free_head: jnp.ndarray  # () i32
+    free_n: jnp.ndarray     # () i32
     # per-cascade bookkeeping (one row per sample event of this run)
     casc_key: jnp.ndarray   # (E, 2) u32 — per-cascade PRNG chain
     wcount: jnp.ndarray     # (E,) i32 — delivery rounds so far (== waves)
@@ -161,7 +206,60 @@ def _resolve(cfg: AFMConfig, ecfg: EventConfig, num_events: int):
                  else cfg.max_waves)
     max_rounds = (ecfg.max_rounds if ecfg.max_rounds is not None
                   else num_events * (max_waves + 2) + 1)
-    return m, k, max_waves, int(max_rounds)
+    # the round counter is int32; a huge max_waves would overflow the
+    # derived budget (it is a safety net, not a semantic bound)
+    return m, k, max_waves, min(int(max_rounds), 2 ** 31 - 1)
+
+
+def _key_scale(num_events: int, max_waves: int) -> int | None:
+    """E if ``(gen, cid)`` packs losslessly into one uint32 lane (the common
+    case: key = gen · E + cid with gen ≤ max_waves + 1 and cid < E), else
+    ``None`` — the engine then falls back to the exact 3-field lexicographic
+    min, which is correct for any int32 gen/cid (no magic sentinel)."""
+    if num_events <= 0:
+        return None
+    if (max_waves + 2) * num_events <= 2 ** 32:
+        return num_events
+    return None
+
+
+def _pool_min_lex(msg_t, msg_gen, msg_cid):
+    """Exact lexicographic min over active messages: (t, gen, cid) -> round.
+
+    The time lane is compared through its uint32 bit pattern (valid because
+    ``msg_t`` ≥ 0 and free slots are +inf — see ``_INF_BITS``); gen/cid use
+    ``iinfo(int32).max`` as the masked fill, which stays correct even when a
+    real gen/cid equals the fill (the old engine's ``2**30`` sentinel broke
+    there — see the regression test)."""
+    hi = jax.lax.bitcast_convert_type(msg_t, jnp.uint32)
+    hi_min = jnp.min(hi)
+    have = hi_min != jnp.uint32(_INF_BITS)
+    imax = jnp.int32(jnp.iinfo(jnp.int32).max)
+    m1 = hi == hi_min
+    gmin = jnp.min(jnp.where(m1, msg_gen, imax))
+    m2 = m1 & (msg_gen == gmin)
+    cmin = jnp.min(jnp.where(m2, msg_cid, imax))
+    sel = m2 & (msg_cid == cmin)
+    tmin = jax.lax.bitcast_convert_type(hi_min, jnp.float32)
+    return tmin, gmin, cmin, sel, have
+
+
+def _pool_min_packed(msg_t, msg_key, scale: int):
+    """Packed round-key min: 2 reduction passes instead of 3.
+
+    Lane 1 is the bit-cast time, lane 2 the packed ``gen · scale + cid``
+    (``scale`` == E, statically guaranteed not to overflow uint32 by
+    ``_key_scale``)."""
+    hi = jax.lax.bitcast_convert_type(msg_t, jnp.uint32)
+    hi_min = jnp.min(hi)
+    have = hi_min != jnp.uint32(_INF_BITS)
+    lo_min = jnp.min(jnp.where(hi == hi_min, msg_key,
+                               jnp.uint32(0xFFFFFFFF)))
+    sel = (hi == hi_min) & (msg_key == lo_min)
+    tmin = jax.lax.bitcast_convert_type(hi_min, jnp.float32)
+    gmin = (lo_min // jnp.uint32(scale)).astype(jnp.int32)
+    cmin = (lo_min % jnp.uint32(scale)).astype(jnp.int32)
+    return tmin, gmin, cmin, sel, have
 
 
 def init_events(state: AFMState, cfg: AFMConfig, ecfg: EventConfig,
@@ -173,13 +271,16 @@ def init_events(state: AFMState, cfg: AFMConfig, ecfg: EventConfig,
     m, _, _, _ = _resolve(cfg, ecfg, num_events)
     z = jnp.zeros
     return EventState(
-        w=state.w, c=state.c, far=state.far, near=state.near,
+        w=state.w, c=state.c,
         i=jnp.asarray(state.i, jnp.int32),
         clock=z((n,), jnp.float32), nevents=z((n,), jnp.int32),
         msg_t=jnp.full((m,), jnp.inf, jnp.float32),
+        msg_key=jnp.full((m,), 0xFFFFFFFF, jnp.uint32),
         msg_gen=z((m,), jnp.int32), msg_cid=z((m,), jnp.int32),
         msg_dst=z((m,), jnp.int32), msg_dir=z((m,), jnp.int32),
         msg_w=z((m, d), jnp.float32),
+        free_ring=jnp.arange(m, dtype=jnp.int32),
+        free_head=jnp.int32(0), free_n=jnp.int32(m),
         casc_key=z((e, 2), jnp.uint32), wcount=z((e,), jnp.int32),
         sizes=z((e,), jnp.int32), gmu=z((e,), jnp.int32),
         q2=z((e,), jnp.float32), greedy=z((e,), jnp.int32),
@@ -199,72 +300,103 @@ def _default_l_c(i, cfg: AFMConfig):
                                            cfg.c_s)
 
 
-def _msg_min(es: EventState):
-    """Lexicographic min over active messages: (t, gen, cid) -> the round."""
-    active = jnp.isfinite(es.msg_t)
-    tmin = jnp.min(jnp.where(active, es.msg_t, jnp.inf))
-    big = jnp.int32(2 ** 30)
-    m1 = active & (es.msg_t == tmin)
-    gmin = jnp.min(jnp.where(m1, es.msg_gen, big))
-    m2 = m1 & (es.msg_gen == gmin)
-    cmin = jnp.min(jnp.where(m2, es.msg_cid, big))
-    sel = m2 & (es.msg_cid == cmin)
-    return tmin, gmin, cmin, sel, jnp.any(active)
-
-
 def _make_round_fns(cfg: AFMConfig, ecfg: EventConfig, num_events: int,
                     search: Callable, p_fn: Callable, l_c_fn: Callable,
-                    i0):
-    """Build the (sample-round, delivery-round) handlers as closures.
+                    i0, far, near):
+    """Build (sample_round, delivery_round, pool_min) as closures.
 
     ``i0`` is the run's starting sample count: cascade ``cid`` uses the
     schedules evaluated at ``i0 + cid`` throughout its lifetime — exactly
     the value its own sample round saw, matching the reference semantics
     where one step's cascade runs entirely under that step's l_c / p_i.
+    ``far`` / ``near`` are the loop-invariant lattice tables.
     """
     n, d, side, theta = cfg.n_units, cfg.dim, cfg.side, cfg.theta
-    m, k_alloc, max_waves, _ = _resolve(cfg, ecfg, num_events)
-    dirs4 = jnp.arange(4, dtype=jnp.int32)
+    m, k_sel, max_waves, _ = _resolve(cfg, ecfg, num_events)
+    scale = _key_scale(num_events, max_waves)
+    # a delivery round selects one (t, gen, cid): at zero/constant latency
+    # that is one fire()'s output (≤ 4N messages); exponential delays can in
+    # principle tie across fires, so the selection width covers the pool
+    k_round = m if ecfg.latency == "exponential" else k_sel
+    dirs4 = jnp.tile(jnp.arange(4, dtype=jnp.int32), (n, 1)).reshape(-1)
+    src4 = jnp.repeat(jnp.arange(n, dtype=jnp.int32), 4)
+    dst4 = near.reshape(-1)
+
+    def pool_min(es: EventState):
+        if scale is not None:
+            return _pool_min_packed(es.msg_t, es.msg_key, scale)
+        return _pool_min_lex(es.msg_t, es.msg_gen, es.msg_cid)
 
     def fire(es: EventState, fired, cid, t, gen) -> EventState:
         """Broadcast-after-theta: ``fired`` units reset their counters and
         enqueue weight messages to their near neighbours (payload = the
-        sender's current w), timestamped by the latency model."""
-        sizes = es.sizes.at[cid].add(jnp.sum(fired, dtype=jnp.int32))
+        sender's current w), timestamped by the latency model. Pool slots
+        come off the free ring: the r-th valid candidate takes the r-th
+        free slot, candidates past the free count are dropped (counted)."""
+        nfired = jnp.sum(fired, dtype=jnp.int32)
+        sizes = es.sizes.at[cid].add(nfired)
         c = jnp.where(fired, 0, es.c)
-        # candidate messages: (N, 4) in near-table order (up, down, left,
-        # right) == receiver direction codes (below, above, right, left)
-        valid = (fired[:, None] & (es.near >= 0)).reshape(-1)       # (4N,)
-        dst = es.near.reshape(-1)
-        dircode = jnp.tile(dirs4, (n, 1)).reshape(-1)
-        src = jnp.repeat(jnp.arange(n, dtype=jnp.int32), 4)
+        # The lat_key split is unconditional — the exponential stream
+        # advances once per fire() call whether or not anything fired,
+        # matching the original engine's PRNG discipline bit-for-bit.
         lat_key = es.lat_key
         if ecfg.latency == "exponential":
-            lat_key, sub = jax.random.split(lat_key)
-            delay = jax.random.exponential(sub, (4 * n,)) * ecfg.delay
-        elif ecfg.latency == "constant":
-            delay = jnp.full((4 * n,), ecfg.delay, jnp.float32)
+            lat_key, lat_sub = jax.random.split(lat_key)
         else:
-            delay = jnp.zeros((4 * n,), jnp.float32)
-        # allocate pool slots: r-th valid candidate -> r-th free slot
-        free = jnp.isinf(es.msg_t)
-        free_slots = jnp.nonzero(free, size=k_alloc, fill_value=m)[0]
-        rank = jnp.cumsum(valid.astype(jnp.int32)) - 1
-        slot = jnp.where(valid & (rank < k_alloc),
-                         free_slots[jnp.clip(rank, 0, k_alloc - 1)], m)
-        dropped = jnp.sum(valid & (slot >= m), dtype=jnp.int32)
+            lat_sub = lat_key
+        gen_u = jnp.asarray(gen, jnp.int32)
+        cid_u = jnp.asarray(cid, jnp.int32)
+
+        # the cond closes over exactly the pool fields enqueue mutates, so
+        # the skip branch is a no-op over small operands (not the full
+        # EventState — E-sized aux arrays never enter the conditional)
+        pool = (es.msg_t, es.msg_key, es.msg_gen, es.msg_cid, es.msg_dst,
+                es.msg_dir, es.msg_w, es.free_head, es.free_n, es.dropped)
+
+        def enqueue(pool):
+            (msg_t, msg_key, msg_gen, msg_cid, msg_dst, msg_dir, msg_w,
+             free_head, free_n, drop0) = pool
+            # candidate messages: (N, 4) in near-table order (up, down,
+            # left, right) == receiver direction codes (below, above,
+            # right, left)
+            valid = (fired[:, None] & (near >= 0)).reshape(-1)       # (4N,)
+            if ecfg.latency == "exponential":
+                delay = jax.random.exponential(lat_sub, (4 * n,)) * ecfg.delay
+            elif ecfg.latency == "constant":
+                delay = jnp.full((4 * n,), ecfg.delay, jnp.float32)
+            else:
+                delay = jnp.zeros((4 * n,), jnp.float32)
+            rank = jnp.cumsum(valid.astype(jnp.int32)) - 1
+            can = valid & (rank < free_n)
+            slot = jnp.where(can, es.free_ring[(free_head + rank) % m], m)
+            nalloc = jnp.sum(can, dtype=jnp.int32)
+            dropped = jnp.sum(valid, dtype=jnp.int32) - nalloc
+            if scale is not None:
+                packed = (gen_u.astype(jnp.uint32) * jnp.uint32(scale)
+                          + cid_u.astype(jnp.uint32))
+                msg_key = msg_key.at[slot].set(packed, mode="drop")
+            else:
+                msg_gen = msg_gen.at[slot].set(gen_u, mode="drop")
+                msg_cid = msg_cid.at[slot].set(cid_u, mode="drop")
+            return (msg_t.at[slot].set(t + delay, mode="drop"),
+                    msg_key, msg_gen, msg_cid,
+                    msg_dst.at[slot].set(dst4, mode="drop"),
+                    msg_dir.at[slot].set(dirs4, mode="drop"),
+                    msg_w.at[slot].set(es.w[src4], mode="drop"),
+                    (free_head + nalloc) % m, free_n - nalloc,
+                    drop0 + dropped)
+
+        # most rounds fire nothing: skip the pool scatters entirely then
+        (msg_t, msg_key, msg_gen, msg_cid, msg_dst, msg_dir, msg_w,
+         free_head, free_n, dropped) = jax.lax.cond(
+            nfired > 0, enqueue, lambda p: p, pool)
         return es._replace(
             c=c, sizes=sizes, lat_key=lat_key,
-            dropped=es.dropped + dropped,
-            msg_t=es.msg_t.at[slot].set(t + delay, mode="drop"),
-            msg_gen=es.msg_gen.at[slot].set(gen, mode="drop"),
-            msg_cid=es.msg_cid.at[slot].set(cid, mode="drop"),
-            msg_dst=es.msg_dst.at[slot].set(dst, mode="drop"),
-            msg_dir=es.msg_dir.at[slot].set(dircode, mode="drop"),
-            msg_w=es.msg_w.at[slot].set(es.w[src], mode="drop"),
-        )
+            msg_t=msg_t, msg_key=msg_key, msg_gen=msg_gen, msg_cid=msg_cid,
+            msg_dst=msg_dst, msg_dir=msg_dir, msg_w=msg_w,
+            free_head=free_head, free_n=free_n, dropped=dropped)
 
-    def sample_round(es: EventState, samples, step_keys) -> EventState:
+    def sample_round(es: EventState, sample, step_key) -> EventState:
         """Deliver the next sample: search routes it, the GMU adapts
         (Eq. 3) and is driven w.p. p_i; a threshold crossing fires.
 
@@ -276,10 +408,9 @@ def _make_round_fns(cfg: AFMConfig, ecfg: EventConfig, num_events: int,
         """
         ev = es.ev
         t_s = ev.astype(jnp.float32) * ecfg.sample_spacing
-        sample = samples[ev]
-        k_search, k_cascade = jax.random.split(step_keys[ev])
+        k_search, k_cascade = jax.random.split(step_key)
         p_i = p_fn(es.i, cfg)
-        st = AFMState(es.w, es.c, es.far, es.near, es.i)
+        st = AFMState(es.w, es.c, far, near, es.i)
         res = search(st, sample[None, :], k_search, cfg)
         w, counts = afm_lib.adapt_gmu(st, sample[None, :], res.gmu, cfg)
         k_drive, k_chain = jax.random.split(k_cascade)
@@ -310,10 +441,13 @@ def _make_round_fns(cfg: AFMConfig, ecfg: EventConfig, num_events: int,
         receiver adapts by the merged rule, is Bernoulli-driven once per
         received message, and newly super-threshold receivers fire.
 
-        The merged adaptation sums the four direction slots in the same
-        order as ``core.cascade._shift_sum`` and draws the same
-        (4, side, side) Bernoulli tensor from the cascade's own key chain,
-        so a zero-latency round is bitwise one ``core.cascade`` wave.
+        Work is sized by the round, not the map: the ≤``k_round`` selected
+        slots are compressed out of the pool, their payloads segment-summed
+        per receiver in direction-slot order (bitwise the same sum order as
+        ``core.cascade._shift_sum``), and the weight update is a row scatter
+        over the ≤``k_round`` receiver units. The (4, side, side) Bernoulli
+        tensor still comes whole from the cascade's own key chain — PRNG
+        shapes are part of the bitwise contract.
         """
         cid = cmin
         sched_i = i0 + cid
@@ -322,55 +456,250 @@ def _make_round_fns(cfg: AFMConfig, ecfg: EventConfig, num_events: int,
         ck, sub = jax.random.split(es.casc_key[cid])
         k_wave = es.wcount[cid] + 1
         bern = (jax.random.uniform(sub, (4, side, side)) < p_i).reshape(4, n)
-        seli = sel.astype(jnp.int32)
-        dst = jnp.where(sel, es.msg_dst, n)          # n -> dropped scatter
-        recv4 = jnp.zeros((4, n), jnp.int32).at[es.msg_dir, dst].add(
-            seli, mode="drop")
-        n_recv = jnp.sum(recv4, axis=0)
-        pay4 = jnp.zeros((4, n, d), jnp.float32).at[es.msg_dir, dst].add(
-            es.msg_w * seli[:, None].astype(jnp.float32), mode="drop")
-        sum_wk = pay4[0] + pay4[1] + pay4[2] + pay4[3]
-        c = es.c + jnp.sum(bern.astype(jnp.int32) * recv4, axis=0)
-        new_fired = (c >= theta) & (n_recv > 0)
-        nf = n_recv.astype(es.w.dtype)
-        w = es.w + l_c * (sum_wk - nf[:, None] * es.w)
+        # compress the selected messages: (k_round,) slot ids, fill = m
+        idx = jnp.nonzero(sel, size=k_round, fill_value=m)[0]
+        ok = idx < m
+        ii = jnp.minimum(idx, m - 1)
+        dsts = jnp.where(ok, es.msg_dst[ii], n)          # n -> dropped row
+        dirs = jnp.where(ok, es.msg_dir[ii], 0)
+        ws = es.msg_w[ii]                                # (k_round, D)
+        # counter drive: one Bernoulli per received message, from the wave's
+        # (4, N) tensor indexed by (direction, receiver)
+        drive = jnp.where(ok, bern[dirs, jnp.minimum(dsts, n - 1)], False)
+        c = es.c.at[dsts].add(drive.astype(jnp.int32), mode="drop")
+        n_recv = jnp.zeros((n,), jnp.int32).at[dsts].add(
+            ok.astype(jnp.int32), mode="drop")
         received = n_recv > 0
+        # unique receiver rows (sorted, fill = n), ≤ one per message
+        ridx = jnp.nonzero(received, size=k_round, fill_value=n)[0]
+        pos = jnp.searchsorted(ridx, dsts)               # msg -> receiver row
+        acc = jnp.zeros((k_round, d), jnp.float32)
+        for s4 in range(4):                              # direction-slot order
+            acc = acc.at[jnp.where(ok & (dirs == s4), pos, k_round)].add(
+                ws, mode="drop")
+        # full receiver rows via the same elementwise chain as the dense
+        # form (w + l_c*(S - nf*w)) so XLA emits the same fma pattern, then
+        # a row scatter-set (ridx rows are unique)
+        rv = jnp.minimum(ridx, n - 1)
+        nf = n_recv[rv].astype(es.w.dtype)
+        wr = es.w[rv]
+        w_rows = wr + l_c * (acc - nf[:, None] * wr)
+        w = es.w.at[ridx].set(w_rows, mode="drop")
+        nsel = jnp.sum(sel, dtype=jnp.int32)
+        # free the delivered slots: push their ids onto the ring tail
+        freed_rank = jnp.cumsum(sel.astype(jnp.int32)) - 1
+        tail = jnp.where(sel, (es.free_head + es.free_n + freed_rank) % m, m)
         es = es._replace(
             w=w, c=c, t=tmin,
             clock=jnp.where(received, tmin, es.clock),
             nevents=es.nevents + n_recv,
             msg_t=jnp.where(sel, jnp.inf, es.msg_t),
+            free_ring=es.free_ring.at[tail].set(
+                jnp.arange(m, dtype=jnp.int32), mode="drop"),
+            free_n=es.free_n + nsel,
             casc_key=es.casc_key.at[cid].set(ck),
             wcount=es.wcount.at[cid].set(k_wave),
-            deliveries=es.deliveries + jnp.sum(seli),
+            deliveries=es.deliveries + nsel,
             rounds=es.rounds + 1,
         )
+        new_fired = (c >= theta) & received
         allowed = new_fired & (k_wave < max_waves)
         return fire(es, allowed, cid, tmin, gmin + 1)
 
-    return sample_round, delivery_round
+    return sample_round, delivery_round, pool_min
 
 
-@functools.lru_cache(maxsize=32)
-def _compiled_runner(cfg: AFMConfig, ecfg: EventConfig, num_events: int,
+def _finish(es: EventState, far, near):
+    """Package the end-of-run (state, aux, report) triple. A max_rounds exit
+    can strand in-flight messages and unconsumed samples; the former count
+    as dropped and the latter show through the true consumed count, so
+    truncation is never silent."""
+    final = AFMState(es.w, es.c, far, near, es.i)
+    aux = afm_lib.StepAux(
+        gmu=es.gmu[:, None], q2=es.q2[:, None], cascade_size=es.sizes,
+        waves=es.wcount, greedy_steps=es.greedy[:, None])
+    stranded = es.msg_t.shape[0] - es.free_n     # pool-size invariant
+    report = EventReport(
+        rounds=es.rounds, samples=es.ev,
+        deliveries=es.deliveries, dropped=es.dropped + stranded,
+        t_end=es.t, clock=es.clock, nevents=es.nevents)
+    return final, aux, report
+
+
+def _zero_fast_ok(cfg: AFMConfig, ecfg: EventConfig, num_events: int) -> bool:
+    """True when the fused reference scan is bitwise-equivalent to simulating
+    the rounds: zero latency (the parity regime), no explicit round budget
+    (no truncation to account), auto engine, and a pool that cannot overflow
+    (at zero latency occupancy peaks at one fire's ≤ 4N messages)."""
+    m, _, _, _ = _resolve(cfg, ecfg, num_events)
+    return (ecfg.latency == "zero" and ecfg.engine == "auto"
+            and ecfg.max_rounds is None and m >= 4 * cfg.n_units)
+
+
+def _make_fused_zero(cfg: AFMConfig, ecfg: EventConfig, num_events: int,
                      search: Callable, p_fn: Callable, l_c_fn: Callable):
-    """One jitted simulation loop per static (config, latency, E, stages)."""
-    _, _, _, max_rounds = _resolve(cfg, ecfg, num_events)
+    """Zero-latency fast path: the ``reference`` backend's fused step scan
+    (identical op sequence, so bitwise-identical weights/counters/aux) plus
+    an accounting sidecar that reproduces the engine's ``EventReport``
+    exactly — rounds, per-unit clocks/event counts, delivery totals."""
+    n, d, side, theta = cfg.n_units, cfg.dim, cfg.side, cfg.theta
+    _, _, max_waves, _ = _resolve(cfg, ecfg, num_events)
     e = num_events
+    spacing = ecfg.sample_spacing
+
+    def go(state: AFMState, samples, step_keys, lat_key):
+        del lat_key                       # zero latency consumes no delays
+        far, near = state.far, state.near
+        i0 = jnp.asarray(state.i, jnp.int32)
+
+        def body(carry, xs):
+            # per-unit accounting stays out of the per-step path: the
+            # sample-event contributions to clock/nevents are vectorized
+            # after the scan from the aux trajectory; only the (rare) wave
+            # loop accumulates its receiver counts inline
+            w, c, nev, clock = carry
+            sample, key, ev = xs
+            i = i0 + ev
+            t_s = ev.astype(jnp.float32) * spacing
+            k_search, k_cascade = jax.random.split(key)
+            l_c = l_c_fn(i, cfg)
+            p_i = p_fn(i, cfg)
+            st = AFMState(w, c, far, near, i)
+            res = search(st, sample[None, :], k_search, cfg)
+            w2, counts = afm_lib.adapt_gmu(st, sample[None, :], res.gmu, cfg)
+            k_drive, k_chain = jax.random.split(k_cascade)
+            gmu_mask = counts.astype(jnp.int32).reshape(side, side)
+            draws = jax.random.uniform(k_drive, (8, side, side)) < p_i
+            inc = jnp.sum(
+                draws.astype(jnp.int32)
+                * (jnp.arange(8)[:, None, None] < jnp.minimum(gmu_mask, 8)),
+                axis=0)
+            cg = c.reshape(side, side) + inc
+            fired0 = cg >= theta
+            wg = w2.reshape(side, side, d)
+
+            # wave loop: op-for-op ``core.cascade.cascade`` (the sidecar
+            # counters consume no PRNG and touch no w/c math)
+            def wcond(cc):
+                return jnp.any(cc[2]) & (cc[5] < max_waves)
+
+            def wbody(cc):
+                wv, cv, fired, kk, size, waves, ne = cc
+                kk, sub = jax.random.split(kk)
+                firedf = fired.astype(wv.dtype)
+                sum_wk = cascade_lib._shift_sum(wv * firedf[..., None])
+                bern = jax.random.uniform(sub, (4, side, side)) < p_i
+                cv, new_fired, n_recv = cascade_lib._wave_jnp(
+                    cv, fired, bern, theta)
+                nf = n_recv.astype(wv.dtype)
+                wv = wv + l_c * (sum_wk - nf[..., None] * wv)
+                return (wv, cv, new_fired, kk,
+                        size + fired.sum(dtype=jnp.int32), waves + 1,
+                        ne + n_recv.reshape(-1))
+
+            (wg, cg, _, _, size, waves, ne2) = jax.lax.while_loop(
+                wcond, wbody,
+                (wg, cg, fired0, k_chain, jnp.int32(0), jnp.int32(0), nev))
+            # receipts this step (ne only grows) stamp the receiver clocks
+            clock = jnp.where(ne2 != nev, t_s, clock)
+            carry = (wg.reshape(n, d), cg.reshape(-1), ne2, clock)
+            ys = (res.gmu[0], res.q2[0], res.greedy_steps[0], size, waves)
+            return carry, ys
+
+        carry0 = (state.w, jnp.asarray(state.c, jnp.int32),
+                  jnp.zeros((n,), jnp.int32), jnp.zeros((n,), jnp.float32))
+        xs = (samples, step_keys, jnp.arange(e, dtype=jnp.int32))
+        (w, c, nev, clock), (gmu, q2, greedy, sizes, waves) = \
+            jax.lax.scan(body, carry0, xs)
+        deliv = jnp.sum(nev)            # wave receipts only, pre gmu fold-in
+        final = AFMState(w, c, far, near, i0 + jnp.int32(e))
+        aux = afm_lib.StepAux(
+            gmu=gmu[:, None], q2=q2[:, None], cascade_size=sizes,
+            waves=waves, greedy_steps=greedy[:, None])
+        # fold the sample events into the per-unit accounting: one event
+        # per step at its GMU, at time ev * spacing ("last event" == max
+        # over event times, and a unit's wave clock is its max delivery
+        # time, so elementwise max merges the two histories)
+        t_ev = jnp.arange(e, dtype=jnp.float32) * spacing
+        nev = nev.at[gmu].add(1)
+        clock = jnp.maximum(clock, jnp.zeros((n,), jnp.float32)
+                            .at[gmu].max(t_ev))
+        report = EventReport(
+            rounds=jnp.int32(e) + jnp.sum(waves),
+            samples=jnp.int32(e), deliveries=deliv, dropped=jnp.int32(0),
+            t_end=jnp.float32((e - 1) * spacing),
+            clock=clock, nevents=nev)
+        return final, aux, report
+
+    return go
+
+
+def _make_engine(cfg: AFMConfig, ecfg: EventConfig, num_events: int,
+                 search: Callable, p_fn: Callable, l_c_fn: Callable):
+    """The default runner: an outer scan over the E sample arrivals with an
+    inner while_loop that drains all due messages before each arrival (and a
+    final drain to quiescence). Identical round order to the budgeted loop:
+    pop min(message key, next arrival), messages first on a time tie."""
+    e = num_events
+    _, _, _, round_cap = _resolve(cfg, ecfg, num_events)
+    spacing = ecfg.sample_spacing
 
     def go(state: AFMState, samples, step_keys, lat_key):
         es0 = init_events(state, cfg, ecfg, e, lat_key)
-        sample_round, delivery_round = _make_round_fns(
-            cfg, ecfg, e, search, p_fn, l_c_fn, i0=es0.i)
+        sample_round, delivery_round, pool_min = _make_round_fns(
+            cfg, ecfg, e, search, p_fn, l_c_fn, i0=es0.i,
+            far=state.far, near=state.near)
+
+        def drain(es, t_limit):
+            # round_cap is a safety net against engine bugs, not a semantic
+            # budget (max_rounds=None here); a trip shows up as stranded
+            # messages in report.dropped
+            def cond(carry):
+                es_, tmin, _g, _c, _sel, have = carry
+                return have & (tmin <= t_limit) & (es_.rounds < round_cap)
+
+            def body(carry):
+                es_, tmin, g, ci, sel, _ = carry
+                es_ = delivery_round(es_, tmin, g, ci, sel)
+                return (es_,) + pool_min(es_)
+
+            out = jax.lax.while_loop(cond, body, (es,) + pool_min(es))
+            return out[0]
+
+        def body(es, xs):
+            sample, key = xs
+            es = drain(es, es.ev.astype(jnp.float32) * spacing)
+            return sample_round(es, sample, key), None
+
+        es, _ = jax.lax.scan(body, es0, (samples, step_keys))
+        es = drain(es, jnp.inf)
+        return _finish(es, state.far, state.near)
+
+    return go
+
+
+def _make_budgeted(cfg: AFMConfig, ecfg: EventConfig, num_events: int,
+                   search: Callable, p_fn: Callable, l_c_fn: Callable):
+    """Budgeted runner (``max_rounds`` set): one while_loop popping a round
+    per iteration under a global round budget — the original PR-4 loop
+    structure, kept for its exact truncation accounting."""
+    e = num_events
+    m, _, _, max_rounds = _resolve(cfg, ecfg, num_events)
+    spacing = ecfg.sample_spacing
+
+    def go(state: AFMState, samples, step_keys, lat_key):
+        es0 = init_events(state, cfg, ecfg, e, lat_key)
+        sample_round, delivery_round, pool_min = _make_round_fns(
+            cfg, ecfg, e, search, p_fn, l_c_fn, i0=es0.i,
+            far=state.far, near=state.near)
 
         def cond(es):
-            return ((es.ev < e) | jnp.any(jnp.isfinite(es.msg_t))) \
-                & (es.rounds < max_rounds)
+            return ((es.ev < e) | (es.free_n < m)) & (es.rounds < max_rounds)
 
         def body(es):
-            tmin, gmin, cmin, sel, have = _msg_min(es)
+            tmin, gmin, cmin, sel, have = pool_min(es)
             t_next = jnp.where(es.ev < e,
-                               es.ev.astype(jnp.float32) * ecfg.sample_spacing,
+                               es.ev.astype(jnp.float32) * spacing,
                                jnp.inf)
             # messages first on a time tie: an in-flight cascade front is
             # older than a fresh arrival at the same instant
@@ -378,32 +707,41 @@ def _compiled_runner(cfg: AFMConfig, ecfg: EventConfig, num_events: int,
             return jax.lax.cond(
                 do_msg,
                 lambda s: delivery_round(s, tmin, gmin, cmin, sel),
-                lambda s: sample_round(s, samples, step_keys),
+                lambda s: sample_round(s, samples[s.ev], step_keys[s.ev]),
                 es)
 
         es = jax.lax.while_loop(cond, body, es0)
-        final = AFMState(es.w, es.c, es.far, es.near, es.i)
-        aux = afm_lib.StepAux(
-            gmu=es.gmu[:, None], q2=es.q2[:, None], cascade_size=es.sizes,
-            waves=es.wcount, greedy_steps=es.greedy[:, None])
-        # a max_rounds exit can strand in-flight messages and unconsumed
-        # samples; count the former as dropped and report the latter via
-        # the true consumed count, so truncation is never silent
-        stranded = jnp.sum(jnp.isfinite(es.msg_t), dtype=jnp.int32)
-        report = EventReport(
-            rounds=es.rounds, samples=es.ev,
-            deliveries=es.deliveries, dropped=es.dropped + stranded,
-            t_end=es.t, clock=es.clock, nevents=es.nevents)
-        return final, aux, report
+        return _finish(es, state.far, state.near)
 
-    return jax.jit(go)
+    return go
+
+
+@functools.lru_cache(maxsize=32)
+def _compiled_runner(cfg: AFMConfig, ecfg: EventConfig, num_events: int,
+                     search: Callable, p_fn: Callable, l_c_fn: Callable,
+                     donate: bool):
+    """One jitted simulation loop per static (config, latency, E, stages).
+
+    Statically dispatches to the fused zero-latency scan, the sample-scan
+    engine, or the budgeted loop — all three implement the same round
+    semantics (pinned bitwise by ``tests/test_async_trainer.py``'s golden
+    suite). ``donate=True`` donates the input ``AFMState`` buffers to the
+    run (the caller must own them — ``AsyncBackend.run`` does); donation is
+    a no-op on CPU."""
+    if _zero_fast_ok(cfg, ecfg, num_events):
+        go = _make_fused_zero(cfg, ecfg, num_events, search, p_fn, l_c_fn)
+    elif ecfg.max_rounds is None:
+        go = _make_engine(cfg, ecfg, num_events, search, p_fn, l_c_fn)
+    else:
+        go = _make_budgeted(cfg, ecfg, num_events, search, p_fn, l_c_fn)
+    return jax.jit(go, donate_argnums=(0,) if donate else ())
 
 
 def run_events(state: AFMState, samples: jnp.ndarray, step_keys: jnp.ndarray,
                cfg: AFMConfig, ecfg: EventConfig = EventConfig(), *,
                search: Callable = afm_lib.search_heuristic,
                p_fn: Callable = _default_p, l_c_fn: Callable = _default_l_c,
-               lat_key: jax.Array | None = None,
+               lat_key: jax.Array | None = None, donate: bool = False,
                ) -> tuple[AFMState, afm_lib.StepAux, EventReport]:
     """Simulate ``E`` sample-delivery events (plus their cascades) to
     quiescence: the queue drains completely before returning, so the result
@@ -426,6 +764,9 @@ def run_events(state: AFMState, samples: jnp.ndarray, step_keys: jnp.ndarray,
                  parity tests pin p = 1 through these.
       lat_key:   PRNG key for the exponential latency stream (ignored by
                  the zero/constant models, which consume no extra bits).
+      donate:    donate the input state's buffers to the jitted run — only
+                 safe when the caller owns them and drops the old state
+                 (no-op on CPU, saves the dense-state copy on accelerators).
     """
     e = int(samples.shape[0])
     if e == 0:
@@ -440,6 +781,6 @@ def run_events(state: AFMState, samples: jnp.ndarray, step_keys: jnp.ndarray,
                 jnp.zeros((n,), jnp.float32), jnp.zeros((n,), jnp.int32))
     if lat_key is None:
         lat_key = jax.random.PRNGKey(0)
-    fn = _compiled_runner(cfg, ecfg, e, search, p_fn, l_c_fn)
+    fn = _compiled_runner(cfg, ecfg, e, search, p_fn, l_c_fn, bool(donate))
     return fn(state, jnp.asarray(samples, jnp.float32),
               jnp.asarray(step_keys, jnp.uint32), lat_key)

@@ -44,15 +44,21 @@ def exploration_phase(w, far, samples, key, e: int):
     j0 = jax.random.randint(k0, (b,), 0, n)
     q0 = _sqdist(w[j0], samples)
 
-    def step(carry, key_i):
+    # all e hop choices are drawn up front (vmap over the per-step keys is
+    # bitwise-identical to drawing inside the loop — each step's randint
+    # consumes only its own key) so the sequential part is pure gathers
+    choices = jax.vmap(
+        lambda k: jax.random.randint(k, (b,), 0, phi + 1)
+    )(jax.random.split(k1, e))                                     # (e, B)
+
+    def step(carry, choice):
         j, jstar, qstar = carry
-        choice = jax.random.randint(key_i, (b,), 0, phi + 1)
         hop = jnp.where(choice < phi, far[j, jnp.minimum(choice, phi - 1)], j)
         q = _sqdist(w[hop], samples)
         better = q < qstar
         return (hop, jnp.where(better, hop, jstar), jnp.where(better, q, qstar)), None
 
-    (j, jstar, qstar), _ = jax.lax.scan(step, (j0, j0, q0), jax.random.split(k1, e))
+    (j, jstar, qstar), _ = jax.lax.scan(step, (j0, j0, q0), choices)
     del j
     return jstar, qstar
 

@@ -202,6 +202,10 @@ def main():
                     help="async backend: message latency model")
     ap.add_argument("--delay", type=float, default=0.0,
                     help="async backend: latency scale (sample periods)")
+    ap.add_argument("--engine", default="auto", choices=("auto", "event"),
+                    help="async backend: 'auto' fuses zero-latency chunks "
+                         "into the reference scan, 'event' always runs the "
+                         "discrete-event simulation")
     ap.add_argument("--search", default=None,
                     choices=(None, "heuristic", "exact"))
     ap.add_argument("--e-factor", type=float, default=0.5)
@@ -219,9 +223,11 @@ def main():
                     e_factor=args.e_factor, i_max=args.events)
     opts: dict = {}
     if args.backend == "async":
-        opts.update(latency=args.latency, delay=args.delay)
-    elif args.latency != "zero" or args.delay:
-        raise SystemExit("--latency/--delay only apply to the async backend")
+        opts.update(latency=args.latency, delay=args.delay,
+                    engine=args.engine)
+    elif args.latency != "zero" or args.delay or args.engine != "auto":
+        raise SystemExit("--latency/--delay/--engine only apply to the "
+                         "async backend")
     if args.search:
         if args.backend == "sharded":
             raise SystemExit("--search is not supported by the sharded "

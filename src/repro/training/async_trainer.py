@@ -25,6 +25,7 @@ are indistinguishable from any other backend's.
 from __future__ import annotations
 
 import dataclasses
+import functools
 
 import jax
 import jax.numpy as jnp
@@ -39,6 +40,21 @@ from repro.core.events import EventConfig, EventReport  # re-export  # noqa: F40
 _SEARCHES = {"heuristic": afm.search_heuristic, "exact": afm.search_exact}
 
 
+@functools.partial(jax.jit, static_argnums=2)
+def _select_run_samples(key, data, num_steps):
+    """``ReferenceBackend.run``'s per-event sample selection, fused into one
+    dispatch (module-level: the compiled selection is shared across backend
+    instances). Per event ``split(k) -> (k_step, k_data)`` and a ``randint``
+    draw — byte-for-byte the reference key discipline."""
+    keys = jax.random.split(key, num_steps)
+    pairs = jax.vmap(jax.random.split)(keys)            # (steps, 2, 2)
+    step_keys, data_keys = pairs[:, 0], pairs[:, 1]
+    idx = jax.vmap(
+        lambda k: jax.random.randint(k, (1,), 0, data.shape[0])
+    )(data_keys)[:, 0]
+    return step_keys, data[idx]
+
+
 @backends_lib.register_backend("async")
 class AsyncBackend:
     """Event-driven training — per-sample dynamics under a message-latency
@@ -48,11 +64,22 @@ class AsyncBackend:
       latency:   'zero' (reference-equivalent; default) | 'constant' |
                  'exponential'.
       delay:     latency scale in sample periods (see ``EventConfig``).
-      sample_spacing / capacity / max_rounds: forwarded to ``EventConfig``.
+      sample_spacing / capacity / max_rounds / engine: forwarded to
+                 ``EventConfig`` — ``engine='auto'`` (default) dispatches
+                 eligible zero-latency runs to the fused reference scan,
+                 ``engine='event'`` always simulates rounds (benchmarks use
+                 it to measure the engine itself; results are bitwise
+                 identical either way).
       search:    'heuristic' (paper relay race) or 'exact' (full BMU).
       lat_seed:  seed of the exponential-latency stream (kept separate from
                  the training keys so zero/constant runs stay bitwise
                  reproducible against ``reference``).
+      donate_run: donate the input state's buffers to each ``run()`` call
+                 (saves a dense-state copy per run on accelerators; no-op
+                 on CPU). Opt-in because it changes ``run``'s contract to
+                 consume its state argument — only enable when every
+                 caller drops the passed-in state, as ``TopoMap.fit``
+                 does (init -> run -> replace).
 
     Like ``reference``, the config is forced to ``batch=1`` — the engine is
     inherently per-sample, and the full ``i_max`` sample budget maps to
@@ -63,17 +90,20 @@ class AsyncBackend:
     def __init__(self, cfg: AFMConfig, *, latency: str = "zero",
                  delay: float = 0.0, sample_spacing: float = 1.0,
                  capacity: int | None = None, max_rounds: int | None = None,
-                 search: str = "heuristic", lat_seed: int = 0):
+                 engine: str = "auto", search: str = "heuristic",
+                 lat_seed: int = 0, donate_run: bool = False):
         if search not in _SEARCHES:
             raise ValueError(f"search must be one of {sorted(_SEARCHES)}, "
                              f"got {search!r}")
         self.cfg = dataclasses.replace(cfg, batch=1)
         self.ecfg = EventConfig(latency=latency, delay=delay,
                                 sample_spacing=sample_spacing,
-                                capacity=capacity, max_rounds=max_rounds)
+                                capacity=capacity, max_rounds=max_rounds,
+                                engine=engine)
         self.search = _SEARCHES[search]
         self._lat_key = jax.random.PRNGKey(lat_seed)
         self.last_report: EventReport | None = None
+        self._donate_run = bool(donate_run)
 
     def _next_lat_key(self):
         self._lat_key, sub = jax.random.split(self._lat_key)
@@ -107,15 +137,11 @@ class AsyncBackend:
         """
         num_steps = self.cfg.num_steps if num_steps is None else num_steps
         data = jnp.asarray(data, jnp.float32)
-        keys = jax.random.split(key, num_steps)
-        pairs = jax.vmap(jax.random.split)(keys)        # (steps, 2, 2)
-        step_keys, data_keys = pairs[:, 0], pairs[:, 1]
-        idx = jax.vmap(
-            lambda k: jax.random.randint(k, (1,), 0, data.shape[0])
-        )(data_keys)[:, 0]
+        step_keys, samples = _select_run_samples(key, data, num_steps)
         state, aux, report = events_lib.run_events(
-            state, data[idx], step_keys, self.cfg, self.ecfg,
-            search=self.search, lat_key=self._next_lat_key())
+            state, samples, step_keys, self.cfg, self.ecfg,
+            search=self.search, lat_key=self._next_lat_key(),
+            donate=self._donate_run)
         jax.block_until_ready(state.w)
         self.last_report = report
         return state, aux

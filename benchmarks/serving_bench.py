@@ -1,5 +1,6 @@
-"""Serving bench: bucketed batched inference vs naive per-shape jit, and
-gateway coalescing vs per-request dispatch under concurrent batch-1 load.
+"""Serving bench: bucketed batched inference vs naive per-shape jit,
+gateway coalescing vs per-request dispatch under concurrent batch-1 load,
+and the SLO-grade fleet storm harness.
 
 Scenario 1 (single caller, ragged sizes) measures what the bucketing policy
 buys — steady-state throughput on a ragged request-size stream. The naive
@@ -14,9 +15,25 @@ pays one padded engine call per request; the gateway merges concurrent
 requests into bucket-sized dispatches under a small deadline, so the same
 traffic rides far fewer (bigger) engine calls. Reports samples/s both
 ways and the mean coalesced dispatch size.
+
+Scenario 3 (fleet storm, ``storm_*`` keys) is the heavy-traffic
+simulator: **open-loop Poisson arrivals** (a fixed schedule the clients
+hold to regardless of completions, so backlog shows up as latency, not as
+a politely slowed workload) of **mixed batch sizes** replayed twice —
+once against the single-gateway path (one ``MapService`` behind a
+coalescing ``MapGateway``, the pre-fleet serving stack) and once against
+a 4-replica ``MapFleet``, which additionally **rolls every replica to a
+new store version mid-storm**. Reports wall-clock samples/s for both
+paths, the fleet's p50/p95/p99 end-to-end latency from its streaming
+histogram, and the failure/shed/reload counters. The acceptance bar:
+fleet strictly faster than the single gateway, zero failed requests
+through the rolling reload, and non-degenerate percentiles
+(p99 >= p50 > 0). ``benchmarks/run.py --json-out`` snapshots all of it
+into ``BENCH_serving.json`` (committed, CI-uploaded).
 """
 from __future__ import annotations
 
+import tempfile
 import threading
 import time
 
@@ -24,9 +41,10 @@ import jax
 import numpy as np
 
 from benchmarks import common
-from repro.api import AFMConfig
+from repro.api import AFMConfig, persistence
 from repro.core import afm
 from repro.core import search as search_lib
+from repro.serving.fleet import FleetStats, MapFleet
 from repro.serving.gateway import MapGateway
 from repro.serving.maps import BmuEngine, MapService
 
@@ -100,6 +118,117 @@ def _concurrent_load(key, quick: bool):
     }
 
 
+def _fleet_storm(key, quick: bool):
+    """Open-loop Poisson storm: single-gateway path vs a 4-replica fleet
+    with a rolling reload landing mid-storm. See the module docstring."""
+    n_clients, replicas = 8, 4
+    n_requests = 240 if quick else 1600
+    rate_hz = 250.0 if quick else 400.0
+    cfg = AFMConfig(side=50, dim=256)
+    state = afm.init(key, cfg)
+    pool = np.asarray(jax.random.normal(jax.random.fold_in(key, 1),
+                                        (256, cfg.dim)), np.float32)
+    rng = np.random.RandomState(11)
+    sizes = rng.choice([1, 4, 16, 64], size=n_requests, p=[.4, .3, .2, .1])
+    offsets = rng.randint(0, pool.shape[0] - 64, size=n_requests)
+    requests = [pool[o:o + s] for o, s in zip(offsets, sizes)]
+    # the arrival schedule is fixed up front — open-loop: clients fire at
+    # the scheduled instant (or immediately once behind), so an overloaded
+    # server accumulates backlog instead of slowing the offered load
+    schedule = np.cumsum(np.random.RandomState(5).exponential(
+        1.0 / rate_hz, size=n_requests))
+    total = int(sizes.sum())
+
+    def storm(serve_fn, on_done=None):
+        errors, done = [], [0]
+        lock = threading.Lock()
+        t_start = time.perf_counter()
+
+        def client(c):
+            for i in range(c, n_requests, n_clients):
+                target = t_start + schedule[i]
+                now = time.perf_counter()
+                if target > now:
+                    time.sleep(target - now)
+                try:
+                    serve_fn(requests[i])
+                    with lock:
+                        done[0] += 1
+                        if on_done is not None:
+                            on_done(done[0])
+                except Exception as e:      # noqa: BLE001 — counted, not fatal
+                    errors.append(e)
+
+        threads = [threading.Thread(target=client, args=(c,))
+                   for c in range(n_clients)]
+        for t in threads:
+            t.start()
+        for t in threads:
+            t.join()
+        return time.perf_counter() - t_start, errors
+
+    # --- baseline: the single-gateway path (one service, coalescer front)
+    svc = MapService(cfg, state, use_pallas=False)
+    svc.transform(pool[:8])
+    svc.transform(pool[:64])                        # warm both hot buckets
+    gw = MapGateway(max_delay=0.001)
+    gw.attach("storm", svc)
+    wall_gw, err_gw = storm(lambda q: gw.transform("storm", q))
+    gw.close()
+
+    # --- fleet: 4 replicas, admission-controlled, store-backed so a
+    # rolling reload can land once 40% of the storm has completed
+    with tempfile.TemporaryDirectory() as root:
+        store = persistence.MapStore(root)
+        store.save_state("storm", cfg=cfg, state=state)
+        fleet = MapFleet.from_store(root, "storm", replicas=replicas,
+                                    use_pallas=False,
+                                    max_outstanding=8 * n_clients,
+                                    shed_deadline=10.0)
+        fleet.transform(pool[:8])
+        fleet.transform(pool[:64])
+        fleet.stats = FleetStats()                  # warm-up off the books
+        reload_errors, trigger = [], threading.Event()
+
+        def roller():
+            trigger.wait(60)
+            try:
+                store.save_state("storm", cfg=cfg,
+                                 state=state._replace(w=state.w + 0.01))
+                fleet.reload()
+            except Exception as e:                  # noqa: BLE001 — counted
+                reload_errors.append(e)
+
+        roll_thread = threading.Thread(target=roller)
+        roll_thread.start()
+        wall_fl, err_fl = storm(
+            lambda q: fleet.transform(q),
+            on_done=lambda n: trigger.set() if n >= int(0.4 * n_requests)
+            else None)
+        trigger.set()                               # storm shed everything?
+        roll_thread.join()
+        qs = fleet.stats.latency.quantiles()
+        return {
+            "storm_requests": n_requests,
+            "storm_samples": total,
+            "storm_clients": n_clients,
+            "storm_rate_hz": rate_hz,
+            "storm_replicas": replicas,
+            "storm_gateway_sps": round(total / wall_gw),
+            "storm_fleet_sps": round(total / wall_fl),
+            "storm_fleet_speedup": round(wall_gw / wall_fl, 2),
+            "storm_p50_ms": round(qs["p50"] * 1e3, 3),
+            "storm_p95_ms": round(qs["p95"] * 1e3, 3),
+            "storm_p99_ms": round(qs["p99"] * 1e3, 3),
+            "storm_gateway_errors": len(err_gw),
+            "storm_failed_requests": len(err_fl),
+            "storm_sheds": fleet.stats.sheds,
+            "storm_reloads": fleet.stats.reloads,
+            "storm_reload_errors": len(reload_errors),
+            "storm_reload_version": fleet.version,
+        }
+
+
 def run(quick: bool = True):
     side, dim = (30, 36) if quick else (50, 784)
     n_requests = 40 if quick else 200
@@ -140,6 +269,7 @@ def run(quick: bool = True):
         "cold_speedup": round(t_naive / t_bucketed, 2),
     }
     derived.update(_concurrent_load(jax.random.fold_in(key, 3), quick))
+    derived.update(_fleet_storm(jax.random.fold_in(key, 4), quick))
     common.save("serving_bench", derived)
     return None, derived
 

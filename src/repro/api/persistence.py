@@ -219,18 +219,18 @@ class MapStore:
 
     # ------------------------------------------------------------ save/load
 
-    def save(self, tm, name: str, *, extra_meta=None) -> str:
-        """Persist a fitted ``TopoMap`` under the next version of ``name``.
+    def _reserve(self, name: str) -> tuple[str, str, int]:
+        """Claim the next version directory for ``name``.
 
-        Returns the ``name@version`` key of the new artifact.
+        Reserves with an exclusive mkdir so two concurrent savers can never
+        clobber the same version key; the artifact write renames over the
+        still-reserved empty dir atomically. Returns (parsed name, path,
+        version).
         """
         parsed, version = parse_spec(name)
         if version is not None:
-            raise ValueError(f"store.save takes a bare name, got {name!r} "
+            raise ValueError(f"store saves take a bare name, got {name!r} "
                              f"(versions auto-increment)")
-        # reserve the version directory with an exclusive mkdir so two
-        # concurrent savers can never clobber the same version key; the
-        # artifact write renames over the still-reserved empty dir atomically
         version = (self.versions(parsed) or [0])[-1]
         os.makedirs(os.path.join(self.root, parsed), exist_ok=True)
         while True:
@@ -238,10 +238,32 @@ class MapStore:
             path = os.path.join(self.root, parsed, f"v{version}")
             try:
                 os.mkdir(path)
-                break
+                return parsed, path, version
             except FileExistsError:
                 continue
+
+    def save(self, tm, name: str, *, extra_meta=None) -> str:
+        """Persist a fitted ``TopoMap`` under the next version of ``name``.
+
+        Returns the ``name@version`` key of the new artifact.
+        """
+        parsed, path, version = self._reserve(name)
         tm.save(path, extra_meta=extra_meta)
+        return f"{parsed}@{version}"
+
+    def save_state(self, name: str, *, cfg: AFMConfig, state: AFMState,
+                   unit_labels=None, labeling: str = "nearest",
+                   backend: str = "batched", extra_meta=None) -> str:
+        """Persist raw map state under the next version of ``name`` — no
+        estimator needed. The publish path for serving-side producers
+        (``MapFleet`` rolling-reload tests/benches, ``serve_map
+        --reload-during-run``) that hold a ``(cfg, state)`` snapshot
+        rather than a ``TopoMap``. Returns the ``name@version`` key.
+        """
+        parsed, path, version = self._reserve(name)
+        save_artifact(path, cfg=cfg, state=state, unit_labels=unit_labels,
+                      labeling=labeling, backend=backend,
+                      extra_meta=extra_meta)
         return f"{parsed}@{version}"
 
     def load_artifact(self, spec: str) -> MapArtifact:

@@ -19,13 +19,20 @@ request batches through a serving endpoint, reporting throughput:
     PYTHONPATH=src python -m repro.launch.serve_map --artifact /tmp/m \
         --random 4096 --batch 1 --concurrency 8 --gateway
 
+    # a 4-replica fleet with admission control, rolled to a new store
+    # version mid-run (zero downtime), p50/p95/p99 in the summary
+    PYTHONPATH=src python -m repro.launch.serve_map --store /tmp/maps \
+        --map satimage-10x10 --random 4096 --batch 8 --concurrency 8 \
+        --replicas 4 --shed-deadline-ms 500 --reload-during-run
+
 Request formats: ``.npy`` (B, D) arrays, or newline-delimited JSON — each
 line one sample, either a bare array ``[0.1, ...]`` or ``{"x": [...]}``.
 ``--random N`` generates N Gaussian queries for smoke runs.
 
 Throughput is reported on two clocks: **wall** (first request start to
 last request end — honest under ``--concurrency``) and **busy** (summed
-per-request engine spans, which overlap under concurrent load).
+per-request engine spans, which overlap under concurrent load), plus
+p50/p95/p99 request-latency percentiles from the streaming histograms.
 """
 from __future__ import annotations
 
@@ -39,6 +46,7 @@ import time
 import jax
 import numpy as np
 
+from repro.serving.fleet import MapFleet
 from repro.serving.gateway import MapGateway
 from repro.serving.maps import DEFAULT_BUCKETS, MapService
 
@@ -71,13 +79,49 @@ def load_requests(path: str, dim: int) -> np.ndarray:
     return x
 
 
-def build_service(args) -> MapService:
+def build_service(args):
+    """The serving stack behind the CLI: a single ``MapService``, or a
+    ``MapFleet`` of ``--replicas`` workers with admission control."""
     buckets = (tuple(int(b) for b in args.buckets.split(","))
                if args.buckets else DEFAULT_BUCKETS)
     opts = dict(buckets=buckets, update_backend=args.update_backend)
+    if args.replicas:
+        opts.update(replicas=args.replicas,
+                    shed_deadline=(args.shed_deadline_ms or 500.0) / 1000.0)
+        if args.max_outstanding:
+            opts["max_outstanding"] = args.max_outstanding
+        if args.artifact:
+            return MapFleet.from_artifact(args.artifact, **opts)
+        return MapFleet.from_store(args.store, args.map, **opts)
     if args.artifact:
         return MapService.from_artifact(args.artifact, **opts)
     return MapService.from_store(args.store, args.map, **opts)
+
+
+def _rolling_reloader(args, fleet, n_blocks):
+    """Background thread for ``--reload-during-run``: once the run is in
+    flight, publish the fleet's current map as a new store version and
+    roll every replica to it. Returns (thread, info dict)."""
+    from repro.api import persistence
+    info = {}
+
+    def roll():
+        deadline = time.time() + 30.0
+        while (fleet.stats.completed < max(1, n_blocks // 4)
+               and time.time() < deadline):
+            time.sleep(0.002)
+        svc = fleet.services()[0]
+        state, labels = svc.snapshot()
+        map_name = persistence.parse_spec(args.map)[0]
+        persistence.MapStore(args.store).save_state(
+            map_name, cfg=fleet.cfg, state=state, unit_labels=labels,
+            labeling=svc.labeling,
+            extra_meta={"published_by": "serve_map --reload-during-run"})
+        info["version"] = fleet.reload()
+
+    thread = threading.Thread(target=roll, name="serve-map-reloader")
+    thread.start()
+    return thread, info
 
 
 def _serve_blocks(args, svc, blocks):
@@ -154,6 +198,21 @@ def main():
                          "(merges concurrent small requests per bucket)")
     ap.add_argument("--coalesce-ms", type=float, default=1.0,
                     help="gateway coalescing deadline in milliseconds")
+    ap.add_argument("--replicas", type=int, default=0,
+                    help="serve through a MapFleet of N replica workers "
+                         "(least-outstanding routing, admission control, "
+                         "rolling reload)")
+    ap.add_argument("--shed-deadline-ms", type=float, default=None,
+                    help="fleet admission: max milliseconds a caller may "
+                         "wait for a slot before an Overloaded shed "
+                         "(default 500; needs --replicas)")
+    ap.add_argument("--max-outstanding", type=int, default=0,
+                    help="fleet admission queue bound (default 8/replica; "
+                         "needs --replicas)")
+    ap.add_argument("--reload-during-run", action="store_true",
+                    help="mid-run, publish the map as a new store version "
+                         "and roll every replica to it (needs --replicas "
+                         "and --store)")
     ap.add_argument("--lattice", action="store_true",
                     help="transform endpoint: return (row, col) coordinates")
     ap.add_argument("--buckets", default=None,
@@ -173,12 +232,34 @@ def main():
                          "with --artifact (remove one of them)")
     if args.concurrency < 1:
         raise SystemExit("--concurrency must be >= 1")
+    if args.replicas < 0:
+        raise SystemExit("--replicas must be >= 1 (or omitted)")
+    if args.replicas and args.gateway:
+        raise SystemExit("--gateway coalesces in front of one service; "
+                         "--replicas routes a fleet directly — pick one "
+                         "(gateway-fronted fleets are a library-level "
+                         "composition, see repro.serving.fleet)")
+    if args.shed_deadline_ms is not None and not args.replicas:
+        raise SystemExit("--shed-deadline-ms tunes fleet admission; it "
+                         "does nothing without --replicas N")
+    if args.max_outstanding and not args.replicas:
+        raise SystemExit("--max-outstanding bounds the fleet admission "
+                         "queue; it does nothing without --replicas N")
+    if args.reload_during_run and not args.replicas:
+        raise SystemExit("--reload-during-run rolls a fleet; it needs "
+                         "--replicas N")
+    if args.reload_during_run and not args.store:
+        raise SystemExit("--reload-during-run publishes a new store "
+                         "version; it needs --store/--map (not --artifact)")
 
     svc = build_service(args)
+    fleet = svc if isinstance(svc, MapFleet) else None
+    first = fleet.services()[0] if fleet is not None else svc
     cfg = svc.cfg
+    extra = f" replicas={fleet.replicas}" if fleet is not None else ""
     print(f"serving map {cfg.side}x{cfg.side} dim={cfg.dim} "
-          f"labeling={svc.labeling} buckets={svc.engine.buckets} "
-          f"devices={len(jax.devices())}")
+          f"labeling={first.labeling} buckets={first.engine.buckets} "
+          f"devices={len(jax.devices())}{extra}")
 
     if args.endpoint == "u-matrix":
         umat = svc.u_matrix()
@@ -194,28 +275,53 @@ def main():
             raise SystemExit("give --requests FILE or --random N")
         blocks = [reqs[lo:lo + args.batch]
                   for lo in range(0, reqs.shape[0], args.batch)]
+        reloader, reload_info = None, {}
+        if args.reload_during_run:
+            reloader, reload_info = _rolling_reloader(args, fleet,
+                                                      len(blocks))
         t0 = time.time()
         outs, gw = _serve_blocks(args, svc, blocks)
         wall = time.time() - t0
+        if reloader is not None:
+            reloader.join(60)
         out = np.concatenate(outs, axis=0)
         if args.endpoint == "quantization-error":
             print(f"quantization error: mean={out.mean():.4f} over "
                   f"{out.shape[0]} samples")
-        s = svc.stats
-        # under the gateway, service-level "requests" are merged engine
-        # dispatches — report the client-side request count instead
-        n_requests = gw.stats.requests if gw is not None else s.requests
-        print(f"served {s.samples} samples in {wall:.3f}s wall "
-              f"({s.throughput():.0f} samples/s wall-window, "
-              f"{s.busy_throughput():.0f} samples/s busy; "
-              f"busy {s.busy_seconds:.3f}s), {n_requests} requests, "
-              f"{args.concurrency} clients, {svc.compiles} compiles")
-        if gw is not None:
-            g = gw.stats
-            print(f"gateway: {g.dispatches} coalesced dispatches "
-                  f"(mean {g.mean_coalesced_requests():.1f} requests / "
-                  f"{g.mean_dispatch_size():.1f} samples per dispatch, "
-                  f"max {g.max_dispatch}), {g.direct} direct")
+        if fleet is not None:
+            reps = fleet.services()
+            samples = sum(r.stats.samples for r in reps)
+            compiles = sum(r.engine.trace_count for r in reps)
+            f = fleet.stats
+            print(f"served {samples} samples in {wall:.3f}s wall "
+                  f"({samples / wall:.0f} samples/s), "
+                  f"{f.completed} completed, {f.sheds} shed, "
+                  f"{args.concurrency} clients, {compiles} compiles")
+            print(f"fleet latency ms: {f.latency.summary()}; "
+                  f"engine {fleet.merged_engine_latency().summary()}")
+            for i, rep in enumerate(reps):
+                print(f"  replica {i}: {rep.stats.requests} requests, "
+                      f"latency ms {rep.stats.latency.summary()}")
+            if reload_info.get("version") is not None:
+                print(f"rolled to version {reload_info['version']} "
+                      f"mid-run (reloads={f.reloads})")
+        else:
+            s = svc.stats
+            # under the gateway, service-level "requests" are merged engine
+            # dispatches — report the client-side request count instead
+            n_requests = gw.stats.requests if gw is not None else s.requests
+            print(f"served {s.samples} samples in {wall:.3f}s wall "
+                  f"({s.throughput():.0f} samples/s wall-window, "
+                  f"{s.busy_throughput():.0f} samples/s busy; "
+                  f"busy {s.busy_seconds:.3f}s), {n_requests} requests, "
+                  f"{args.concurrency} clients, {svc.compiles} compiles")
+            print(f"latency ms: {s.latency.summary()}")
+            if gw is not None:
+                g = gw.stats
+                print(f"gateway: {g.dispatches} coalesced dispatches "
+                      f"(mean {g.mean_coalesced_requests():.1f} requests / "
+                      f"{g.mean_dispatch_size():.1f} samples per dispatch, "
+                      f"max {g.max_dispatch}), {g.direct} direct")
 
     print(f"output shape: {tuple(np.asarray(out).shape)}")
     if args.output:

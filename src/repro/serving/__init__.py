@@ -1,17 +1,21 @@
 """Serving: LM decode steps (``serve_step``) and trained-topographic-map
 batched inference (``maps.MapService`` single-map endpoints,
 ``gateway.MapGateway`` concurrent multi-map front end with cross-request
-coalescing — see ``repro.launch.serve_map``). A training loop can publish
-into a live service/gateway between requests via the atomic ``swap`` /
-``reload`` paths — ``repro.launch.stream_train`` is the canonical
-train-and-serve consumer (DESIGN.md §7)."""
+coalescing, ``fleet.MapFleet`` replicated workers with admission control
+and rolling reload — see ``repro.launch.serve_map``). A training loop can
+publish into a live service/gateway/fleet between requests via the atomic
+``swap`` / ``reload`` paths — ``repro.launch.stream_train`` is the
+canonical train-and-serve consumer (DESIGN.md §7; the fleet tier is §8)."""
+from repro.serving.fleet import FleetStats, MapFleet, Overloaded
 from repro.serving.gateway import GatewayStats, MapGateway
 from repro.serving.maps import (DEFAULT_BUCKETS, GLOBAL_COMPILE_CACHE,
-                                BmuEngine, CompileCache, MapService,
-                                ServiceStats)
+                                BmuEngine, CompileCache, LatencyHistogram,
+                                MapService, ServiceStats)
 from repro.serving.serve_step import (init_serving_cache, make_decode_step,
                                       make_prefill)
 
-__all__ = ["BmuEngine", "CompileCache", "DEFAULT_BUCKETS", "GatewayStats",
-           "GLOBAL_COMPILE_CACHE", "MapGateway", "MapService", "ServiceStats",
-           "init_serving_cache", "make_decode_step", "make_prefill"]
+__all__ = ["BmuEngine", "CompileCache", "DEFAULT_BUCKETS", "FleetStats",
+           "GatewayStats", "GLOBAL_COMPILE_CACHE", "LatencyHistogram",
+           "MapFleet", "MapGateway", "MapService", "Overloaded",
+           "ServiceStats", "init_serving_cache", "make_decode_step",
+           "make_prefill"]

@@ -17,6 +17,10 @@ batching tool:
   ``CompileCache``, so K same-shape maps compile the bucket ladder once,
   not K times.
 
+For *replicating one map* across N workers (admission control, rolling
+reload, SLO histograms) see ``repro.serving.fleet.MapFleet`` — a fleet can
+be ``attach``-ed here to coalesce small requests in front of its replicas.
+
 Requests at or above ``coalesce_max`` samples gain nothing from merging
 and are served inline on the caller's thread; everything smaller is
 enqueued and flushed by the dispatcher thread when the pending total fills
@@ -134,8 +138,15 @@ class MapGateway:
 
     # ------------------------------------------------------------- registry
 
-    def attach(self, name: str, service: MapService) -> "MapGateway":
-        """Register an existing service under ``name``."""
+    def attach(self, name: str, service) -> "MapGateway":
+        """Register an existing service under ``name``.
+
+        Anything with ``cfg`` and ``serve_bmu(data)`` serves: a
+        ``MapService``, or a ``repro.serving.fleet.MapFleet`` — attaching
+        a fleet puts the coalescer *in front of* the replicas, so merged
+        dispatches are admission-controlled and routed like any other
+        request (an ``Overloaded`` shed resolves every rider's future).
+        """
         with self._cond:
             self._services[name] = service
             self._versions.setdefault(name, None)

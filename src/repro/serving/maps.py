@@ -33,6 +33,7 @@ concurrent requests into bucket-sized dispatches.
 from __future__ import annotations
 
 import dataclasses
+import math
 import threading
 import time
 
@@ -198,6 +199,100 @@ class BmuEngine:
         return jnp.concatenate(idxs), jnp.concatenate(q2s)
 
 
+class LatencyHistogram:
+    """Streaming latency percentiles over fixed log-spaced buckets.
+
+    SLO percentiles (p50/p95/p99) without an unbounded request log: spans
+    land in one of ``n_buckets`` geometrically spaced buckets covering
+    ``[lo, hi)`` seconds (default 1 µs .. 100 s, so every bucket is the
+    same ~±15% wide in relative terms), plus an overflow bucket. A
+    percentile reads back the **upper edge** of the bucket holding that
+    quantile — conservative by at most one bucket width, monotone in the
+    quantile, and always > 0 for a non-empty histogram, so
+    ``p99 >= p50 > 0`` holds by construction.
+
+    Thread-safe: ``record`` / ``merge`` / readers all take the instance
+    lock, and replica histograms merge into fleet-wide ones with
+    ``merge`` (bucket-wise integer adds — merging never loses precision,
+    unlike merging precomputed percentiles).
+    """
+
+    N_BUCKETS = 128
+    LO = 1e-6     # seconds; spans below land in bucket 0
+    HI = 100.0    # seconds; spans at/above land in the overflow bucket
+
+    def __init__(self):
+        self._lock = threading.Lock()
+        self._counts = [0] * (self.N_BUCKETS + 1)   # +1: overflow
+        self._scale = self.N_BUCKETS / math.log(self.HI / self.LO)
+        self.count = 0
+        self.total_seconds = 0.0
+
+    def _bucket(self, seconds: float) -> int:
+        if seconds < self.LO:
+            return 0
+        if seconds >= self.HI:
+            return self.N_BUCKETS
+        return min(int(math.log(seconds / self.LO) * self._scale),
+                   self.N_BUCKETS - 1)
+
+    def _edge(self, bucket: int) -> float:
+        """Upper edge of ``bucket`` in seconds (HI for the overflow)."""
+        return self.LO * math.exp((min(bucket, self.N_BUCKETS - 1) + 1)
+                                  / self._scale)
+
+    def record(self, seconds: float) -> None:
+        with self._lock:
+            self._counts[self._bucket(seconds)] += 1
+            self.count += 1
+            self.total_seconds += seconds
+
+    def merge(self, other: "LatencyHistogram") -> "LatencyHistogram":
+        """Fold ``other``'s buckets into this histogram (returns self)."""
+        with other._lock:
+            counts = list(other._counts)
+            n, total = other.count, other.total_seconds
+        with self._lock:
+            for i, c in enumerate(counts):
+                self._counts[i] += c
+            self.count += n
+            self.total_seconds += total
+        return self
+
+    def percentile(self, q: float) -> float:
+        """Seconds at quantile ``q`` in [0, 1]; 0.0 when empty."""
+        if not 0.0 <= q <= 1.0:
+            raise ValueError(f"quantile must be in [0, 1], got {q}")
+        with self._lock:
+            if self.count == 0:
+                return 0.0
+            rank = max(1, math.ceil(q * self.count))
+            seen = 0
+            for bucket, c in enumerate(self._counts):
+                seen += c
+                if seen >= rank:
+                    return self._edge(bucket)
+        return self.HI                      # unreachable; counts sum to count
+
+    def mean(self) -> float:
+        with self._lock:
+            return self.total_seconds / self.count if self.count else 0.0
+
+    def quantiles(self) -> dict[str, float]:
+        """The SLO trio, in seconds: ``{"p50": ..., "p95": ..., "p99": ...}``."""
+        return {"p50": self.percentile(0.50), "p95": self.percentile(0.95),
+                "p99": self.percentile(0.99)}
+
+    def summary(self, unit: float = 1e3) -> str:
+        """One-line human summary (default unit: milliseconds)."""
+        qs = self.quantiles()
+        return (f"p50={qs['p50'] * unit:.2f} p95={qs['p95'] * unit:.2f} "
+                f"p99={qs['p99'] * unit:.2f} (n={self.count})")
+
+    def __repr__(self):
+        return f"LatencyHistogram({self.summary()})"
+
+
 @dataclasses.dataclass
 class ServiceStats:
     """Rolling counters for one ``MapService``.
@@ -213,6 +308,10 @@ class ServiceStats:
         request's end. ``throughput()`` divides by this, so it stays honest
         under concurrent load; ``busy_throughput()`` is the per-request
         serial rate.
+
+    ``latency`` is a ``LatencyHistogram`` of per-request engine spans
+    (same clock as ``busy_seconds``): p50/p95/p99 without a request log,
+    mergeable across replicas (``repro.serving.fleet``).
     """
     requests: int = 0
     samples: int = 0
@@ -221,6 +320,8 @@ class ServiceStats:
     swaps: int = 0
     window_start: float | None = None
     window_end: float | None = None
+    latency: LatencyHistogram = dataclasses.field(
+        default_factory=LatencyHistogram)
 
     @property
     def seconds(self) -> float:
@@ -401,6 +502,7 @@ class MapService:
                 st.window_start, t0)
             st.window_end = t1 if st.window_end is None else max(
                 st.window_end, t1)
+        st.latency.record(t1 - t0)
         return idx, q2
 
     # --------------------------------------------------------- live updates

@@ -1,0 +1,418 @@
+"""MapFleet: endpoint parity, least-outstanding routing, admission control
+(backpressure then typed Overloaded sheds), replica health ejection and
+re-admission, store-versioned rolling reload under load, latency
+histograms, and the serve_map fleet CLI.
+
+ISSUE 6 acceptance: requests beyond the admission bound get ``Overloaded``
+(not deadlock, not silent drop) with sheds counted separately from
+completions, and a rolling reload under a threaded read hammer completes
+with zero errors and no torn reads — every result matches exactly one of
+the two store versions.
+"""
+import re
+import sys
+import threading
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.api import AFMConfig, MapStore, TopoMap
+from repro.core import search as search_lib
+from repro.launch import serve_map as serve_map_cli
+from repro.serving import (CompileCache, LatencyHistogram, MapFleet,
+                           MapGateway, MapService, Overloaded)
+from repro.serving import maps as maps_lib
+
+CFG = AFMConfig(side=6, dim=12, i_max=48, batch=4, e_factor=0.5)
+
+
+def _data(n=256, seed=3):
+    key = jax.random.PRNGKey(seed)
+    x = jax.random.normal(key, (n, CFG.dim))
+    y = jax.random.randint(jax.random.fold_in(key, 1), (n,), 0, 4)
+    return x, y
+
+
+@pytest.fixture(scope="module")
+def fitted():
+    x, y = _data()
+    return TopoMap(CFG).fit(x, y, key=jax.random.PRNGKey(7)), x, y
+
+
+# ------------------------------------------------------------------ histogram
+
+
+def test_latency_histogram_percentiles_and_merge():
+    h = LatencyHistogram()
+    assert h.percentile(0.5) == 0.0 and h.count == 0
+    for ms in (1, 1, 2, 2, 2, 5, 10, 50, 200, 1000):
+        h.record(ms / 1e3)
+    assert h.count == 10
+    # nearest-rank reads off the bucket's upper edge: conservative by at
+    # most one ~±15% bucket (p95 of 10 samples is rank 10 — the max)
+    assert 0.002 <= h.percentile(0.5) <= 0.0024
+    assert 0.04 <= h.percentile(0.8) <= 0.06
+    assert 1.0 <= h.percentile(0.95) <= 1.2
+    assert 1.0 <= h.percentile(0.99) <= 1.2
+    # monotone, and non-degenerate by construction
+    qs = h.quantiles()
+    assert 0 < qs["p50"] <= qs["p95"] <= qs["p99"]
+    assert h.mean() == pytest.approx(1.273 / 10, rel=1e-6)
+    # merge is bucket-wise: percentiles of the union, not of the summaries
+    h2 = LatencyHistogram()
+    for _ in range(90):
+        h2.record(1e-4)
+    h2.merge(h)
+    assert h2.count == 100
+    assert h2.percentile(0.5) < 2e-4          # the fast mass dominates p50
+    assert h2.percentile(0.99) >= 0.2         # the slow tail survives merge
+    assert "p99" in h2.summary()
+
+
+def test_latency_histogram_clamps_extremes():
+    h = LatencyHistogram()
+    h.record(0.0)                              # below LO -> first bucket
+    h.record(1e9)                              # above HI -> overflow bucket
+    assert h.count == 2
+    assert h.percentile(0.01) == pytest.approx(h._edge(0))
+    assert h.percentile(1.0) == pytest.approx(h.HI)
+
+
+def test_service_stats_record_latency(fitted):
+    tm, x, _ = fitted
+    svc = MapService.from_estimator(tm)
+    svc.transform(x[:8])
+    svc.predict(x[:40])
+    lat = svc.stats.latency
+    assert lat.count == svc.stats.requests == 2
+    qs = lat.quantiles()
+    assert 0 < qs["p50"] <= qs["p99"]
+    # the histogram clock is the busy clock: totals agree
+    assert lat.total_seconds == pytest.approx(svc.stats.busy_seconds)
+
+
+# --------------------------------------------------------------- fleet basics
+
+
+def test_fleet_endpoints_match_service(fitted):
+    tm, x, _ = fitted
+    fleet = MapFleet.from_estimator(tm, replicas=3)
+    svc = MapService.from_estimator(tm)
+    for n in (1, 7, 64, 200):
+        np.testing.assert_array_equal(np.asarray(fleet.transform(x[:n])),
+                                      np.asarray(svc.transform(x[:n])))
+    np.testing.assert_array_equal(
+        np.asarray(fleet.transform(x[:9], lattice=True)),
+        np.asarray(svc.transform(x[:9], lattice=True)))
+    np.testing.assert_array_equal(np.asarray(fleet.predict(x[:33])),
+                                  np.asarray(svc.predict(x[:33])))
+    np.testing.assert_allclose(np.asarray(fleet.quantization_errors(x[:12])),
+                               np.asarray(svc.quantization_errors(x[:12])),
+                               rtol=1e-6)
+    assert fleet.quantization_error(x[:12]) == pytest.approx(
+        svc.quantization_error(x[:12]), rel=1e-5)
+    np.testing.assert_allclose(fleet.u_matrix(), svc.u_matrix(), rtol=1e-6)
+    assert fleet.stats.completed == 8 and fleet.stats.sheds == 0
+    assert fleet.stats.latency.count == 8
+    assert fleet.merged_engine_latency().count == 8
+
+
+def test_fleet_validates_construction(fitted):
+    tm, _, _ = fitted
+    with pytest.raises(ValueError, match="replicas"):
+        MapFleet.from_estimator(tm, replicas=0)
+    with pytest.raises(ValueError, match="max_outstanding"):
+        MapFleet.from_estimator(tm, replicas=1, max_outstanding=0)
+
+
+def test_fleet_round_robins_idle_replicas(fitted):
+    """Serial traffic (everyone idle) must spread across replicas via the
+    round-robin tie-break, not pile onto replica 0."""
+    tm, x, _ = fitted
+    fleet = MapFleet.from_estimator(tm, replicas=3)
+    for i in range(9):
+        fleet.transform(x[i:i + 1])
+    counts = [svc.stats.requests for svc in fleet.services()]
+    assert counts == [3, 3, 3]
+
+
+def test_fleet_replicas_share_compile_cache(fitted, monkeypatch):
+    """K replicas of one map compile the bucket ladder once, not K times."""
+    tm, x, _ = fitted
+    cache = CompileCache()
+    monkeypatch.setattr(maps_lib, "GLOBAL_COMPILE_CACHE", cache)
+    fleet = MapFleet.from_estimator(tm, replicas=4, buckets=(8, 64))
+    for i in range(8):                        # hit every replica, both buckets
+        fleet.transform(x[i:i + 1])
+        fleet.transform(x[:40])
+    assert cache.trace_count <= 2             # == ladder size, not 4 x 2
+
+
+# ----------------------------------------------------------- admission control
+
+
+def test_fleet_admission_sheds_deterministically(fitted):
+    """Saturation: requests beyond the bound block, then get a typed
+    Overloaded with a retry hint — never a deadlock or a silent drop —
+    and stats count sheds separately from completions."""
+    tm, x, _ = fitted
+    fleet = MapFleet.from_estimator(tm, replicas=1, max_outstanding=2,
+                                    shed_deadline=0.05)
+    svc = fleet.services()[0]
+    release, entered = threading.Event(), threading.Semaphore(0)
+    inner = svc.serve_bmu
+
+    def gated(data):
+        entered.release()
+        assert release.wait(30)
+        return inner(data)
+
+    svc.serve_bmu = gated
+    results, errors = [], []
+
+    def blocked_client(i):
+        try:
+            results.append(np.asarray(fleet.transform(x[i:i + 1])))
+        except BaseException as e:            # noqa: BLE001 — recorded
+            errors.append(e)
+
+    threads = [threading.Thread(target=blocked_client, args=(i,))
+               for i in range(2)]
+    for t in threads:
+        t.start()
+    assert entered.acquire(timeout=30)        # both admitted slots are
+    assert entered.acquire(timeout=30)        # routed and gated in-engine
+    t0 = time.perf_counter()
+    with pytest.raises(Overloaded) as exc:    # the 3rd request must shed
+        fleet.transform(x[:1])
+    waited = time.perf_counter() - t0
+    assert waited >= 0.04                     # real backpressure first
+    assert exc.value.retry_after >= fleet.shed_deadline
+    assert fleet.stats.sheds == 1 and fleet.stats.completed == 0
+    release.set()
+    for t in threads:
+        t.join(30)
+    assert not errors and len(results) == 2   # blocked callers completed
+    ref = np.asarray(search_lib.exact_bmu(tm.state_.w, x[:2])[0])
+    assert sorted(int(r[0]) for r in results) == sorted(int(v) for v in ref)
+    assert fleet.stats.completed == 2 and fleet.stats.sheds == 1
+    assert fleet.stats.requests == 3
+    assert fleet.outstanding() == 0
+
+
+def test_fleet_shed_resolves_gateway_futures(fitted):
+    """A fleet behind the gateway: Overloaded must surface through the
+    request's future, not strand it. Uses coalesce_max=1 so requests run
+    inline on caller threads — with the queued path, the single
+    dispatcher serialises fleet calls and can never see saturation."""
+    tm, x, _ = fitted
+    fleet = MapFleet.from_estimator(tm, replicas=1, max_outstanding=1,
+                                    shed_deadline=0.02)
+    svc = fleet.services()[0]
+    release, entered = threading.Event(), threading.Event()
+    inner = svc.serve_bmu
+
+    def gated(data):
+        entered.set()
+        assert release.wait(30)
+        return inner(data)
+
+    svc.serve_bmu = gated
+    with MapGateway(max_delay=0.001, coalesce_max=1) as gw:
+        gw.attach("fleet", fleet)
+        held = {}
+
+        def hold():                            # occupies the only slot
+            held["future"] = gw.submit("fleet", x[:1])
+
+        holder = threading.Thread(target=hold)
+        holder.start()
+        assert entered.wait(30)
+        doomed = gw.submit("fleet", x[1:2])    # must shed via its future
+        with pytest.raises(Overloaded):
+            doomed.result(30)
+        release.set()
+        holder.join(30)
+        assert int(np.asarray(held["future"].result(30))[0]) == int(
+            np.asarray(search_lib.exact_bmu(tm.state_.w, x[:1])[0])[0])
+
+
+# ------------------------------------------------------------------- health
+
+
+def test_fleet_ejects_and_readmits_slow_replica(fitted):
+    tm, x, _ = fitted
+    fleet = MapFleet.from_estimator(tm, replicas=2, eject_after=4,
+                                    eject_factor=3.0, eject_cooldown=0.15)
+    slow_svc = fleet.services()[1]
+    inner = slow_svc.serve_bmu
+
+    def slow(data):
+        time.sleep(0.05)                      # >> the healthy replica
+        return inner(data)
+
+    slow_svc.serve_bmu = slow
+    for i in range(24):                       # serial: round-robin feeds both
+        fleet.transform(x[i:i + 1])
+        if fleet.stats.ejections:
+            break
+    assert fleet.stats.ejections >= 1
+    assert any(r["ejected"] for r in fleet.replica_stats())
+    served_while_out = slow_svc.stats.requests
+    for i in range(6):                        # routing skips the ejected one
+        fleet.transform(x[i:i + 1])
+    assert slow_svc.stats.requests == served_while_out
+    time.sleep(0.2)                           # past the cooldown: probation
+    for i in range(4):
+        fleet.transform(x[i:i + 1])
+    assert slow_svc.stats.requests > served_while_out
+
+
+# ------------------------------------------------------------ rolling reload
+
+
+def test_fleet_reload_requires_store(fitted):
+    tm, _, _ = fitted
+    with pytest.raises(RuntimeError, match="store"):
+        MapFleet.from_estimator(tm, replicas=1).reload()
+
+
+def test_fleet_reload_noop_at_current_version(tmp_path, fitted):
+    tm, x, _ = fitted
+    store = MapStore(str(tmp_path / "store"))
+    store.save(tm, "toy")
+    fleet = MapFleet.from_store(str(tmp_path / "store"), "toy", replicas=2)
+    assert fleet.version == 1
+    assert fleet.reload() == 1                # no-op: already current
+    assert fleet.stats.reloads == 0
+    assert all(svc.stats.swaps == 0 for svc in fleet.services())
+
+
+def test_fleet_rolling_reload_under_load(tmp_path, fitted):
+    """The ISSUE 6 hammer: threaded clients read transform/predict
+    continuously while the fleet rolls every replica to a new store
+    version — zero request errors, no torn reads, and every result
+    matches exactly one of the two versions."""
+    tm, x, _ = fitted
+    store = MapStore(str(tmp_path / "store"))
+    store.save(tm, "toy")
+    fleet = MapFleet.from_store(str(tmp_path / "store"), "toy", replicas=2,
+                                max_outstanding=64, shed_deadline=30.0)
+    # v2 = flipped weights + flipped labels: transform flips, predict is
+    # invariant — so a torn (weights, labels) pairing is detectable
+    state_b = tm.state_._replace(w=jnp.flip(tm.state_.w, axis=0))
+    batch = x[:16]
+    t_a = np.asarray(fleet.transform(batch))
+    t_b = CFG.n_units - 1 - t_a
+    p_ok = np.asarray(fleet.predict(batch))
+    compiles = sum(svc.engine.trace_count for svc in fleet.services())
+    stop, failures = threading.Event(), []
+
+    def reader():
+        try:
+            while not stop.is_set():
+                t = np.asarray(fleet.transform(batch))
+                if not (np.array_equal(t, t_a) or np.array_equal(t, t_b)):
+                    failures.append(("torn transform", t))
+                p = np.asarray(fleet.predict(batch))
+                if not np.array_equal(p, p_ok):
+                    failures.append(("torn predict", p))
+        except BaseException as e:            # noqa: BLE001 — must be none
+            failures.append(("request error", e))
+
+    threads = [threading.Thread(target=reader) for _ in range(4)]
+    for t in threads:
+        t.start()
+    store.save_state("toy", cfg=CFG, state=state_b,
+                     unit_labels=jnp.flip(tm.unit_labels_))
+    assert fleet.reload() == 2                # rolls under the hammer
+    # post-reload reads must be v2 (and still torn-free while hammered)
+    np.testing.assert_array_equal(np.asarray(fleet.transform(batch)), t_b)
+    stop.set()
+    for t in threads:
+        t.join(30)
+    assert not failures, failures[:3]
+    assert fleet.version == 2 and fleet.stats.reloads == 1
+    assert all(svc.stats.swaps == 1 for svc in fleet.services())
+    # same-shape roll: swapped in place, no new compiled signatures
+    assert sum(svc.engine.trace_count
+               for svc in fleet.services()) == compiles
+    assert fleet.stats.sheds == 0
+    assert not any(r["draining"] for r in fleet.replica_stats())
+
+
+def test_fleet_reload_shape_change_replaces_replicas(tmp_path, fitted):
+    tm, x, y = fitted
+    store = MapStore(str(tmp_path / "store"))
+    store.save(tm, "toy")
+    fleet = MapFleet.from_store(str(tmp_path / "store"), "toy", replicas=2)
+    old = fleet.services()
+    bigger = TopoMap(AFMConfig(side=8, dim=12, i_max=48, batch=4,
+                               e_factor=0.5)).fit(x, y,
+                                                  key=jax.random.PRNGKey(9))
+    store.save(bigger, "toy")
+    assert fleet.reload() == 2
+    assert all(a is not b for a, b in zip(fleet.services(), old))
+    assert fleet.cfg.side == 8
+    np.testing.assert_array_equal(np.asarray(fleet.transform(x[:16])),
+                                  np.asarray(bigger.transform(x[:16])))
+
+
+# ---------------------------------------------------------------- CLI
+
+
+def _run_cli(monkeypatch, capsys, argv):
+    monkeypatch.setattr(sys, "argv", ["serve_map"] + argv)
+    serve_map_cli.main()
+    return capsys.readouterr().out
+
+
+def test_serve_map_cli_fleet_with_rolling_reload(tmp_path, monkeypatch,
+                                                 capsys, fitted):
+    tm, _, _ = fitted
+    store = MapStore(str(tmp_path / "store"))
+    store.save(tm, "toy")
+    out = _run_cli(monkeypatch, capsys,
+                   ["--store", str(tmp_path / "store"), "--map", "toy",
+                    "--random", "64", "--batch", "4", "--concurrency", "2",
+                    "--replicas", "2", "--shed-deadline-ms", "2000",
+                    "--reload-during-run"])
+    assert "replicas=2" in out
+    assert "0 shed" in out
+    assert re.search(r"fleet latency ms: p50=\d", out)
+    assert re.search(r"replica 1: \d+ requests", out)
+    assert "rolled to version 2 mid-run (reloads=1)" in out
+    assert "output shape: (64,)" in out
+    assert store.versions("toy") == [1, 2]
+
+
+def test_serve_map_cli_single_service_prints_percentiles(
+        tmp_path, monkeypatch, capsys, fitted):
+    tm, _, _ = fitted
+    path = str(tmp_path / "art")
+    tm.save(path)
+    out = _run_cli(monkeypatch, capsys,
+                   ["--artifact", path, "--random", "32"])
+    assert re.search(r"latency ms: p50=\d", out)
+
+
+@pytest.mark.parametrize("argv,msg", [
+    (["--artifact", "a", "--random", "8", "--replicas", "2", "--gateway"],
+     "--gateway coalesces"),
+    (["--artifact", "a", "--random", "8", "--shed-deadline-ms", "10"],
+     "--shed-deadline-ms"),
+    (["--artifact", "a", "--random", "8", "--max-outstanding", "4"],
+     "--max-outstanding"),
+    (["--artifact", "a", "--random", "8", "--reload-during-run"],
+     "--reload-during-run"),
+    (["--artifact", "a", "--random", "8", "--replicas", "2",
+      "--reload-during-run"], "needs --store"),
+])
+def test_serve_map_cli_rejects_incompatible_fleet_flags(
+        monkeypatch, argv, msg):
+    monkeypatch.setattr(sys, "argv", ["serve_map"] + argv)
+    with pytest.raises(SystemExit, match=re.escape(msg)):
+        serve_map_cli.main()

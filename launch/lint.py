@@ -1,0 +1,61 @@
+#!/usr/bin/env python
+"""Run the repo's static checks: repro.analysis + (if installed) ruff.
+
+Usage::
+
+    python launch/lint.py                 # check src/repro + launch
+    python launch/lint.py --no-ruff       # analysis checkers only
+    python launch/lint.py src/repro/serving
+
+Equivalent to the CI lint leg:
+``python -m repro.analysis --baseline analysis-baseline.json`` followed by
+``ruff check .``. ruff is optional locally — when it isn't installed the
+ruff step is skipped with a notice (CI always runs it).
+"""
+
+from __future__ import annotations
+
+import argparse
+import shutil
+import subprocess
+import sys
+from pathlib import Path
+
+REPO_ROOT = Path(__file__).resolve().parents[1]
+
+
+def main(argv: list[str] | None = None) -> int:
+    parser = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    parser.add_argument("paths", nargs="*", help="paths for repro.analysis")
+    parser.add_argument(
+        "--baseline",
+        default=str(REPO_ROOT / "analysis-baseline.json"),
+        help="baseline JSON (default: analysis-baseline.json at repo root)",
+    )
+    parser.add_argument(
+        "--no-ruff", action="store_true", help="skip the ruff step"
+    )
+    args = parser.parse_args(argv)
+
+    sys.path.insert(0, str(REPO_ROOT / "src"))
+    from repro.analysis.__main__ import main as analysis_main
+
+    analysis_args: list[str] = list(args.paths)
+    if Path(args.baseline).exists():
+        analysis_args += ["--baseline", args.baseline]
+    rc = analysis_main(analysis_args)
+
+    if not args.no_ruff:
+        ruff = shutil.which("ruff")
+        if ruff is None:
+            print("lint: ruff not installed locally; skipping (CI runs it)")
+        else:
+            ruff_rc = subprocess.call(
+                [ruff, "check", str(REPO_ROOT)], cwd=REPO_ROOT
+            )
+            rc = rc or ruff_rc
+    return rc
+
+
+if __name__ == "__main__":
+    sys.exit(main())

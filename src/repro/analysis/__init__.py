@@ -1,0 +1,42 @@
+"""repro.analysis — repo-invariant static checks + runtime verification.
+
+Static side (``python -m repro.analysis``): four AST checkers encode the
+invariants the parity/serving claims rest on:
+
+* ``REP101`` tracer-hazard   — Python control flow on JAX values inside
+  traced code (``analysis.tracer``).
+* ``REP201``/``REP202`` PRNG discipline — key reuse without a split, and
+  hardcoded ``PRNGKey(const)`` in library code (``analysis.prng``).
+* ``REP301`` lock discipline — ``GUARDED_BY`` attributes touched outside
+  their lock (``analysis.locks``).
+* ``REP401``/``REP402`` retrace-hazard — jitted closures capturing array
+  data, and jit signatures keyed on Python floats (``analysis.retrace``).
+
+Runtime side (``analysis.runtime``): ``TraceGuard`` asserts no unexpected
+recompiles across a block; ``LockOrderRecorder`` records lock acquisition
+order across threads and flags ordering inversions.
+
+Escape hatches are inline comments of the form ``# lint: <name>-ok(reason)``
+where ``<name>`` is ``tracer``, ``prng``, ``unlocked``, or ``retrace``.
+"""
+
+from repro.analysis.base import (
+    CODE_TO_HATCH,
+    Diagnostic,
+    check_source,
+    escape_hatches,
+    load_baseline,
+    write_baseline,
+)
+from repro.analysis.runtime import LockOrderRecorder, TraceGuard
+
+__all__ = [
+    "CODE_TO_HATCH",
+    "Diagnostic",
+    "LockOrderRecorder",
+    "TraceGuard",
+    "check_source",
+    "escape_hatches",
+    "load_baseline",
+    "write_baseline",
+]

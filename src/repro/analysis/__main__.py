@@ -1,0 +1,147 @@
+"""CLI driver: ``python -m repro.analysis [paths...] [--baseline FILE]``.
+
+Walks the given files/directories (default: the repo's ``src/repro`` and
+``launch`` trees), runs every checker scoped to the directories it
+protects, subtracts the committed baseline, and prints the remaining
+diagnostics as ``path:line: CODE message``. Exit status 1 iff any
+non-baselined diagnostic remains.
+
+``--write-baseline FILE`` records the current findings as the new
+baseline instead of failing on them.
+"""
+
+from __future__ import annotations
+
+import argparse
+import sys
+from pathlib import Path
+
+from repro.analysis import locks, prng, retrace, tracer
+from repro.analysis.base import (
+    Diagnostic,
+    check_source,
+    load_baseline,
+    subtract_baseline,
+    write_baseline,
+)
+
+# REP101 reasons about traced call graphs; scope it to the packages that
+# actually contain traced code, per the invariant spec (DESIGN.md §9).
+_TRACER_DIRS = ("core", "kernels", "training")
+
+
+def _repo_root() -> Path:
+    # src/repro/analysis/__main__.py -> repo root is three levels up
+    # from the package directory's parent (src/).
+    return Path(__file__).resolve().parents[3]
+
+
+def _iter_py_files(paths: list[Path]) -> list[Path]:
+    files: list[Path] = []
+    for p in paths:
+        if p.is_dir():
+            files.extend(sorted(p.rglob("*.py")))
+        elif p.suffix == ".py":
+            files.append(p)
+    seen: set[Path] = set()
+    out: list[Path] = []
+    for f in files:
+        r = f.resolve()
+        if r not in seen:
+            seen.add(r)
+            out.append(f)
+    return out
+
+
+def checkers_for(path: str):
+    """Select the checker set for one repo-relative posix path."""
+    parts = path.split("/")
+    selected = [prng.check, locks.check, retrace.check]
+    if any(d in parts for d in _TRACER_DIRS):
+        selected.insert(0, tracer.check)
+    return selected
+
+
+def run(
+    paths: list[Path],
+    root: Path,
+    baseline: dict[str, int] | None = None,
+) -> tuple[list[Diagnostic], dict[str, list[str]]]:
+    """Check all files; returns (diagnostics, source lines per path)."""
+    diags: list[Diagnostic] = []
+    lines_by_path: dict[str, list[str]] = {}
+    for f in _iter_py_files(paths):
+        try:
+            rel = f.resolve().relative_to(root).as_posix()
+        except ValueError:
+            rel = f.as_posix()
+        source = f.read_text()
+        lines_by_path[rel] = source.splitlines()
+        diags.extend(check_source(checkers_for(rel), source, rel))
+    diags.sort(key=lambda d: (d.path, d.line, d.code))
+    if baseline:
+        diags = subtract_baseline(diags, lines_by_path, baseline)
+    return diags, lines_by_path
+
+
+def main(argv: list[str] | None = None) -> int:
+    parser = argparse.ArgumentParser(
+        prog="python -m repro.analysis",
+        description="Repo-invariant static checks (tracer/PRNG/lock/retrace).",
+    )
+    parser.add_argument(
+        "paths",
+        nargs="*",
+        help="files or directories to check "
+        "(default: src/repro and launch under the repo root)",
+    )
+    parser.add_argument(
+        "--baseline",
+        help="baseline JSON; findings covered by it are not reported",
+    )
+    parser.add_argument(
+        "--write-baseline",
+        metavar="FILE",
+        help="record current findings to FILE and exit 0",
+    )
+    parser.add_argument(
+        "--root",
+        help="repo root for relative paths/baseline keys (default: inferred)",
+    )
+    args = parser.parse_args(argv)
+
+    root = Path(args.root).resolve() if args.root else _repo_root()
+    if args.paths:
+        paths = [Path(p) for p in args.paths]
+    else:
+        paths = [root / "src" / "repro", root / "launch"]
+        paths = [p for p in paths if p.exists()]
+
+    baseline = load_baseline(args.baseline) if args.baseline else None
+    diags, lines_by_path = run(paths, root, baseline)
+
+    if args.write_baseline:
+        fingerprints: dict[str, int] = {}
+        for d in diags:
+            fp = d.fingerprint(lines_by_path.get(d.path, []))
+            fingerprints[fp] = fingerprints.get(fp, 0) + 1
+        write_baseline(args.write_baseline, fingerprints)
+        print(
+            f"wrote {len(fingerprints)} baseline entr"
+            f"{'y' if len(fingerprints) == 1 else 'ies'} "
+            f"to {args.write_baseline}"
+        )
+        return 0
+
+    for d in diags:
+        print(d.format())
+    n = len(diags)
+    if n:
+        print(f"\n{n} violation{'s' if n != 1 else ''} found", file=sys.stderr)
+        return 1
+    print("repro.analysis: clean")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,205 @@
+"""REP201/REP202: PRNG key discipline.
+
+* ``REP201`` — the same key variable is consumed by two ``jax.random.*``
+  sampler calls without an intervening reassignment (``split`` /
+  ``fold_in`` produce *new* keys; passing the same key to two samplers
+  produces correlated streams, which silently corrupts the async engine's
+  latency draws and any parity experiment seeded from them).
+* ``REP202`` — a hardcoded ``jax.random.PRNGKey(<int literal>)`` in
+  library (non-test) code. Constants bake one stream into the library and
+  make "seedable" runs lie; seeds must be plumbed in as parameters.
+
+Consumption tracking is linear per function body (by source position),
+with nested functions analysed independently.
+"""
+
+from __future__ import annotations
+
+import ast
+
+from repro.analysis.base import Diagnostic, dotted_name, final_attr
+
+# jax.random members that *derive* keys rather than consuming entropy.
+_DERIVERS = {
+    "split",
+    "fold_in",
+    "PRNGKey",
+    "key",
+    "key_data",
+    "wrap_key_data",
+    "clone",
+}
+
+
+def _is_random_call(node: ast.Call) -> bool:
+    """True for ``<...>.random.<member>(...)`` call shapes."""
+    func = node.func
+    if not isinstance(func, ast.Attribute):
+        return False
+    base = func.value
+    return isinstance(base, ast.Attribute) and base.attr == "random" or (
+        isinstance(base, ast.Name) and base.id in {"random", "jrandom", "jr"}
+    )
+
+
+def _key_arg(node: ast.Call) -> str | None:
+    for kw in node.keywords:
+        if kw.arg == "key" and isinstance(kw.value, ast.Name):
+            return kw.value.id
+    if node.args and isinstance(node.args[0], ast.Name):
+        return node.args[0].id
+    return None
+
+
+def _is_testish(path: str) -> bool:
+    parts = path.replace("\\", "/").split("/")
+    return any(p in {"tests", "test", "fixtures", "examples"} for p in parts) or (
+        parts and parts[-1].startswith(("test_", "conftest"))
+    )
+
+
+class _FunctionScanner:
+    """Branch-aware scan of one function body for key reuse.
+
+    State is ``{key name: line of first consumption}``. ``if``/``else``
+    arms are mutually exclusive, so each is scanned against a copy of the
+    incoming state and the results merged (union); reassignment clears a
+    key's consumed mark. Nested functions get their own scanner.
+    """
+
+    def __init__(self, fn, path: str) -> None:
+        self.fn = fn
+        self.path = path
+        self.diags: list[Diagnostic] = []
+
+    def run(self) -> list[Diagnostic]:
+        state: dict[str, int] = {}
+        for stmt in self.fn.body:
+            self._scan_stmt(stmt, state)
+        return self.diags
+
+    # -- expressions ------------------------------------------------------
+    def _scan_expr(self, node: ast.AST | None, state: dict[str, int]) -> None:
+        if node is None:
+            return
+        for sub in ast.walk(node):
+            if isinstance(sub, ast.Call) and _is_random_call(sub):
+                if final_attr(sub.func) in _DERIVERS:
+                    continue
+                key = _key_arg(sub)
+                if key is None:
+                    continue
+                first = state.get(key)
+                if first is not None:
+                    self.diags.append(
+                        Diagnostic(
+                            self.path,
+                            sub.lineno,
+                            "REP201",
+                            f"key `{key}` already consumed on line {first} "
+                            "and reused without split/fold_in "
+                            "(correlated random streams)",
+                        )
+                    )
+                else:
+                    state[key] = sub.lineno
+
+    def _reset_targets(self, target: ast.AST, state: dict[str, int]) -> None:
+        for name_node in ast.walk(target):
+            if isinstance(name_node, ast.Name):
+                state.pop(name_node.id, None)
+
+    # -- statements -------------------------------------------------------
+    def _scan_body(self, body, state: dict[str, int]) -> None:
+        for stmt in body:
+            self._scan_stmt(stmt, state)
+
+    @staticmethod
+    def _merge(into: dict[str, int], *branches: dict[str, int]) -> None:
+        merged: dict[str, int] = {}
+        for b in [dict(b) for b in branches]:
+            for k, line in b.items():
+                merged[k] = min(merged.get(k, line), line)
+        into.clear()
+        into.update(merged)
+
+    def _scan_stmt(self, stmt: ast.stmt, state: dict[str, int]) -> None:
+        if isinstance(stmt, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            return  # scanned independently
+        if isinstance(stmt, ast.Assign):
+            self._scan_expr(stmt.value, state)
+            for t in stmt.targets:
+                self._reset_targets(t, state)
+        elif isinstance(stmt, (ast.AnnAssign, ast.AugAssign)):
+            self._scan_expr(stmt.value, state)
+            self._reset_targets(stmt.target, state)
+        elif isinstance(stmt, ast.If):
+            self._scan_expr(stmt.test, state)
+            then_state = dict(state)
+            else_state = dict(state)
+            self._scan_body(stmt.body, then_state)
+            self._scan_body(stmt.orelse, else_state)
+            self._merge(state, then_state, else_state)
+        elif isinstance(stmt, (ast.For, ast.AsyncFor)):
+            self._scan_expr(stmt.iter, state)
+            self._reset_targets(stmt.target, state)
+            # One pass through the body; cross-iteration reuse is assumed
+            # to be handled by reassignment (split) inside the loop.
+            self._scan_body(stmt.body, state)
+            self._scan_body(stmt.orelse, state)
+        elif isinstance(stmt, ast.While):
+            self._scan_expr(stmt.test, state)
+            self._scan_body(stmt.body, state)
+            self._scan_body(stmt.orelse, state)
+        elif isinstance(stmt, (ast.With, ast.AsyncWith)):
+            for item in stmt.items:
+                self._scan_expr(item.context_expr, state)
+            self._scan_body(stmt.body, state)
+        elif isinstance(stmt, ast.Try):
+            self._scan_body(stmt.body, state)
+            for handler in stmt.handlers:
+                h_state = dict(state)
+                self._scan_body(handler.body, h_state)
+                self._merge(state, state, h_state)
+            self._scan_body(stmt.orelse, state)
+            self._scan_body(stmt.finalbody, state)
+        elif isinstance(stmt, (ast.Return, ast.Expr, ast.Raise, ast.Assert)):
+            for sub in ast.iter_child_nodes(stmt):
+                if isinstance(sub, ast.expr):
+                    self._scan_expr(sub, state)
+        elif isinstance(stmt, (ast.Match,)):
+            for case in stmt.cases:
+                c_state = dict(state)
+                self._scan_body(case.body, c_state)
+                self._merge(state, state, c_state)
+        else:
+            for sub in ast.iter_child_nodes(stmt):
+                if isinstance(sub, ast.expr):
+                    self._scan_expr(sub, state)
+
+
+def check(tree: ast.AST, source: str, path: str) -> list[Diagnostic]:
+    diags: list[Diagnostic] = []
+    testish = _is_testish(path)
+    for node in ast.walk(tree):
+        if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            diags.extend(_FunctionScanner(node, path).run())
+        if (
+            not testish
+            and isinstance(node, ast.Call)
+            and final_attr(node.func) in {"PRNGKey", "key"}
+            and (dotted_name(node.func) or "").split(".")[-2:-1] == ["random"]
+            and node.args
+            and isinstance(node.args[0], ast.Constant)
+            and isinstance(node.args[0].value, int)
+        ):
+            diags.append(
+                Diagnostic(
+                    path,
+                    node.lineno,
+                    "REP202",
+                    f"hardcoded PRNGKey({node.args[0].value}) in library "
+                    "code; plumb a seed parameter instead",
+                )
+            )
+    return diags

@@ -1,0 +1,215 @@
+"""REP401/REP402: retrace hazards around ``jax.jit``.
+
+* ``REP401`` — an inner function handed to ``jax.jit`` closes over a
+  parameter of its enclosing function instead of taking it as an
+  argument. This is the PR-5 run-caching bug class: the closure pins one
+  array into the compiled program, so every new array retraces (or,
+  cached, silently serves stale data).
+* ``REP402`` — a jit signature marks a Python-``float`` parameter static
+  (``static_argnums`` / ``static_argnames``). Floats make unbounded jit
+  cache keys: every new learning rate or tolerance value recompiles.
+
+Conventionally-static names (``self``, ``cfg``/``config`` objects,
+``*_fn`` callables) are exempt from REP401 — closing over static config
+is exactly how this repo keys its compile caches on hashable dataclasses.
+"""
+
+from __future__ import annotations
+
+import ast
+
+from repro.analysis.base import Diagnostic, final_attr
+
+_STATIC_NAMES = {"self", "cls", "fn", "f"}
+_STATIC_SUFFIXES = ("_fn", "cfg", "config", "_opts", "_options")
+
+
+def _is_static_name(name: str) -> bool:
+    return name in _STATIC_NAMES or name.endswith(_STATIC_SUFFIXES)
+
+
+def _param_names(fn) -> list[str]:
+    args = fn.args
+    return [
+        a.arg
+        for a in (
+            list(args.posonlyargs) + list(args.args) + list(args.kwonlyargs)
+        )
+    ]
+
+
+def _is_jit_call(node: ast.Call) -> bool:
+    return final_attr(node.func) in {"jit", "pjit"}
+
+
+def _jitted_inner_functions(fn) -> dict[str, ast.Call]:
+    """Names of functions defined in ``fn`` that ``fn`` passes to jit."""
+    jitted: dict[str, ast.Call] = {}
+    for node in ast.walk(fn):
+        if isinstance(node, ast.Call) and _is_jit_call(node):
+            for arg in list(node.args) + [kw.value for kw in node.keywords]:
+                if isinstance(arg, ast.Name):
+                    jitted[arg.id] = node
+    return jitted
+
+
+def _jit_static_markers(call: ast.Call) -> tuple[list[int], list[str]]:
+    nums: list[int] = []
+    names: list[str] = []
+    for kw in call.keywords:
+        if kw.arg == "static_argnums":
+            try:
+                v = ast.literal_eval(kw.value)
+            except (ValueError, SyntaxError):
+                continue
+            nums.extend([v] if isinstance(v, int) else list(v))
+        elif kw.arg == "static_argnames":
+            try:
+                v = ast.literal_eval(kw.value)
+            except (ValueError, SyntaxError):
+                continue
+            names.extend([v] if isinstance(v, str) else list(v))
+    return nums, names
+
+
+def _float_annotated(arg: ast.arg, default: ast.expr | None) -> bool:
+    ann = arg.annotation
+    if ann is not None and final_attr(ann) == "float":
+        return True
+    return (
+        default is not None
+        and isinstance(default, ast.Constant)
+        and isinstance(default.value, float)
+    )
+
+
+def _check_float_static(
+    fn, nums: list[int], names: list[str], path: str, lineno: int
+) -> list[Diagnostic]:
+    diags: list[Diagnostic] = []
+    args = list(fn.args.posonlyargs) + list(fn.args.args)
+    defaults = fn.args.defaults
+    pad = [None] * (len(args) - len(defaults))
+    arg_defaults = pad + list(defaults)
+    kwonly = list(zip(fn.args.kwonlyargs, fn.args.kw_defaults))
+    flagged: set[str] = set()
+    for i in nums:
+        if 0 <= i < len(args) and _float_annotated(args[i], arg_defaults[i]):
+            flagged.add(args[i].arg)
+    for name in names:
+        for a, d in zip(args, arg_defaults):
+            if a.arg == name and _float_annotated(a, d):
+                flagged.add(name)
+        for a, d in kwonly:
+            if a.arg == name and _float_annotated(a, d):
+                flagged.add(name)
+    for name in sorted(flagged):
+        diags.append(
+            Diagnostic(
+                path,
+                lineno,
+                "REP402",
+                f"jit keyed on Python float `{name}` via static marker; "
+                "every distinct value recompiles — pass it as a traced "
+                "scalar or fold it into a hashable config",
+            )
+        )
+    return diags
+
+
+def check(tree: ast.AST, source: str, path: str) -> list[Diagnostic]:
+    diags: list[Diagnostic] = []
+    functions: dict[str, ast.AST] = {}
+    for node in ast.walk(tree):
+        if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            functions[node.name] = node
+
+    # REP401: jitted inner functions capturing enclosing parameters.
+    for outer in ast.walk(tree):
+        if not isinstance(outer, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            continue
+        jitted = _jitted_inner_functions(outer)
+        if not jitted:
+            continue
+        outer_params = {
+            p for p in _param_names(outer) if not _is_static_name(p)
+        }
+        inner_defs = {
+            item.name: item
+            for item in ast.walk(outer)
+            if isinstance(item, (ast.FunctionDef, ast.AsyncFunctionDef))
+            and item is not outer
+        }
+        for name, call in jitted.items():
+            inner = inner_defs.get(name)
+            if inner is None:
+                continue
+            inner_locals = set(_param_names(inner))
+            for sub in ast.walk(inner):
+                if isinstance(sub, (ast.Assign, ast.AugAssign, ast.AnnAssign)):
+                    targets = (
+                        sub.targets
+                        if isinstance(sub, ast.Assign)
+                        else [sub.target]
+                    )
+                    for t in targets:
+                        for n in ast.walk(t):
+                            if isinstance(n, ast.Name):
+                                inner_locals.add(n.id)
+            captured = sorted(
+                {
+                    n.id
+                    for n in ast.walk(inner)
+                    if isinstance(n, ast.Name)
+                    and isinstance(n.ctx, ast.Load)
+                    and n.id in outer_params
+                    and n.id not in inner_locals
+                }
+            )
+            if captured:
+                diags.append(
+                    Diagnostic(
+                        path,
+                        inner.lineno,
+                        "REP401",
+                        f"jitted `{name}` closes over data parameter(s) "
+                        f"{', '.join(captured)} of `{outer.name}`; pass "
+                        "them as arguments so the jit cache keys on shape, "
+                        "not identity (PR-5 run-caching bug class)",
+                    )
+                )
+
+    # REP402: float-keyed jit signatures (call sites and decorators).
+    for node in ast.walk(tree):
+        if isinstance(node, ast.Call) and _is_jit_call(node):
+            nums, names = _jit_static_markers(node)
+            if not nums and not names:
+                continue
+            target = None
+            for arg in list(node.args) + [kw.value for kw in node.keywords]:
+                if isinstance(arg, ast.Name) and arg.id in functions:
+                    target = functions[arg.id]
+                    break
+            if target is not None:
+                diags.extend(
+                    _check_float_static(
+                        target, nums, names, path, node.lineno
+                    )
+                )
+        if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            for dec in node.decorator_list:
+                if isinstance(dec, ast.Call) and (
+                    _is_jit_call(dec)
+                    or final_attr(dec.func) == "partial"
+                    and any(
+                        final_attr(a) in {"jit", "pjit"} for a in dec.args
+                    )
+                ):
+                    nums, names = _jit_static_markers(dec)
+                    if nums or names:
+                        diags.extend(
+                            _check_float_static(
+                                node, nums, names, path, dec.lineno
+                            )
+                        )
+    return diags

@@ -1,0 +1,495 @@
+"""REP101: Python control flow on JAX values inside traced functions.
+
+A function is considered *traced* when it is
+
+* decorated with ``jax.jit`` / ``pjit`` / ``shard_map`` (including
+  ``functools.partial`` wrappers of those),
+* passed by name into a tracing entry point (``jax.jit``, ``lax.scan``,
+  ``lax.while_loop``, ``lax.cond``, ``lax.fori_loop``, ``lax.switch``,
+  ``jax.vmap``, ``jax.pmap``, ``shard_map``, ``jax.grad``, ``checkpoint``),
+* lexically nested inside a traced function, or
+* called by simple name from a traced function in the same module
+  (transitive closure).
+
+Inside a traced function we taint its parameters (minus conventionally
+static names: ``self``, config objects, ``*_fn`` callables) plus locals
+assigned from tainted or ``jnp.``/``jax.``/``lax.`` expressions, then flag:
+
+* ``if``/``while`` whose test involves a tainted value (``x is None`` and
+  ``isinstance`` checks are exempt — they never inspect the traced value),
+* ``bool()`` / ``float()`` / ``int()`` applied to a tainted value,
+* ``.item()`` on a tainted value.
+
+These are exactly the constructs that either raise ``TracerBoolConversion``
+at trace time or — worse — silently bake one branch into the compiled
+program, breaking the async/reference parity claims.
+"""
+
+from __future__ import annotations
+
+import ast
+
+from repro.analysis.base import Diagnostic, final_attr
+
+# Call targets whose function-valued arguments become traced.
+TRACE_ENTRY_POINTS = {
+    "jit",
+    "pjit",
+    "shard_map",
+    "scan",
+    "while_loop",
+    "fori_loop",
+    "cond",
+    "switch",
+    "associative_scan",
+    "vmap",
+    "pmap",
+    "grad",
+    "value_and_grad",
+    "checkpoint",
+    "remat",
+    "custom_jvp",
+    "custom_vjp",
+}
+
+# Parameter names that by repo convention hold static Python config, not
+# traced arrays.
+_STATIC_PARAM_NAMES = {"self", "cls", "fn", "f", "body_fn", "cond_fn"}
+_STATIC_PARAM_SUFFIXES = ("_fn", "cfg", "config", "_opts", "_options")
+
+# Module prefixes whose call results are treated as JAX values.
+_JAX_VALUE_ROOTS = {"jnp", "jax", "lax", "np_like"}
+
+# Array metadata that is concrete Python data at trace time.
+_STATIC_ATTRS = {"shape", "ndim", "dtype", "size", "itemsize", "sharding"}
+
+# Annotations marking a parameter as a static Python scalar: branching on
+# these at trace time is concrete, not a tracer hazard.
+_SCALAR_ANNOTATIONS = {"int", "bool", "str", "bytes"}
+
+
+def _is_static_param(name: str) -> bool:
+    return name in _STATIC_PARAM_NAMES or name.endswith(_STATIC_PARAM_SUFFIXES)
+
+
+def _annotation_is_scalar(ann: ast.expr | None) -> bool:
+    """True for ``int``/``bool``/``str`` annotations, incl. ``| None`` and
+    ``Optional[...]`` forms and string annotations."""
+    if ann is None:
+        return False
+    if isinstance(ann, ast.Constant) and isinstance(ann.value, str):
+        try:
+            ann = ast.parse(ann.value, mode="eval").body
+        except SyntaxError:
+            return False
+    if isinstance(ann, ast.Name):
+        return ann.id in _SCALAR_ANNOTATIONS
+    if isinstance(ann, ast.BinOp) and isinstance(ann.op, ast.BitOr):
+        return _annotation_is_scalar(ann.left) or _annotation_is_scalar(
+            ann.right
+        )
+    if isinstance(ann, ast.Subscript) and final_attr(ann.value) == "Optional":
+        return _annotation_is_scalar(ann.slice)
+    return False
+
+
+def default_param_taint(fn) -> set[str]:
+    """Params treated as traced values under the root rule: everything but
+    conventionally-static names, static_argnums/argnames markings, and
+    Python-scalar annotations."""
+    tainted: set[str] = set()
+    static_marked = _static_marked_params(fn)
+    args = fn.args
+    for a in (
+        list(args.posonlyargs)
+        + list(args.args)
+        + list(args.kwonlyargs)
+        + ([args.vararg] if args.vararg else [])
+    ):
+        if (
+            _is_static_param(a.arg)
+            or a.arg in static_marked
+            or _annotation_is_scalar(a.annotation)
+        ):
+            continue
+        tainted.add(a.arg)
+    return tainted
+
+
+def _static_marked_params(fn) -> set[str]:
+    """Params named by static_argnums/static_argnames in jit decorators."""
+    out: set[str] = set()
+    positional = [
+        a.arg for a in list(fn.args.posonlyargs) + list(fn.args.args)
+    ]
+    for dec in fn.decorator_list:
+        if not isinstance(dec, ast.Call):
+            continue
+        fname = final_attr(dec.func)
+        is_jit = fname in {"jit", "pjit"} or (
+            fname == "partial"
+            and any(final_attr(a) in {"jit", "pjit"} for a in dec.args)
+        )
+        if not is_jit:
+            continue
+        for kw in dec.keywords:
+            if kw.arg not in {"static_argnums", "static_argnames"}:
+                continue
+            try:
+                v = ast.literal_eval(kw.value)
+            except (ValueError, SyntaxError):
+                continue
+            items = [v] if isinstance(v, (int, str)) else list(v)
+            for item in items:
+                if isinstance(item, int) and 0 <= item < len(positional):
+                    out.add(positional[item])
+                elif isinstance(item, str):
+                    out.add(item)
+    return out
+
+
+def _decorator_traces(dec: ast.expr) -> bool:
+    name = final_attr(dec)
+    if name in {"jit", "pjit", "shard_map"}:
+        return True
+    if isinstance(dec, ast.Call):
+        fname = final_attr(dec.func)
+        if fname in {"jit", "pjit", "shard_map"}:
+            return True
+        if fname == "partial":
+            return any(
+                final_attr(a) in {"jit", "pjit", "shard_map"} for a in dec.args
+            )
+    return False
+
+
+class _FunctionIndex(ast.NodeVisitor):
+    """Collect every function in the module, its calls, and trace roots."""
+
+    def __init__(self) -> None:
+        self.functions: dict[str, list[ast.AST]] = {}
+        self.calls: dict[ast.AST, set[str]] = {}
+        self.roots: set[ast.AST] = set()
+        self.nesting: dict[ast.AST, ast.AST | None] = {}
+        self._stack: list[ast.AST] = []
+
+    def _handle_function(self, node) -> None:
+        self.functions.setdefault(node.name, []).append(node)
+        self.nesting[node] = self._stack[-1] if self._stack else None
+        self.calls.setdefault(node, set())
+        if any(_decorator_traces(d) for d in node.decorator_list):
+            self.roots.add(node)
+        self._stack.append(node)
+        self.generic_visit(node)
+        self._stack.pop()
+
+    visit_FunctionDef = _handle_function
+    visit_AsyncFunctionDef = _handle_function
+
+    def visit_Lambda(self, node: ast.Lambda) -> None:
+        self.nesting[node] = self._stack[-1] if self._stack else None
+        self.generic_visit(node)
+
+    def visit_Call(self, node: ast.Call) -> None:
+        if self._stack:
+            fname = final_attr(node.func)
+            if fname is not None and not isinstance(node.func, ast.Attribute):
+                self.calls[self._stack[-1]].add(fname)
+        if final_attr(node.func) in TRACE_ENTRY_POINTS:
+            for arg in list(node.args) + [kw.value for kw in node.keywords]:
+                if isinstance(arg, ast.Name):
+                    self._mark_name(arg.id)
+                elif isinstance(arg, (ast.Lambda, ast.FunctionDef)):
+                    self.roots.add(arg)
+        self.generic_visit(node)
+
+    def _mark_name(self, name: str) -> None:
+        for fn in self.functions.get(name, []):
+            self.roots.add(fn)
+        self._pending = getattr(self, "_pending", set())
+        self._pending.add(name)
+
+    def traced_closure(self) -> set[ast.AST]:
+        """Roots + lexical children + same-module callees, to fixpoint."""
+        # Late marks: a function defined after its jit call site.
+        for name in getattr(self, "_pending", set()):
+            for fn in self.functions.get(name, []):
+                self.roots.add(fn)
+        traced = set(self.roots)
+        changed = True
+        while changed:
+            changed = False
+            for fn, parent in self.nesting.items():
+                if parent in traced and fn not in traced:
+                    traced.add(fn)
+                    changed = True
+            for fn in list(traced):
+                for callee_name in self.calls.get(fn, ()):
+                    for callee in self.functions.get(callee_name, []):
+                        if callee not in traced:
+                            traced.add(callee)
+                            changed = True
+        return traced
+
+
+class _TaintChecker(ast.NodeVisitor):
+    """Walk one traced function's body (skipping nested defs) for hazards."""
+
+    def __init__(
+        self,
+        fn,
+        path: str,
+        initial_taint: set[str] | None = None,
+        callee_names: set[str] | None = None,
+    ) -> None:
+        self.fn = fn
+        self.path = path
+        self.diags: list[Diagnostic] = []
+        self.tainted: set[str] = (
+            set(initial_taint)
+            if initial_taint is not None
+            else default_param_taint(fn)
+        )
+        # Observed taint of arguments at same-module call sites:
+        # {callee name: {param name}} — drives interprocedural taint.
+        self.callee_names = callee_names or set()
+        self.call_arg_taint: dict[str, set[int | str]] = {}
+
+    # -- taint bookkeeping ------------------------------------------------
+    def _expr_tainted(self, node: ast.AST) -> bool:
+        """Recursive taint evaluation; array metadata (``.shape`` etc.) is
+        concrete at trace time and breaks the taint chain."""
+        if isinstance(node, ast.Name):
+            return node.id in self.tainted
+        if isinstance(node, ast.Attribute):
+            if node.attr in _STATIC_ATTRS:
+                return False
+            return self._expr_tainted(node.value)
+        if isinstance(node, ast.Call):
+            root = node.func
+            while isinstance(root, ast.Attribute):
+                root = root.value
+            if isinstance(root, ast.Name) and root.id in _JAX_VALUE_ROOTS:
+                return True
+            return any(
+                self._expr_tainted(c)
+                for c in ([node.func] if isinstance(node.func, ast.Attribute)
+                          else [])
+                + list(node.args)
+                + [kw.value for kw in node.keywords]
+            )
+        if isinstance(node, ast.Constant):
+            return False
+        if isinstance(node, (ast.Lambda, ast.FunctionDef)):
+            return False
+        if isinstance(node, ast.Subscript):
+            # Indexing taints only through the container: ``x.shape[axis]``
+            # is static even when ``axis`` is a runtime value.
+            return self._expr_tainted(node.value)
+        return any(
+            self._expr_tainted(c)
+            for c in ast.iter_child_nodes(node)
+            if isinstance(c, ast.expr)
+        )
+
+    def _assign_targets(self, target: ast.AST, tainted: bool) -> None:
+        if isinstance(target, ast.Name):
+            if tainted:
+                self.tainted.add(target.id)
+            else:
+                self.tainted.discard(target.id)
+        elif isinstance(target, (ast.Tuple, ast.List)):
+            for elt in target.elts:
+                self._assign_targets(elt, tainted)
+
+    def visit_Assign(self, node: ast.Assign) -> None:
+        tainted = self._expr_tainted(node.value)
+        for t in node.targets:
+            self._assign_targets(t, tainted)
+        self.visit(node.value)
+
+    def visit_AnnAssign(self, node: ast.AnnAssign) -> None:
+        if node.value is not None:
+            self._assign_targets(node.target, self._expr_tainted(node.value))
+            self.visit(node.value)
+
+    # -- skip nested functions (they are checked on their own) ------------
+    def visit_FunctionDef(self, node) -> None:  # noqa: D102
+        if node is not self.fn:
+            return
+        self.generic_visit(node)
+
+    visit_AsyncFunctionDef = visit_FunctionDef
+
+    def visit_Lambda(self, node: ast.Lambda) -> None:
+        return
+
+    # -- hazard sites -----------------------------------------------------
+    @staticmethod
+    def _test_is_exempt(test: ast.AST) -> bool:
+        """`x is None` / `isinstance(x, T)` never inspect traced values."""
+        if isinstance(test, ast.Compare) and all(
+            isinstance(op, (ast.Is, ast.IsNot)) for op in test.ops
+        ):
+            return True
+        if isinstance(test, ast.Call) and final_attr(test.func) in {
+            "isinstance",
+            "callable",
+            "hasattr",
+        }:
+            return True
+        if isinstance(test, ast.BoolOp):
+            return all(_TaintChecker._test_is_exempt(v) for v in test.values)
+        if isinstance(test, ast.UnaryOp) and isinstance(test.op, ast.Not):
+            return _TaintChecker._test_is_exempt(test.operand)
+        return False
+
+    def _check_test(self, node, kind: str) -> None:
+        test = node.test
+        if self._test_is_exempt(test):
+            return
+        if self._expr_tainted(test):
+            self.diags.append(
+                Diagnostic(
+                    self.path,
+                    node.lineno,
+                    "REP101",
+                    f"Python `{kind}` on a JAX value inside traced function "
+                    f"`{self.fn.name}`; use lax.cond/jnp.where "
+                    "(silently bakes one branch into the compiled program)",
+                )
+            )
+
+    def visit_If(self, node: ast.If) -> None:
+        self._check_test(node, "if")
+        self.generic_visit(node)
+
+    def visit_While(self, node: ast.While) -> None:
+        self._check_test(node, "while")
+        self.generic_visit(node)
+
+    def visit_Call(self, node: ast.Call) -> None:
+        fname = final_attr(node.func)
+        if isinstance(node.func, ast.Name) and fname in self.callee_names:
+            slots = self.call_arg_taint.setdefault(fname, set())
+            for i, arg in enumerate(node.args):
+                if self._expr_tainted(arg):
+                    slots.add(i)
+            for kw in node.keywords:
+                if kw.arg is not None and self._expr_tainted(kw.value):
+                    slots.add(kw.arg)
+        if (
+            isinstance(node.func, ast.Name)
+            and fname in {"bool", "float", "int"}
+            and node.args
+            and self._expr_tainted(node.args[0])
+        ):
+            self.diags.append(
+                Diagnostic(
+                    self.path,
+                    node.lineno,
+                    "REP101",
+                    f"`{fname}()` on a JAX value inside traced function "
+                    f"`{self.fn.name}` forces concretization at trace time",
+                )
+            )
+        if (
+            isinstance(node.func, ast.Attribute)
+            and node.func.attr == "item"
+            and self._expr_tainted(node.func.value)
+        ):
+            self.diags.append(
+                Diagnostic(
+                    self.path,
+                    node.lineno,
+                    "REP101",
+                    f"`.item()` on a JAX value inside traced function "
+                    f"`{self.fn.name}` forces a device sync/concretization",
+                )
+            )
+        self.generic_visit(node)
+
+
+def _slots_to_params(fn, slots: set[int | str]) -> set[str]:
+    """Map tainted call-site argument slots onto parameter names, still
+    honouring the static-name/annotation exemptions."""
+    positional = [
+        a.arg for a in list(fn.args.posonlyargs) + list(fn.args.args)
+    ]
+    by_name = {
+        a.arg: a
+        for a in list(fn.args.posonlyargs)
+        + list(fn.args.args)
+        + list(fn.args.kwonlyargs)
+    }
+    out: set[str] = set()
+    for slot in slots:
+        name = (
+            positional[slot]
+            if isinstance(slot, int) and 0 <= slot < len(positional)
+            else slot
+            if isinstance(slot, str)
+            else None
+        )
+        if name is None or name not in by_name:
+            continue
+        a = by_name[name]
+        if _is_static_param(name) or _annotation_is_scalar(a.annotation):
+            continue
+        out.add(name)
+    return out
+
+
+def check(tree: ast.AST, source: str, path: str) -> list[Diagnostic]:
+    index = _FunctionIndex()
+    index.visit(tree)
+    traced = {
+        fn
+        for fn in index.traced_closure()
+        if isinstance(fn, (ast.FunctionDef, ast.AsyncFunctionDef))
+    }
+    # Root-like functions (jit-decorated, passed into a tracing entry
+    # point, or nested inside a traced function) taint their params by the
+    # default rule. Functions traced only because a traced function calls
+    # them get their param taint from what the call sites actually pass —
+    # a static block size stays static across the call.
+    root_like = {
+        fn
+        for fn in traced
+        if fn in index.roots or index.nesting.get(fn) in traced
+    }
+    call_only = traced - root_like
+    taint_map: dict[ast.AST, set[str]] = {
+        fn: (default_param_taint(fn) if fn in root_like else set())
+        for fn in traced
+    }
+    callee_names = {
+        name for name, fns in index.functions.items()
+        if any(fn in call_only for fn in fns)
+    }
+    for _ in range(4):  # fixpoint over call-derived taint (small depth)
+        changed = False
+        for fn in traced:
+            checker = _TaintChecker(
+                fn, path, initial_taint=taint_map[fn],
+                callee_names=callee_names,
+            )
+            checker.generic_visit(fn)
+            for callee_name, slots in checker.call_arg_taint.items():
+                for callee in index.functions.get(callee_name, []):
+                    if callee not in call_only:
+                        continue
+                    derived = _slots_to_params(callee, slots)
+                    if not derived <= taint_map[callee]:
+                        taint_map[callee] |= derived
+                        changed = True
+        if not changed:
+            break
+    diags: list[Diagnostic] = []
+    for fn in traced:
+        checker = _TaintChecker(
+            fn, path, initial_taint=taint_map[fn], callee_names=set()
+        )
+        checker.generic_visit(fn)
+        diags.extend(checker.diags)
+    return diags

@@ -1,5 +1,6 @@
 """Core AFM library — the paper's contribution as composable JAX modules."""
-from repro.core.afm import AFMConfig, AFMState, init, train, train_step, train_step_batch
+from repro.core.afm import (AFMConfig, AFMState, init, train, train_step,
+                            train_step_batch)
 from repro.core.som import SOMConfig, SOMState
 
 __all__ = [

@@ -107,7 +107,8 @@ class StepAux(NamedTuple):
     greedy_steps: jnp.ndarray  # (B,) int32
 
 
-def init(key: jax.Array, cfg: AFMConfig, samples: jnp.ndarray | None = None) -> AFMState:
+def init(key: jax.Array, cfg: AFMConfig,
+         samples: jnp.ndarray | None = None) -> AFMState:
     """Initialise weights (uniform in sample bounding box, or N(0, 0.1))."""
     kw, kf = jax.random.split(key)
     n = cfg.n_units
@@ -161,7 +162,8 @@ def adapt_gmu(state: AFMState, samples: jnp.ndarray, gmu: jnp.ndarray,
     counts = jnp.zeros((n,), jnp.float32).at[gmu].add(ones)
     target_sum = jnp.zeros((n, cfg.dim), jnp.float32).at[gmu].add(samples)
     hit = counts > 0
-    mean_target = jnp.where(hit[:, None], target_sum / jnp.maximum(counts, 1.0)[:, None], state.w)
+    mean = target_sum / jnp.maximum(counts, 1.0)[:, None]
+    mean_target = jnp.where(hit[:, None], mean, state.w)
     return state.w + cfg.l_s * (mean_target - state.w), counts
 
 

@@ -57,7 +57,8 @@ def _halo_rows(x, axis_name, n_shards):
     """
     me = jax.lax.axis_index(axis_name)
     up = [(i, (i - 1) % n_shards) for i in range(n_shards)]     # send my top row up
-    dn = [(i, (i + 1) % n_shards) for i in range(n_shards)]     # send my bottom row down
+    # send my bottom row down
+    dn = [(i, (i + 1) % n_shards) for i in range(n_shards)]
     from_below = jax.lax.ppermute(x[:1], axis_name, up)[0]      # row that sits below me
     from_above = jax.lax.ppermute(x[-1:], axis_name, dn)[0]     # row that sits above me
     zero = jnp.zeros_like(from_above)

@@ -741,7 +741,8 @@ def run_events(state: AFMState, samples: jnp.ndarray, step_keys: jnp.ndarray,
                cfg: AFMConfig, ecfg: EventConfig = EventConfig(), *,
                search: Callable = afm_lib.search_heuristic,
                p_fn: Callable = _default_p, l_c_fn: Callable = _default_l_c,
-               lat_key: jax.Array | None = None, donate: bool = False,
+               lat_key: jax.Array | None = None, lat_seed: int = 0,
+               donate: bool = False,
                ) -> tuple[AFMState, afm_lib.StepAux, EventReport]:
     """Simulate ``E`` sample-delivery events (plus their cascades) to
     quiescence: the queue drains completely before returning, so the result
@@ -764,6 +765,9 @@ def run_events(state: AFMState, samples: jnp.ndarray, step_keys: jnp.ndarray,
                  parity tests pin p = 1 through these.
       lat_key:   PRNG key for the exponential latency stream (ignored by
                  the zero/constant models, which consume no extra bits).
+      lat_seed:  seed for the latency stream when ``lat_key`` is not given;
+                 the default (0) reproduces the historical golden
+                 fingerprints. Ignored when ``lat_key`` is passed.
       donate:    donate the input state's buffers to the jitted run — only
                  safe when the caller owns them and drops the old state
                  (no-op on CPU, saves the dense-state copy on accelerators).
@@ -780,7 +784,7 @@ def run_events(state: AFMState, samples: jnp.ndarray, step_keys: jnp.ndarray,
                 zero, zero, zero, zero, jnp.float32(0),
                 jnp.zeros((n,), jnp.float32), jnp.zeros((n,), jnp.int32))
     if lat_key is None:
-        lat_key = jax.random.PRNGKey(0)
+        lat_key = jax.random.PRNGKey(lat_seed)
     fn = _compiled_runner(cfg, ecfg, e, search, p_fn, l_c_fn, bool(donate))
     return fn(state, jnp.asarray(samples, jnp.float32),
               jnp.asarray(step_keys, jnp.uint32), lat_key)

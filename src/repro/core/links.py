@@ -84,7 +84,8 @@ def _ring_point(key: jax.Array, r: jnp.ndarray, c: jnp.ndarray, d: jnp.ndarray):
     return r + dr, c + dc
 
 
-def far_links_ring(key: jax.Array, side: int, phi: int, rounds: int = 64) -> jnp.ndarray:
+def far_links_ring(key: jax.Array, side: int, phi: int,
+                   rounds: int = 64) -> jnp.ndarray:
     """(N, phi) far-link table via exact rejection sampling; O(N * phi * rounds).
 
     P(d) ∝ (ring size 4d) * d^-1 = const  =>  d ~ Uniform[1, 2(side-1)];
@@ -123,7 +124,8 @@ def far_links_ring(key: jax.Array, side: int, phi: int, rounds: int = 64) -> jnp
 
 
 @functools.partial(jax.jit, static_argnums=(1, 2, 3))
-def far_links(key: jax.Array, side: int, phi: int, exact_threshold: int = 10_000) -> jnp.ndarray:
+def far_links(key: jax.Array, side: int, phi: int,
+              exact_threshold: int = 10_000) -> jnp.ndarray:
     """Dispatch: categorical sampler for small maps, ring sampler for large."""
     if side * side <= exact_threshold:
         return far_links_categorical(key, side, phi)

@@ -25,7 +25,8 @@ def cascade_probability(i, i_max: int, n_units: int, c_m: float, c_d: float):
     frac = jnp.asarray(i, jnp.float32) / jnp.float32(i_max)
     base = 1.0 - 1.0 / jnp.sqrt(jnp.float32(c_m * n_units))
     # Guard the power at i = i_max (0^x) — clamp the base of the exponent.
-    decay = jnp.power(jnp.clip(1.0 - frac, 1e-12, 1.0), jnp.float32(c_d) / jnp.float32(n_units))
+    decay = jnp.power(jnp.clip(1.0 - frac, 1e-12, 1.0),
+                      jnp.float32(c_d) / jnp.float32(n_units))
     return base * decay
 
 

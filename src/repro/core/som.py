@@ -45,7 +45,8 @@ class SOMState(NamedTuple):
     i: jnp.ndarray   # () int32
 
 
-def init(key: jax.Array, cfg: SOMConfig, samples: jnp.ndarray | None = None) -> SOMState:
+def init(key: jax.Array, cfg: SOMConfig,
+         samples: jnp.ndarray | None = None) -> SOMState:
     if samples is not None:
         lo, hi = samples.min(axis=0), samples.max(axis=0)
         w = jax.random.uniform(key, (cfg.n_units, cfg.dim), minval=lo, maxval=hi)

@@ -24,7 +24,8 @@ def _read_idx(path: str) -> np.ndarray:
         magic = struct.unpack(">I", f.read(4))[0]
         ndim = magic & 0xFF
         dtype = {0x08: np.uint8, 0x09: np.int8, 0x0B: np.int16,
-                 0x0C: np.int32, 0x0D: np.float32, 0x0E: np.float64}[(magic >> 8) & 0xFF]
+                 0x0C: np.int32, 0x0D: np.float32,
+                 0x0E: np.float64}[(magic >> 8) & 0xFF]
         shape = struct.unpack(">" + "I" * ndim, f.read(4 * ndim))
         return np.frombuffer(f.read(), dtype=dtype.newbyteorder(">")).reshape(shape)
 

@@ -46,7 +46,8 @@ def _class_mixture(key, n, spec: DatasetSpec, modes_per_class: int = 3,
     k_proj, k_mu, k_cls, k_mode, k_eps, k_scale = jax.random.split(key, 6)
     m = spec.classes * modes_per_class
     # Shared projection manifold -> feature space; per-mode centre + scale.
-    proj = jax.random.normal(k_proj, (manifold_dim, spec.features)) / jnp.sqrt(manifold_dim)
+    proj = (jax.random.normal(k_proj, (manifold_dim, spec.features))
+            / jnp.sqrt(manifold_dim))
     mu = 2.0 * jax.random.normal(k_mu, (m, manifold_dim))
     scale = 0.25 + 0.5 * jax.random.uniform(k_scale, (m, manifold_dim))
     cls = jax.random.randint(k_cls, (n,), 0, spec.classes)

@@ -202,6 +202,9 @@ def main():
                     help="async backend: message latency model")
     ap.add_argument("--delay", type=float, default=0.0,
                     help="async backend: latency scale (sample periods)")
+    ap.add_argument("--lat-seed", type=int, default=0,
+                    help="async backend: seed of the exponential-latency "
+                         "stream (independent of --seed)")
     ap.add_argument("--engine", default="auto", choices=("auto", "event"),
                     help="async backend: 'auto' fuses zero-latency chunks "
                          "into the reference scan, 'event' always runs the "
@@ -224,10 +227,11 @@ def main():
     opts: dict = {}
     if args.backend == "async":
         opts.update(latency=args.latency, delay=args.delay,
-                    engine=args.engine)
-    elif args.latency != "zero" or args.delay or args.engine != "auto":
-        raise SystemExit("--latency/--delay/--engine only apply to the "
-                         "async backend")
+                    engine=args.engine, lat_seed=args.lat_seed)
+    elif (args.latency != "zero" or args.delay or args.engine != "auto"
+          or args.lat_seed):
+        raise SystemExit("--latency/--delay/--engine/--lat-seed only apply "
+                         "to the async backend")
     if args.search:
         if args.backend == "sharded":
             raise SystemExit("--search is not supported by the sharded "

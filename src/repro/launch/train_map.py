@@ -59,9 +59,11 @@ def build_backend_options(args) -> dict:
             raise SystemExit("--interpret only applies to the pallas backend")
         opts.update(interpret=True, use_pallas=True)
     if args.backend == "async":
-        opts.update(latency=args.latency, delay=args.delay)
-    elif args.latency != "zero" or args.delay:
-        raise SystemExit("--latency/--delay only apply to the async backend")
+        opts.update(latency=args.latency, delay=args.delay,
+                    lat_seed=args.lat_seed)
+    elif args.latency != "zero" or args.delay or args.lat_seed:
+        raise SystemExit("--latency/--delay/--lat-seed only apply to the "
+                         "async backend")
     if args.search:
         opts["search"] = args.search
     return opts
@@ -88,6 +90,9 @@ def main():
                     help="async backend: message latency model")
     ap.add_argument("--delay", type=float, default=0.0,
                     help="async backend: latency scale in sample periods")
+    ap.add_argument("--lat-seed", type=int, default=0,
+                    help="async backend: seed of the exponential-latency "
+                         "stream (independent of --seed)")
     ap.add_argument("--search", default=None,
                     choices=(None, "heuristic", "exact"),
                     help="override the backend's search stage")
@@ -129,8 +134,10 @@ def main():
 
     print(f"quantization error  Q: {tm.quantization_error(xte):.4f}")
     print(f"topological error   T: {tm.topographic_error(xte):.4f}")
+    # eval stream derived from (not equal to) the training seed's key
+    eval_key = jax.random.fold_in(jax.random.PRNGKey(args.seed), 1)
     print(f"search error        F: "
-          f"{tm.search_error(xte[:256], key=jax.random.PRNGKey(1)):.4f}")
+          f"{tm.search_error(xte[:256], key=eval_key):.4f}")
     pred = tm.predict(xte)
     acc = float((pred == yte).mean())
     prec, rec = precision_recall(pred, yte, spec.classes)

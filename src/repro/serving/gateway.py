@@ -46,6 +46,16 @@ from repro.serving.maps import DEFAULT_BUCKETS, MapService, postprocess
 
 _KINDS = ("transform", "predict", "quantization_errors")
 
+#: Lock-discipline declarations checked by ``repro.analysis`` (REP301).
+#: One condition guards the whole gateway: registry, queues, stats, and
+#: the closed flag all change together under ``_cond``.
+GUARDED_BY = {
+    "MapGateway": {"_services": "_cond", "_versions": "_cond",
+                   "_open_opts": "_cond", "_map_names": "_cond",
+                   "_queues": "_cond", "_closed": "_cond",
+                   "stats": "_cond"},
+}
+
 
 @dataclasses.dataclass
 class GatewayStats:
@@ -286,7 +296,7 @@ class MapGateway:
     # ----------------------------------------------------------- dispatcher
 
     def _check_open(self):
-        if self._closed:
+        if self._closed:  # lint: unlocked-ok(every caller holds _cond)
             raise RuntimeError("gateway is closed")
 
     def _loop(self):
@@ -348,7 +358,7 @@ class MapGateway:
         service objects (a shape-changing ``reload`` landed between them)
         never merge into one dispatch.
         """
-        queue = self._queues[name]
+        queue = self._queues[name]  # lint: unlocked-ok(_loop holds _cond)
         taken, total = [], 0
         while queue and (not taken
                          or (total + queue[0].size <= self.coalesce_max
@@ -438,7 +448,8 @@ class MapGateway:
         self.close()
 
     def __repr__(self):
+        n = self.stats.dispatches  # lint: unlocked-ok(stale ok in repr)
         return (f"MapGateway(maps={self.names()}, "
                 f"coalesce_max={self.coalesce_max}, "
                 f"max_delay={self.max_delay}, "
-                f"dispatches={self.stats.dispatches})")
+                f"dispatches={n})")

@@ -51,6 +51,22 @@ from repro.kernels.bmu import ops as bmu_ops
 #: waste at ~8x worst case while keeping the compile count at four.
 DEFAULT_BUCKETS = (8, 64, 512, 4096)
 
+#: Lock-discipline declarations checked by ``repro.analysis`` (REP301):
+#: every ``self.<attr>`` access outside ``with self.<lock>`` is flagged
+#: unless annotated ``# lint: unlocked-ok(reason)``. ``__init__`` is exempt
+#: (construction happens-before sharing).
+GUARDED_BY = {
+    "CompileCache": {"_fns": "_lock", "_claimed": "_lock",
+                     "keys": "_lock", "trace_count": "_lock"},
+    "BmuEngine": {"trace_count": "_counter_lock",
+                  "padded": "_counter_lock"},
+    "LatencyHistogram": {"_counts": "_lock", "count": "_lock",
+                         "total_seconds": "_lock"},
+    "MapService": {"_state": "_lock", "_unit_labels": "_lock",
+                   "stats": "_lock", "_update_backend": "_update_lock",
+                   "_next_key": "_update_lock"},
+}
+
 
 class CompileCache:
     """Process-wide jit cache for the bucketed BMU search.
@@ -286,8 +302,9 @@ class LatencyHistogram:
     def summary(self, unit: float = 1e3) -> str:
         """One-line human summary (default unit: milliseconds)."""
         qs = self.quantiles()
+        n = self.count  # lint: unlocked-ok(single int read, display only)
         return (f"p50={qs['p50'] * unit:.2f} p95={qs['p95'] * unit:.2f} "
-                f"p99={qs['p99'] * unit:.2f} (n={self.count})")
+                f"p99={qs['p99'] * unit:.2f} (n={n})")
 
     def __repr__(self):
         return f"LatencyHistogram({self.summary()})"
@@ -551,12 +568,14 @@ class MapService:
         return aux
 
     def _backend(self):
-        if self._update_backend is None:
-            from repro.api import backends as backends_lib
-            self._update_backend = backends_lib.get_backend(
-                self._update_backend_name, self.cfg,
-                **self._update_backend_options)
-        return self._update_backend
+        # re-entrant: update() already holds _update_lock when it calls this
+        with self._update_lock:
+            if self._update_backend is None:
+                from repro.api import backends as backends_lib
+                self._update_backend = backends_lib.get_backend(
+                    self._update_backend_name, self.cfg,
+                    **self._update_backend_options)
+            return self._update_backend
 
     # ------------------------------------------------------------- plumbing
 
@@ -587,7 +606,9 @@ class MapService:
         return unit_labels
 
     def __repr__(self):
-        labelled = "labelled" if self._unit_labels is not None else "unlabelled"
+        labels = self._unit_labels  # lint: unlocked-ok(display-only read)
+        served = self.stats.samples  # lint: unlocked-ok(stale ok in repr)
+        labelled = "labelled" if labels is not None else "unlabelled"
         return (f"MapService(side={self.cfg.side}, dim={self.cfg.dim}, "
                 f"{labelled}, buckets={self.engine.buckets}, "
-                f"served={self.stats.samples})")
+                f"served={served})")

@@ -1,5 +1,4 @@
 """AFM end-to-end invariants on synthetic data."""
-import dataclasses
 
 import jax
 import jax.numpy as jnp
@@ -31,7 +30,8 @@ def test_counters_stay_below_theta_after_step(rng):
     xtr, _, _, _ = make_dataset("satimage", train_size=500, test_size=10)
     cfg = afm.AFMConfig(side=6, dim=36, i_max=400, batch=4, e_factor=0.5)
     state = afm.init(rng, cfg, xtr)
-    state2, _ = jax.jit(lambda s, k: afm.train(s, xtr, k, cfg, num_steps=50))(state, rng)
+    state2, _ = jax.jit(
+        lambda s, k: afm.train(s, xtr, k, cfg, num_steps=50))(state, rng)
     assert int(jnp.max(state2.c)) < cfg.theta
 
 

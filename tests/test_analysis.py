@@ -1,0 +1,430 @@
+"""repro.analysis: the static checkers (tracer, prng, locks, retrace),
+escape hatches, baseline round-trip, and the runtime companions
+(TraceGuard, LockOrderRecorder).
+
+Each checker is exercised against a known-bad fixture that MUST produce
+its diagnostic code and a known-good fixture (including every escape-hatch
+form) that MUST come back clean — so the checkers themselves are pinned
+against both false negatives and false positives.
+"""
+import textwrap
+import threading
+
+import pytest
+
+from repro.analysis import base as base_lib
+from repro.analysis import locks as locks_lib
+from repro.analysis import prng as prng_lib
+from repro.analysis import retrace as retrace_lib
+from repro.analysis import tracer as tracer_lib
+from repro.analysis.base import (Diagnostic, check_source, load_baseline,
+                                 subtract_baseline, write_baseline)
+from repro.analysis.runtime import LockOrderRecorder, TraceGuard
+
+LIB = "src/repro/core/fake.py"           # a "library" path for the checkers
+
+
+def _codes(checker, source, path=LIB):
+    return [d.code for d in check_source([checker.check],
+                                         textwrap.dedent(source), path)]
+
+
+# ----------------------------------------------------------------- tracer
+
+
+def test_tracer_flags_python_if_on_traced_value():
+    src = """
+    import jax
+
+    @jax.jit
+    def f(x):
+        if x > 0:
+            return x
+        return -x
+    """
+    assert _codes(tracer_lib, src) == ["REP101"]
+
+
+def test_tracer_flags_item_and_bool_in_scan_body():
+    src = """
+    import jax.numpy as jnp
+    from jax import lax
+
+    def run(xs):
+        def body(carry, x):
+            bad = x.item()
+            if bool(carry):
+                carry = carry + 1
+            return carry, x
+        return lax.scan(body, 0, xs)
+    """
+    codes = _codes(tracer_lib, src)
+    assert codes.count("REP101") >= 2
+
+
+def test_tracer_interprocedural_taint_via_call():
+    """A helper traced only through a call from a jitted fn inherits the
+    caller's argument taint."""
+    src = """
+    import jax
+
+    def helper(v):
+        while v < 3:
+            v = v + 1
+        return v
+
+    @jax.jit
+    def f(x):
+        return helper(x)
+    """
+    assert "REP101" in _codes(tracer_lib, src)
+
+
+def test_tracer_allows_static_and_shape_branches():
+    src = """
+    from functools import partial
+    import jax
+
+    @partial(jax.jit, static_argnums=(1,))
+    def f(x, n):
+        if n > 4:                      # static_argnums: fine
+            x = x * 2
+        if x.shape[0] == 0:            # shapes are static: fine
+            return x
+        if x is None:                  # identity test: fine
+            return x
+        return x
+
+    @jax.jit
+    def g(x, num: int = 3):
+        if num:                        # scalar-annotated: fine
+            x = x + 1
+        return x
+    """
+    assert _codes(tracer_lib, src) == []
+
+
+def test_tracer_escape_hatch():
+    src = """
+    import jax
+
+    @jax.jit
+    def f(x):
+        if x > 0:  # lint: tracer-ok(runs under io_callback)
+            return x
+        return -x
+    """
+    assert _codes(tracer_lib, src) == []
+
+
+# ------------------------------------------------------------------- prng
+
+
+def test_prng_flags_key_reuse():
+    src = """
+    import jax
+
+    def sample(key, shape):
+        a = jax.random.normal(key, shape)
+        b = jax.random.uniform(key, shape)
+        return a, b
+    """
+    assert _codes(prng_lib, src) == ["REP201"]
+
+
+def test_prng_split_and_fold_in_are_clean():
+    src = """
+    import jax
+
+    def sample(key, shape):
+        ka, kb = jax.random.split(key)
+        a = jax.random.normal(ka, shape)
+        b = jax.random.uniform(jax.random.fold_in(kb, 1), shape)
+        return a, b
+    """
+    assert _codes(prng_lib, src) == []
+
+
+def test_prng_exclusive_branches_are_not_reuse():
+    src = """
+    import jax
+
+    def sample(key, shape, gauss):
+        if gauss:
+            return jax.random.normal(key, shape)
+        else:
+            return jax.random.uniform(key, shape)
+    """
+    assert _codes(prng_lib, src) == []
+
+
+def test_prng_flags_hardcoded_key_in_library_code():
+    src = """
+    import jax
+
+    def init():
+        return jax.random.PRNGKey(0)
+    """
+    assert _codes(prng_lib, src) == ["REP202"]
+    # the same source in a test file is fine
+    assert _codes(prng_lib, src, path="tests/test_fake.py") == []
+
+
+def test_prng_escape_hatch():
+    src = """
+    import jax
+
+    def sample(key, shape):
+        a = jax.random.normal(key, shape)
+        b = jax.random.uniform(key, shape)  # lint: prng-ok(a/b correlated by design)
+        return a, b
+
+    def init():
+        return jax.random.PRNGKey(0)  # lint: prng-ok(fixed demo seed)
+    """
+    assert _codes(prng_lib, src) == []
+
+
+# ------------------------------------------------------------------ locks
+
+
+_LOCKS_FIXTURE = """
+import threading
+
+GUARDED_BY = {"Box": {"_items": "_lock", "count": "_lock"}}
+
+
+class Box:
+    def __init__(self):
+        self._lock = threading.Lock()
+        self._items = []               # __init__ is exempt
+        self.count = 0
+
+    def add(self, item):
+        with self._lock:
+            self._items.append(item)   # held: fine
+            self.count += 1
+
+    def peek(self):
+        return self._items[-1]         # NOT held: REP301
+"""
+
+
+def test_locks_flags_unguarded_access():
+    diags = check_source([locks_lib.check], textwrap.dedent(_LOCKS_FIXTURE),
+                         LIB)
+    assert [d.code for d in diags] == ["REP301"]
+    assert "_items" in diags[0].message and "_lock" in diags[0].message
+
+
+def test_locks_escape_hatch():
+    src = _LOCKS_FIXTURE.replace(
+        "return self._items[-1]         # NOT held: REP301",
+        "return self._items[-1]  # lint: unlocked-ok(stale read is fine)")
+    assert check_source([locks_lib.check], textwrap.dedent(src), LIB) == []
+
+
+# ---------------------------------------------------------------- retrace
+
+
+def test_retrace_flags_closure_capturing_array_arg():
+    src = """
+    import jax
+
+    def serve(w, xs):
+        def kernel(x):
+            return ((w - x) ** 2).sum(axis=1)   # w baked into the trace
+        fn = jax.jit(kernel)
+        return [fn(x) for x in xs]
+    """
+    assert _codes(retrace_lib, src) == ["REP401"]
+
+
+def test_retrace_flags_float_static_arg():
+    src = """
+    from functools import partial
+    import jax
+
+    @partial(jax.jit, static_argnums=(1,))
+    def step(x, lr: float):
+        return x - lr * x
+    """
+    assert _codes(retrace_lib, src) == ["REP402"]
+
+
+def test_retrace_good_closure_and_hatch():
+    src = """
+    import jax
+
+    def make_kernel(cfg):
+        def kernel(w, x):               # arrays are arguments: fine
+            return ((w - x) ** 2).sum(axis=1) * cfg.scale
+        return jax.jit(kernel)
+
+    def pinned(w):
+        def kernel(x):  # lint: retrace-ok(w constant for process lifetime)
+            return w + x
+        return jax.jit(kernel)
+    """
+    assert _codes(retrace_lib, src) == []
+
+
+# ------------------------------------------------- driver, hatches, baseline
+
+
+def test_syntax_error_yields_rep000_not_crash():
+    diags = check_source([tracer_lib.check], "def broken(:\n", LIB)
+    assert [d.code for d in diags] == ["REP000"]
+
+
+def test_hatch_must_sit_on_the_flagged_line():
+    src = """
+    import jax
+
+    # lint: tracer-ok(wrong line — must not silence the if below)
+    @jax.jit
+    def f(x):
+        if x > 0:
+            return x
+        return -x
+    """
+    assert _codes(tracer_lib, src) == ["REP101"]
+
+
+def test_baseline_round_trip_and_subtract(tmp_path):
+    source = ("import jax\n\n@jax.jit\ndef f(x):\n"
+              "    if x > 0:\n        return x\n    return -x\n")
+    diags = check_source([tracer_lib.check], source, LIB)
+    assert len(diags) == 1
+    lines = source.splitlines()
+    fp = diags[0].fingerprint(lines)
+    assert fp == f"{LIB}::REP101::if x > 0:"
+
+    path = tmp_path / "baseline.json"
+    write_baseline(path, {fp: 1})
+    loaded = load_baseline(path)
+    assert loaded == {fp: 1}
+
+    # baselined finding is dropped; a second identical one is NOT (budget)
+    assert subtract_baseline(diags, {LIB: lines}, loaded) == []
+    assert subtract_baseline(diags * 2, {LIB: lines}, loaded) == diags
+    # and the fingerprint survives a line-number shift
+    shifted = "# a new header comment\n" + source
+    moved = check_source([tracer_lib.check], shifted, LIB)
+    assert moved[0].fingerprint(shifted.splitlines()) == fp
+
+
+def test_cli_run_is_clean_on_this_repo():
+    """The committed tree must hold the burn-down: zero fresh violations."""
+    from repro.analysis.__main__ import main
+    assert main([]) == 0
+
+
+# ------------------------------------------------------------- TraceGuard
+
+
+class _Counter:
+    def __init__(self):
+        self.trace_count = 0
+
+
+def test_trace_guard_bounds_and_exact():
+    c = _Counter()
+    with TraceGuard(c):                       # max_new=0 default
+        pass
+    with TraceGuard(c, expect=2) as tg:
+        c.trace_count += 2
+    assert tg.new_compiles == 2
+    with pytest.raises(AssertionError, match="unexpected recompile"):
+        with TraceGuard(c):
+            c.trace_count += 1
+    with pytest.raises(AssertionError, match="expected exactly 1"):
+        with TraceGuard(c, expect=1):
+            pass
+
+
+def test_trace_guard_sums_sources_and_keeps_exceptions():
+    a, b = _Counter(), _Counter()
+    with TraceGuard(a, b, max_new=3):
+        a.trace_count += 1
+        b.trace_count += 2
+    with pytest.raises(KeyError):             # block error wins over guard
+        with TraceGuard(a):
+            a.trace_count += 5
+            raise KeyError("boom")
+    with pytest.raises(TypeError, match="none of trace_count"):
+        TraceGuard(object()).__enter__()
+
+
+# ------------------------------------------------------ LockOrderRecorder
+
+
+class _TwoLocks:
+    def __init__(self):
+        self.a = threading.Lock()
+        self.b = threading.Lock()
+
+
+def test_lock_order_recorder_clean_order_passes():
+    obj = _TwoLocks()
+    rec = LockOrderRecorder()
+    rec.wrap(obj, "a")
+    rec.wrap(obj, "b")
+    for _ in range(3):
+        with obj.a:
+            with obj.b:
+                pass
+    assert rec.find_cycle() is None
+    rec.assert_no_inversions()
+
+
+def test_lock_order_recorder_detects_inversion():
+    obj = _TwoLocks()
+    rec = LockOrderRecorder()
+    rec.wrap(obj, "a", name="A")
+    rec.wrap(obj, "b", name="B")
+
+    def ab():
+        with obj.a:
+            with obj.b:
+                pass
+
+    def ba():
+        with obj.b:
+            with obj.a:
+                pass
+
+    # run serially so both orders are recorded without ever deadlocking
+    ab()
+    ba()
+    cycle = rec.find_cycle()
+    assert cycle is not None and cycle[0] == cycle[-1]
+    with pytest.raises(AssertionError, match="lock-order inversion"):
+        rec.assert_no_inversions()
+
+
+def test_lock_order_recorder_handles_conditions_and_threads():
+    class Obj:
+        def __init__(self):
+            self._cond = threading.Condition()
+            self._lock = threading.Lock()
+
+    obj = Obj()
+    rec = LockOrderRecorder()
+    rec.wrap(obj, "_cond")
+    rec.wrap(obj, "_lock")
+
+    def worker():
+        for _ in range(5):
+            with obj._cond:
+                obj._cond.notify_all()
+                with obj._lock:
+                    pass
+
+    threads = [threading.Thread(target=worker) for _ in range(4)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    assert rec.edges() == {"Obj._cond": {"Obj._lock"}}
+    rec.assert_no_inversions()

@@ -13,6 +13,7 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
+from repro.analysis.runtime import TraceGuard
 from repro.api import (AFMConfig, TopoMap, available_backends, get_backend,
                        register_backend)
 from repro.data import make_dataset
@@ -167,3 +168,18 @@ def test_config_overrides_build_cfg():
     assert (tm.cfg.side, tm.cfg.dim, tm.cfg.batch) == (7, 5, 3)
     tm2 = TopoMap(CFG, batch=9)
     assert tm2.cfg.batch == 9 and CFG.batch == 1
+
+
+def test_inference_is_retrace_free_across_states():
+    """Retrace sentinel (REP401's runtime twin): swapping in new same-shape
+    weights must reuse the compiled inference — the state is an argument,
+    never baked into a jitted closure."""
+    x, _ = _tiny_data()
+    fitted = TopoMap(CFG).fit(x, key=jax.random.PRNGKey(0))
+    fitted.transform(x[:8])                    # warm the 8-bucket signature
+    with TraceGuard(fitted.engine):
+        for k in range(4):
+            rolled = fitted.state_._replace(
+                w=jnp.roll(fitted.state_.w, k + 1, axis=0))
+            TopoMap.from_state(rolled, CFG).transform(x[:8])
+            fitted.transform(x[:8])

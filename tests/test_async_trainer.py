@@ -31,10 +31,10 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
+from repro.analysis.runtime import TraceGuard
 from repro.api import AFMConfig, TopoMap, available_backends, get_backend
 from repro.core import afm, events, sandpile
 from repro.core import search as search_lib
-from repro.core.afm import AFMState
 from repro.data import make_dataset
 from repro.launch.stream_train import run_stream
 
@@ -279,6 +279,35 @@ def test_latency_changes_dynamics_but_stays_sound():
     assert int(rep_e.rounds) >= int(rep_c.rounds) - 1
 
 
+def test_lat_seed_default_matches_explicit_key_bitwise():
+    """The latency stream is seedable (lat_seed / lat_key); the default
+    seed 0 reproduces the historical hardcoded-PRNGKey(0) stream bitwise,
+    so the golden fingerprints pinned by this suite are unchanged."""
+    cfg = dataclasses.replace(CFG, i_max=32)
+    x = _tiny_data()
+    state = afm.init(jax.random.PRNGKey(1), cfg, x)
+    samples = x[:32]
+    step_keys = jax.random.split(jax.random.PRNGKey(3), 32)
+    ecfg = events.EventConfig(latency="exponential", delay=1.0,
+                              capacity=2048)
+
+    def run(ecfg_, **kw):
+        return events.run_events(state, samples, step_keys, cfg, ecfg_,
+                                 p_fn=_p_one, l_c_fn=_l_c_const, **kw)
+
+    st_default, _, _ = run(ecfg)
+    st_key0, _, _ = run(ecfg, lat_key=jax.random.PRNGKey(0))
+    st_seed7, _, _ = run(ecfg, lat_seed=7)
+    assert np.array_equal(np.asarray(st_default.w), np.asarray(st_key0.w))
+    # a different latency seed is a different asynchrony realisation
+    assert not np.array_equal(np.asarray(st_default.w),
+                              np.asarray(st_seed7.w))
+    # zero latency consumes no latency bits: lat_seed is inert there
+    z0, _, _ = run(events.EventConfig())
+    z7, _, _ = run(events.EventConfig(), lat_seed=7)
+    assert np.array_equal(np.asarray(z0.w), np.asarray(z7.w))
+
+
 def test_zero_latency_report_clocks_monotone():
     x = _tiny_data()
     tm = TopoMap(CFG, backend="async").fit(x, key=jax.random.PRNGKey(7))
@@ -501,13 +530,16 @@ def test_reference_run_jit_cached_across_fits():
         tm.fit(x, key=jax.random.PRNGKey(0))
         fn = tm.backend._jit_run
         assert fn is not None
-        tm.fit(x, key=jax.random.PRNGKey(1))
-        tm.fit(x, key=jax.random.PRNGKey(2))
         # same jitted callable across fits -> same trace cache; the count
         # check uses a private jax hook, so skip it gracefully if renamed
-        assert tm.backend._jit_run is fn
         if hasattr(fn, "_cache_size"):
-            assert fn._cache_size() == 1
+            with TraceGuard(fn):           # re-fitting must not retrace
+                tm.fit(x, key=jax.random.PRNGKey(1))
+                tm.fit(x, key=jax.random.PRNGKey(2))
+        else:
+            tm.fit(x, key=jax.random.PRNGKey(1))
+            tm.fit(x, key=jax.random.PRNGKey(2))
+        assert tm.backend._jit_run is fn
 
 
 # ------------------------------------------------------------- plumbing

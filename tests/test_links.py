@@ -1,5 +1,4 @@
 """Link-construction invariants + the Kleinberg far-link distribution."""
-import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest

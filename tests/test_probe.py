@@ -4,7 +4,7 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.core import metrics, probe
+from repro.core import probe
 
 
 @pytest.mark.slow

@@ -1,5 +1,4 @@
 """Eq. (5)/(6) schedule properties."""
-import jax.numpy as jnp
 import numpy as np
 import pytest
 

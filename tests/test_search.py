@@ -3,7 +3,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import afm, links, metrics
+from repro.core import afm, metrics
 from repro.core import search as search_lib
 
 

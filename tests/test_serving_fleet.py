@@ -19,6 +19,7 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
+from repro.analysis.runtime import LockOrderRecorder, TraceGuard
 from repro.api import AFMConfig, MapStore, TopoMap
 from repro.core import search as search_lib
 from repro.launch import serve_map as serve_map_cli
@@ -145,10 +146,10 @@ def test_fleet_replicas_share_compile_cache(fitted, monkeypatch):
     cache = CompileCache()
     monkeypatch.setattr(maps_lib, "GLOBAL_COMPILE_CACHE", cache)
     fleet = MapFleet.from_estimator(tm, replicas=4, buckets=(8, 64))
-    for i in range(8):                        # hit every replica, both buckets
-        fleet.transform(x[i:i + 1])
-        fleet.transform(x[:40])
-    assert cache.trace_count <= 2             # == ladder size, not 4 x 2
+    with TraceGuard(cache, max_new=2):        # == ladder size, not 4 x 2
+        for i in range(8):                    # hit every replica, both buckets
+            fleet.transform(x[i:i + 1])
+            fleet.transform(x[:40])
 
 
 # ----------------------------------------------------------- admission control
@@ -308,7 +309,16 @@ def test_fleet_rolling_reload_under_load(tmp_path, fitted):
     t_a = np.asarray(fleet.transform(batch))
     t_b = CFG.n_units - 1 - t_a
     p_ok = np.asarray(fleet.predict(batch))
-    compiles = sum(svc.engine.trace_count for svc in fleet.services())
+    # same-shape roll: swapped in place, no new compiled signatures — and
+    # the fleet/replica lock graph must stay acyclic under the hammer
+    guard = TraceGuard(*[svc.engine for svc in fleet.services()])
+    guard.__enter__()
+    rec = LockOrderRecorder()
+    rec.wrap(fleet, "_cond")
+    rec.wrap(fleet, "_reload_lock")
+    for i, svc in enumerate(fleet.services()):
+        rec.wrap(svc, "_lock", name=f"svc{i}._lock")
+        rec.wrap(svc, "_update_lock", name=f"svc{i}._update_lock")
     stop, failures = threading.Event(), []
 
     def reader():
@@ -337,9 +347,8 @@ def test_fleet_rolling_reload_under_load(tmp_path, fitted):
     assert not failures, failures[:3]
     assert fleet.version == 2 and fleet.stats.reloads == 1
     assert all(svc.stats.swaps == 1 for svc in fleet.services())
-    # same-shape roll: swapped in place, no new compiled signatures
-    assert sum(svc.engine.trace_count
-               for svc in fleet.services()) == compiles
+    guard.__exit__(None, None, None)
+    rec.assert_no_inversions()
     assert fleet.stats.sheds == 0
     assert not any(r["draining"] for r in fleet.replica_stats())
 

@@ -12,6 +12,7 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
+from repro.analysis.runtime import LockOrderRecorder, TraceGuard
 from repro.api import AFMConfig, MapStore, TopoMap
 from repro.core import search as search_lib
 from repro.serving import CompileCache, MapGateway, MapService
@@ -144,6 +145,10 @@ def test_gateway_threaded_clients_match_oracle(fitted):
     failures = []
     with MapGateway(max_delay=0.01) as gw:
         gw.attach("toy", MapService.from_estimator(tm))
+        rec = LockOrderRecorder()
+        rec.wrap(gw, "_cond")
+        rec.wrap(gw.service("toy"), "_lock")
+        rec.wrap(gw.service("toy"), "_update_lock")
 
         def client(cid):
             for i in range(cid, 64, 8):
@@ -161,6 +166,7 @@ def test_gateway_threaded_clients_match_oracle(fitted):
         assert gw.stats.requests == 64
         # concurrent batch-1 traffic actually coalesced
         assert gw.stats.dispatches < 64
+        rec.assert_no_inversions()
 
 
 # -------------------------------------------------- multi-map compile cost
@@ -177,10 +183,10 @@ def test_k_same_shape_maps_compile_ladder_once(fitted, monkeypatch):
             state = tm.state_._replace(w=jnp.roll(tm.state_.w, k, axis=0))
             gw.attach(f"map{k}", MapService(CFG, state, buckets=(8, 64),
                                             unit_labels=tm.unit_labels_))
-        for k in range(4):
-            gw.transform(f"map{k}", x[:5])
-            gw.predict(f"map{k}", x[:40])
-    assert cache.trace_count <= 2              # == ladder size, not 4 x 2
+        with TraceGuard(cache, max_new=2):     # == ladder size, not 4 x 2
+            for k in range(4):
+                gw.transform(f"map{k}", x[:5])
+                gw.predict(f"map{k}", x[:40])
 
 
 # ------------------------------------------------------- store / reload
@@ -195,18 +201,17 @@ def test_gateway_open_and_hot_reload(tmp_path, fitted):
         assert name == "toy" and gw.names() == ["toy"]
         before = np.asarray(gw.transform("toy", x[:32]))
         np.testing.assert_array_equal(before, np.asarray(tm.transform(x[:32])))
-        compiles = gw.service("toy").engine.trace_count
 
         # publish v2 (flipped weights + labels) and hot-reload it
         tm2 = TopoMap.from_state(
             tm.state_._replace(w=jnp.flip(tm.state_.w, axis=0)), CFG,
             unit_labels=jnp.flip(tm.unit_labels_))
         store.save(tm2, "toy")
-        assert gw.reload("toy") == 2
-        after = np.asarray(gw.transform("toy", x[:32]))
-        np.testing.assert_array_equal(after, CFG.n_units - 1 - before)
         # same service object, same shape: swapped in place, no recompiles
-        assert gw.service("toy").engine.trace_count == compiles
+        with TraceGuard(gw.service("toy").engine):
+            assert gw.reload("toy") == 2
+            after = np.asarray(gw.transform("toy", x[:32]))
+        np.testing.assert_array_equal(after, CFG.n_units - 1 - before)
         assert gw.service("toy").stats.swaps == 1
         # reloading again is a no-op at the same version
         assert gw.reload("toy") == 2

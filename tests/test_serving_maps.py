@@ -20,6 +20,7 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
+from repro.analysis.runtime import LockOrderRecorder, TraceGuard
 from repro.api import AFMConfig, TopoMap
 from repro.core import metrics
 from repro.launch import serve_map as serve_map_cli
@@ -67,28 +68,28 @@ def test_engine_compiles_once_per_bucket(fitted):
     """Acceptance: at most one compile per (bucket, map-shape)."""
     tm, x, _ = fitted
     engine = _engine(buckets=(8, 64, 512))
-    for n in (3, 5, 8, 1, 7):          # all land in the 8-bucket
-        engine.bmu(tm.state_.w, x[:n])
-    assert engine.trace_count == 1
-    engine.bmu(tm.state_.w, x[:33])    # 64-bucket
-    engine.bmu(tm.state_.w, x[:64])
-    assert engine.trace_count == 2
-    engine.bmu(tm.state_.w, x[:200])   # 512-bucket
-    assert engine.trace_count == 3
+    with TraceGuard(engine, expect=1):
+        for n in (3, 5, 8, 1, 7):      # all land in the 8-bucket
+            engine.bmu(tm.state_.w, x[:n])
+    with TraceGuard(engine, expect=1):
+        engine.bmu(tm.state_.w, x[:33])    # 64-bucket
+        engine.bmu(tm.state_.w, x[:64])
+    with TraceGuard(engine, expect=1):
+        engine.bmu(tm.state_.w, x[:200])   # 512-bucket
     # 1060 = 512 + 512 + 36-tail-in-64: every chunk reuses a signature
     big = jnp.tile(x, (5, 1))[:1060]
-    engine.bmu(tm.state_.w, big)
-    assert engine.trace_count == 3
+    with TraceGuard(engine):
+        engine.bmu(tm.state_.w, big)
 
 
 def test_engine_new_map_shape_recompiles(fitted):
     tm, x, _ = fitted
     engine = _engine(buckets=(8,))
-    engine.bmu(tm.state_.w, x[:4])
-    assert engine.trace_count == 1
+    with TraceGuard(engine, expect=1):
+        engine.bmu(tm.state_.w, x[:4])
     w_small = tm.state_.w[:16]         # different map shape -> one more
-    engine.bmu(w_small, x[:4])
-    assert engine.trace_count == 2
+    with TraceGuard(engine, expect=1):
+        engine.bmu(w_small, x[:4])
 
 
 def test_engine_cap_clamps_into_ladder(fitted):
@@ -100,11 +101,12 @@ def test_engine_cap_clamps_into_ladder(fitted):
     from repro.core import search as search_lib
     big = jnp.tile(x, (2, 1))[:300]
     ref_idx, _ = search_lib.exact_bmu(tm.state_.w, big)
-    for cap in (1, 5, 8, 9, 33, 64, 100, 5000):
-        idx, _ = engine.bmu(tm.state_.w, big, cap=cap)
-        np.testing.assert_array_equal(np.asarray(idx), np.asarray(ref_idx))
     # bounded by the ladder, and every traced batch dim IS a ladder bucket
-    assert engine.trace_count <= len(engine.buckets)
+    with TraceGuard(engine, max_new=len(engine.buckets)):
+        for cap in (1, 5, 8, 9, 33, 64, 100, 5000):
+            idx, _ = engine.bmu(tm.state_.w, big, cap=cap)
+            np.testing.assert_array_equal(np.asarray(idx),
+                                          np.asarray(ref_idx))
     assert {k[0] for k in cache.keys} <= set(engine.buckets)
 
 
@@ -114,10 +116,10 @@ def test_engines_share_process_wide_compile_cache(fitted):
     tm, x, _ = fitted
     cache = CompileCache()
     engines = [_engine(buckets=(8, 64), cache=cache) for _ in range(4)]
-    for engine in engines:
-        for n in (3, 8, 40, 64):
-            engine.bmu(tm.state_.w, x[:n])
-    assert cache.trace_count <= 2      # == ladder size, shared by all four
+    with TraceGuard(cache, max_new=2):  # == ladder size, shared by all four
+        for engine in engines:
+            for n in (3, 8, 40, 64):
+                engine.bmu(tm.state_.w, x[:n])
     assert engines[0].trace_count == 2
     assert all(e.trace_count == 0 for e in engines[1:])
 
@@ -128,19 +130,19 @@ def test_services_can_share_one_engine(fitted):
     engine = _engine(buckets=(8, 64))
     a = MapService(CFG, tm.state_, engine=engine)
     b = MapService(CFG, tm.state_, engine=engine)
-    a.transform(x[:5])
-    b.transform(x[:6])
+    with TraceGuard(engine, expect=1):     # one shared 8-bucket compile
+        a.transform(x[:5])
+        b.transform(x[:6])
     assert a.engine is b.engine
-    assert engine.trace_count == 1         # one shared 8-bucket compile
     assert a.compiles == b.compiles == 1
 
 
 def test_engine_empty_request(fitted):
     tm, x, _ = fitted
     engine = _engine()
-    idx, q2 = engine.bmu(tm.state_.w, x[:0])
+    with TraceGuard(engine):               # empty batch never compiles
+        idx, q2 = engine.bmu(tm.state_.w, x[:0])
     assert idx.shape == (0,) and q2.shape == (0,)
-    assert engine.trace_count == 0
 
 
 def test_engine_rejects_bad_shapes(fitted):
@@ -157,15 +159,15 @@ def test_topomap_transform_compiles_once_per_bucket(fitted, monkeypatch):
     monkeypatch.setattr(maps_lib, "GLOBAL_COMPILE_CACHE", CompileCache())
     x, y = _data()
     tm = TopoMap(CFG).fit(x, y, key=jax.random.PRNGKey(7))
-    for n in (5, 7, 3, 8):
-        tm.transform(x[:n])
-    assert tm.engine.trace_count == 1
-    tm.predict(x[:6])                  # same bucket: no new compile
-    assert tm.engine.trace_count == 1
+    with TraceGuard(tm.engine, expect=1):
+        for n in (5, 7, 3, 8):
+            tm.transform(x[:n])
+    with TraceGuard(tm.engine):        # same bucket: no new compile
+        tm.predict(x[:6])
     # a second same-shape estimator reuses the process-wide cache entirely
     tm2 = TopoMap.from_state(tm.state_, CFG)
-    tm2.transform(x[:4])
-    assert tm2.engine.trace_count == 0
+    with TraceGuard(tm2.engine, maps_lib.GLOBAL_COMPILE_CACHE):
+        tm2.transform(x[:4])
     assert maps_lib.GLOBAL_COMPILE_CACHE.trace_count == 1
 
 
@@ -257,10 +259,9 @@ def test_update_does_not_recompile_inference(fitted):
     tm, x, _ = fitted
     svc = MapService.from_estimator(tm)
     svc.transform(x[:8])
-    compiles = svc.compiles
-    svc.update(x[:8])
-    svc.transform(x[:8])
-    assert svc.compiles == compiles
+    with TraceGuard(svc.engine):
+        svc.update(x[:8])
+        svc.transform(x[:8])
 
 
 def test_swap_replaces_state_and_labels(fitted):
@@ -352,7 +353,11 @@ def test_concurrent_reads_with_hot_swaps_and_updates(fitted):
     t_a = np.asarray(svc.transform(batch))
     t_b = CFG.n_units - 1 - t_a
     p_ok = np.asarray(svc.predict(batch))
-    compiles = svc.engine.trace_count
+    guard = TraceGuard(svc.engine)         # same-shape: no recompiles, ever
+    guard.__enter__()
+    rec = LockOrderRecorder()
+    rec.wrap(svc, "_lock")
+    rec.wrap(svc, "_update_lock")
     stop = threading.Event()
     failures = []
 
@@ -387,7 +392,8 @@ def test_concurrent_reads_with_hot_swaps_and_updates(fitted):
         t.join()
     assert not failures, failures[:3]
     assert svc.stats.swaps >= 2
-    assert svc.engine.trace_count == compiles  # same-shape: no recompiles
+    guard.__exit__(None, None, None)       # same-shape: no recompiles
+    rec.assert_no_inversions()
 
     # phase 2: hot updates land while readers hammer — updates keep labels,
     # so every prediction must still come from the served label set, and
@@ -406,16 +412,17 @@ def test_concurrent_reads_with_hot_swaps_and_updates(fitted):
                 failures.append(("labels torn from map", p))
 
     readers = [threading.Thread(target=update_reader) for _ in range(3)]
-    for t in readers:
-        t.start()
-    for _ in range(3):
-        svc.update(x[:8])
-    stop2.set()
-    for t in readers:
-        t.join()
+    with TraceGuard(svc.engine):           # update swaps must not compile
+        for t in readers:
+            t.start()
+        for _ in range(3):
+            svc.update(x[:8])
+        stop2.set()
+        for t in readers:
+            t.join()
     assert not failures, failures[:3]
     assert svc.stats.updates == 3
-    assert svc.engine.trace_count == compiles
+    rec.assert_no_inversions()
 
 
 # ------------------------------------------------------------- CLI smoke

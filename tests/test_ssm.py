@@ -1,5 +1,4 @@
 """Mamba2/SSD layer: chunked algorithm vs naive sequential recurrence."""
-import dataclasses
 
 import jax
 import jax.numpy as jnp

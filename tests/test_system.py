@@ -3,11 +3,10 @@ Table-1-shaped dataset, classify, compare with the SOM baseline, and check
 the cascade-driven mechanics' global invariants (the paper's core claims at
 reduced scale)."""
 import jax
-import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.core import afm, classifier, metrics, som
+from repro.core import afm, classifier, som
 from repro.data import make_dataset
 
 pytestmark = pytest.mark.slow  # full-training system tests

@@ -68,15 +68,20 @@ from repro.core import afm as afm_lib
 from repro.core import cascade as cascade_lib
 from repro.core import schedules
 from repro.core.afm import AFMConfig, AFMState
+from repro.core.placement import base as placement_base
+from repro.core.placement import single as placement_single
 
 LATENCIES = ("zero", "constant", "exponential")
 ENGINES = ("auto", "event")
 
-#: Bit pattern of float32 +inf. ``msg_t`` is always ≥ 0 (sample times and
-#: delays are non-negative), so bit-casting it to uint32 is order-preserving
-#: and a free slot (t = +inf) carries the largest key — the round-selection
-#: min needs no separate ``isfinite`` mask.
-_INF_BITS = 0x7F800000
+# The pool-min selectors, packing rule, and +inf sentinel moved behind the
+# placement seam (``repro.core.placement.single``); these aliases keep the
+# engine's internals — and the golden parity suite that imports them —
+# pointing at the single source of truth.
+_INF_BITS = placement_single.INF_BITS
+_key_scale = placement_single.key_scale
+_pool_min_lex = placement_single.pool_min_lex
+_pool_min_packed = placement_single.pool_min_packed
 
 #: Direction codes, from the *receiver*'s perspective, matching the slot
 #: order of ``core.cascade._shift4``: 0 = from row+1 (below), 1 = from row-1
@@ -197,69 +202,16 @@ class EventReport(NamedTuple):
 
 def _resolve(cfg: AFMConfig, ecfg: EventConfig, num_events: int):
     """Static derived quantities: (pool size M, alloc width K, wave cap,
-    round cap)."""
-    n = cfg.n_units
-    m = ecfg.capacity if ecfg.capacity is not None else 8 * n
-    m = max(int(m), 4)
-    k = min(4 * n, m)
-    max_waves = (8 * cfg.side * cfg.side if cfg.max_waves is None
-                 else cfg.max_waves)
+    round cap). Pool sizing and the wave cap are the single-pool placement's
+    rules (``repro.core.placement.single``)."""
+    m = placement_single.pool_capacity(cfg, ecfg)
+    k = min(4 * cfg.n_units, m)
+    max_waves = placement_single.wave_cap(cfg)
     max_rounds = (ecfg.max_rounds if ecfg.max_rounds is not None
                   else num_events * (max_waves + 2) + 1)
     # the round counter is int32; a huge max_waves would overflow the
     # derived budget (it is a safety net, not a semantic bound)
     return m, k, max_waves, min(int(max_rounds), 2 ** 31 - 1)
-
-
-def _key_scale(num_events: int, max_waves: int) -> int | None:
-    """E if ``(gen, cid)`` packs losslessly into one uint32 lane (the common
-    case: key = gen · E + cid with gen ≤ max_waves + 1 and cid < E), else
-    ``None`` — the engine then falls back to the exact 3-field lexicographic
-    min, which is correct for any int32 gen/cid (no magic sentinel)."""
-    if num_events <= 0:
-        return None
-    if (max_waves + 2) * num_events <= 2 ** 32:
-        return num_events
-    return None
-
-
-def _pool_min_lex(msg_t, msg_gen, msg_cid):
-    """Exact lexicographic min over active messages: (t, gen, cid) -> round.
-
-    The time lane is compared through its uint32 bit pattern (valid because
-    ``msg_t`` ≥ 0 and free slots are +inf — see ``_INF_BITS``); gen/cid use
-    ``iinfo(int32).max`` as the masked fill, which stays correct even when a
-    real gen/cid equals the fill (the old engine's ``2**30`` sentinel broke
-    there — see the regression test)."""
-    hi = jax.lax.bitcast_convert_type(msg_t, jnp.uint32)
-    hi_min = jnp.min(hi)
-    have = hi_min != jnp.uint32(_INF_BITS)
-    imax = jnp.int32(jnp.iinfo(jnp.int32).max)
-    m1 = hi == hi_min
-    gmin = jnp.min(jnp.where(m1, msg_gen, imax))
-    m2 = m1 & (msg_gen == gmin)
-    cmin = jnp.min(jnp.where(m2, msg_cid, imax))
-    sel = m2 & (msg_cid == cmin)
-    tmin = jax.lax.bitcast_convert_type(hi_min, jnp.float32)
-    return tmin, gmin, cmin, sel, have
-
-
-def _pool_min_packed(msg_t, msg_key, scale: int):
-    """Packed round-key min: 2 reduction passes instead of 3.
-
-    Lane 1 is the bit-cast time, lane 2 the packed ``gen · scale + cid``
-    (``scale`` == E, statically guaranteed not to overflow uint32 by
-    ``_key_scale``)."""
-    hi = jax.lax.bitcast_convert_type(msg_t, jnp.uint32)
-    hi_min = jnp.min(hi)
-    have = hi_min != jnp.uint32(_INF_BITS)
-    lo_min = jnp.min(jnp.where(hi == hi_min, msg_key,
-                               jnp.uint32(0xFFFFFFFF)))
-    sel = (hi == hi_min) & (msg_key == lo_min)
-    tmin = jax.lax.bitcast_convert_type(hi_min, jnp.float32)
-    gmin = (lo_min // jnp.uint32(scale)).astype(jnp.int32)
-    cmin = (lo_min % jnp.uint32(scale)).astype(jnp.int32)
-    return tmin, gmin, cmin, sel, have
 
 
 def init_events(state: AFMState, cfg: AFMConfig, ecfg: EventConfig,
@@ -302,30 +254,30 @@ def _default_l_c(i, cfg: AFMConfig):
 
 def _make_round_fns(cfg: AFMConfig, ecfg: EventConfig, num_events: int,
                     search: Callable, p_fn: Callable, l_c_fn: Callable,
-                    i0, far, near):
+                    i0, far, near, placement=None):
     """Build (sample_round, delivery_round, pool_min) as closures.
 
     ``i0`` is the run's starting sample count: cascade ``cid`` uses the
     schedules evaluated at ``i0 + cid`` throughout its lifetime — exactly
     the value its own sample round saw, matching the reference semantics
     where one step's cascade runs entirely under that step's l_c / p_i.
-    ``far`` / ``near`` are the loop-invariant lattice tables.
+    ``far`` / ``near`` are the loop-invariant lattice tables. Round
+    selection, key packing, and the fire-candidate routing tables come
+    from the ``placement`` (default ``SinglePool``).
     """
+    placement = placement_base.resolve_placement(placement)
     n, d, side, theta = cfg.n_units, cfg.dim, cfg.side, cfg.theta
     m, k_sel, max_waves, _ = _resolve(cfg, ecfg, num_events)
-    scale = _key_scale(num_events, max_waves)
+    scale = placement.pack_scale(cfg, ecfg, num_events)
+    selector = placement.make_selector(cfg, ecfg, num_events)
     # a delivery round selects one (t, gen, cid): at zero/constant latency
     # that is one fire()'s output (≤ 4N messages); exponential delays can in
     # principle tie across fires, so the selection width covers the pool
     k_round = m if ecfg.latency == "exponential" else k_sel
-    dirs4 = jnp.tile(jnp.arange(4, dtype=jnp.int32), (n, 1)).reshape(-1)
-    src4 = jnp.repeat(jnp.arange(n, dtype=jnp.int32), 4)
-    dst4 = near.reshape(-1)
+    src4, dst4, dirs4 = placement.routing(near)
 
     def pool_min(es: EventState):
-        if scale is not None:
-            return _pool_min_packed(es.msg_t, es.msg_key, scale)
-        return _pool_min_lex(es.msg_t, es.msg_gen, es.msg_cid)
+        return selector(es.msg_t, es.msg_key, es.msg_gen, es.msg_cid)
 
     def fire(es: EventState, fired, cid, t, gen) -> EventState:
         """Broadcast-after-theta: ``fired`` units reset their counters and
@@ -635,7 +587,8 @@ def _make_fused_zero(cfg: AFMConfig, ecfg: EventConfig, num_events: int,
 
 
 def _make_engine(cfg: AFMConfig, ecfg: EventConfig, num_events: int,
-                 search: Callable, p_fn: Callable, l_c_fn: Callable):
+                 search: Callable, p_fn: Callable, l_c_fn: Callable,
+                 placement=None):
     """The default runner: an outer scan over the E sample arrivals with an
     inner while_loop that drains all due messages before each arrival (and a
     final drain to quiescence). Identical round order to the budgeted loop:
@@ -648,7 +601,7 @@ def _make_engine(cfg: AFMConfig, ecfg: EventConfig, num_events: int,
         es0 = init_events(state, cfg, ecfg, e, lat_key)
         sample_round, delivery_round, pool_min = _make_round_fns(
             cfg, ecfg, e, search, p_fn, l_c_fn, i0=es0.i,
-            far=state.far, near=state.near)
+            far=state.far, near=state.near, placement=placement)
 
         def drain(es, t_limit):
             # round_cap is a safety net against engine bugs, not a semantic
@@ -679,7 +632,8 @@ def _make_engine(cfg: AFMConfig, ecfg: EventConfig, num_events: int,
 
 
 def _make_budgeted(cfg: AFMConfig, ecfg: EventConfig, num_events: int,
-                   search: Callable, p_fn: Callable, l_c_fn: Callable):
+                   search: Callable, p_fn: Callable, l_c_fn: Callable,
+                   placement=None):
     """Budgeted runner (``max_rounds`` set): one while_loop popping a round
     per iteration under a global round budget — the original PR-4 loop
     structure, kept for its exact truncation accounting."""
@@ -691,7 +645,7 @@ def _make_budgeted(cfg: AFMConfig, ecfg: EventConfig, num_events: int,
         es0 = init_events(state, cfg, ecfg, e, lat_key)
         sample_round, delivery_round, pool_min = _make_round_fns(
             cfg, ecfg, e, search, p_fn, l_c_fn, i0=es0.i,
-            far=state.far, near=state.near)
+            far=state.far, near=state.near, placement=placement)
 
         def cond(es):
             return ((es.ev < e) | (es.free_n < m)) & (es.rounds < max_rounds)
@@ -719,21 +673,20 @@ def _make_budgeted(cfg: AFMConfig, ecfg: EventConfig, num_events: int,
 @functools.lru_cache(maxsize=32)
 def _compiled_runner(cfg: AFMConfig, ecfg: EventConfig, num_events: int,
                      search: Callable, p_fn: Callable, l_c_fn: Callable,
-                     donate: bool):
-    """One jitted simulation loop per static (config, latency, E, stages).
+                     donate: bool, placement):
+    """One jitted simulation loop per static (config, latency, E, stages,
+    placement) — placements are frozen dataclasses, hashable like the
+    configs.
 
-    Statically dispatches to the fused zero-latency scan, the sample-scan
-    engine, or the budgeted loop — all three implement the same round
-    semantics (pinned bitwise by ``tests/test_async_trainer.py``'s golden
-    suite). ``donate=True`` donates the input ``AFMState`` buffers to the
-    run (the caller must own them — ``AsyncBackend.run`` does); donation is
-    a no-op on CPU."""
-    if _zero_fast_ok(cfg, ecfg, num_events):
-        go = _make_fused_zero(cfg, ecfg, num_events, search, p_fn, l_c_fn)
-    elif ecfg.max_rounds is None:
-        go = _make_engine(cfg, ecfg, num_events, search, p_fn, l_c_fn)
-    else:
-        go = _make_budgeted(cfg, ecfg, num_events, search, p_fn, l_c_fn)
+    Execution dispatch belongs to the placement: ``SinglePool`` statically
+    picks the fused zero-latency scan, the sample-scan engine, or the
+    budgeted loop (all three implement the same round semantics, pinned
+    bitwise by ``tests/test_async_trainer.py``'s golden suite);
+    ``MeshPlacement`` builds the shard_map runner (shards=1 delegates to
+    ``SinglePool``). ``donate=True`` donates the input ``AFMState`` buffers
+    to the run (the caller must own them — ``AsyncBackend.run`` does);
+    donation is a no-op on CPU."""
+    go = placement.build_runner(cfg, ecfg, num_events, search, p_fn, l_c_fn)
     return jax.jit(go, donate_argnums=(0,) if donate else ())
 
 
@@ -742,7 +695,8 @@ def run_events(state: AFMState, samples: jnp.ndarray, step_keys: jnp.ndarray,
                search: Callable = afm_lib.search_heuristic,
                p_fn: Callable = _default_p, l_c_fn: Callable = _default_l_c,
                lat_key: jax.Array | None = None, lat_seed: int = 0,
-               donate: bool = False,
+               donate: bool = False, placement=None,
+               shards: int | None = None,
                ) -> tuple[AFMState, afm_lib.StepAux, EventReport]:
     """Simulate ``E`` sample-delivery events (plus their cascades) to
     quiescence: the queue drains completely before returning, so the result
@@ -760,7 +714,9 @@ def run_events(state: AFMState, samples: jnp.ndarray, step_keys: jnp.ndarray,
                  what makes the zero-latency bitwise contract testable).
       cfg/ecfg:  AFM dynamics + event-engine configuration.
       search:    the search stage (``afm.search_heuristic`` or
-                 ``afm.search_exact`` signature).
+                 ``afm.search_exact`` signature). A multi-shard mesh
+                 placement maps ``search_exact`` to the sharded exact BMU
+                 and anything else to the SPMD probe-and-reduce search.
       p_fn/l_c_fn: schedule overrides ``(i, cfg) -> scalar`` — the sandpile
                  parity tests pin p = 1 through these.
       lat_key:   PRNG key for the exponential latency stream (ignored by
@@ -771,6 +727,22 @@ def run_events(state: AFMState, samples: jnp.ndarray, step_keys: jnp.ndarray,
       donate:    donate the input state's buffers to the jitted run — only
                  safe when the caller owns them and drops the old state
                  (no-op on CPU, saves the dense-state copy on accelerators).
+      placement: ``None`` / ``'single'`` (one pool, one device — the
+                 default), ``'mesh'``, or a ``Placement`` instance
+                 (``repro.core.placement``).
+      shards:    shard count for ``placement='mesh'`` (``None`` -> 1).
+
+    Seeding under a placement: ``lat_seed``/``lat_key`` name the *root* of
+    the latency stream. ``SinglePool`` (and a 1-shard mesh, which runs the
+    identical single-pool runner) consumes it directly; a multi-shard
+    ``MeshPlacement`` derives one independent stream per shard as
+    ``fold_in(lat_key, shard_id)`` — as it does for every other per-shard
+    stream (probe, drive, cascade chains). The shard count is therefore
+    part of the seeding contract: the same ``(lat_seed, shards)`` replays
+    bitwise-identical weights (asserted by
+    ``tests/test_placement.py::test_mesh_determinism_quality_accounting``),
+    while a different ``shards`` draws a different — equally valid —
+    sample of the same dynamics.
     """
     e = int(samples.shape[0])
     if e == 0:
@@ -785,6 +757,8 @@ def run_events(state: AFMState, samples: jnp.ndarray, step_keys: jnp.ndarray,
                 jnp.zeros((n,), jnp.float32), jnp.zeros((n,), jnp.int32))
     if lat_key is None:
         lat_key = jax.random.PRNGKey(lat_seed)
-    fn = _compiled_runner(cfg, ecfg, e, search, p_fn, l_c_fn, bool(donate))
+    pl = placement_base.resolve_placement(placement, shards=shards)
+    fn = _compiled_runner(cfg, ecfg, e, search, p_fn, l_c_fn, bool(donate),
+                          pl)
     return fn(state, jnp.asarray(samples, jnp.float32),
               jnp.asarray(step_keys, jnp.uint32), lat_key)

@@ -1,0 +1,14 @@
+"""Placement seam for the discrete-event engine (DESIGN.md §10).
+
+``Placement`` answers the engine's four questions — pool allocation, round
+selection, message routing, execution — so ``core.events`` no longer
+assumes one dense pool on one device. ``SinglePool`` is the historical
+(golden-suite-pinned) layout; ``MeshPlacement`` partitions units and the
+free-list ring pool across a ``shard_map`` device mesh with batched
+per-round halo exchange.
+"""
+from repro.core.placement.base import Placement, resolve_placement
+from repro.core.placement.mesh import MeshPlacement
+from repro.core.placement.single import SinglePool
+
+__all__ = ["Placement", "SinglePool", "MeshPlacement", "resolve_placement"]

@@ -1,0 +1,599 @@
+"""``MeshPlacement`` — the event engine partitioned across a device mesh.
+
+The paper's cascade is local in space (a firing unit talks to its 4 lattice
+neighbours) and sparse in time (messages exist only while a cascade runs),
+which is exactly what makes the event engine partitionable: split the
+lattice into contiguous row bands, give every shard its *own* message pool,
+free-list ring, logical clocks, and round keys, and the only traffic that
+ever crosses a shard boundary is a weight broadcast from a boundary-row
+unit — at most ``2 · side`` candidate messages per round, batched into one
+halo exchange (the ``ppermute`` idiom of ``core.distributed``).
+
+Execution model (DESIGN.md §10):
+
+- **per-shard rounds** — each drain iteration, every shard pops *its own*
+  minimal ``(time, generation, cascade-id)`` round from its local pool and
+  delivers it; shards working on different cascades in the same iteration
+  is the intended semantics, not a race. The loop continues while any
+  shard still has a due message (one scalar ``psum`` per iteration).
+- **halo exchange** — a delivery round's refires (and each sample round's
+  threshold crossing) return an *outbox*: boundary-row fire masks plus the
+  boundary-row weights. The exchange itself runs unconditionally every
+  iteration (collectives cannot sit inside a data-dependent branch); an
+  empty outbox exchanges zero masks. Receivers enqueue arriving halo
+  messages into their own pool and draw the latency delay from their own
+  stream.
+- **collective search** — a sample round runs on all shards: each probes
+  ``e / K`` of its local units, a min-reduce elects the winner, and each
+  greedy hop is one more min-reduce over the incumbent's neighbours
+  evaluated by their owners (the ``core.distributed`` search, at B = 1).
+  ``search=afm.search_exact`` instead runs a full local distance pass per
+  shard + one min-reduce. The GMU's Eq. (3) adaptation, counter drive,
+  clock stamp, and any resulting fire happen on the owning shard only.
+- **PRNG** — every per-shard stream derives by ``fold_in(key, shard_id)``:
+  the probe key, the drive key, the per-cascade chain key, and the latency
+  stream (``fold_in(lat_key, shard_id)``). Same seed + same shard count ⇒
+  bitwise-identical weights; a different shard count is a different (but
+  equally valid) sample of the same dynamics.
+
+``MeshPlacement(shards=1)`` is served by the ``SinglePool`` runner: a
+1-shard mesh has no partition boundary, so delegating makes the required
+"shards=1 ≡ single" equivalence true by construction (and keeps the golden
+bitwise contract exact rather than merely close).
+"""
+from __future__ import annotations
+
+import dataclasses
+import threading
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.core import afm as afm_lib
+from repro.core.distributed import _argmin_over_axis
+from repro.core.placement import single as single_mod
+from repro.sharding import compat
+
+#: Mesh axis name the event engine shards over.
+AXIS = "shards"
+
+GUARDED_BY = {"_MeshCache": {"_meshes": "_lock"}}
+
+
+class _MeshCache:
+    """Process-wide cache of event-engine device meshes.
+
+    Placement state shared across threads: the stream-train loop rebuilds
+    runners from its trainer thread while serving clients keep the main
+    thread busy, and ``jax.make_mesh`` enumerates devices — one mesh per
+    shard count, built once, handed out under the lock (REP301-checked
+    via the module's ``GUARDED_BY``)."""
+
+    def __init__(self):
+        self._lock = threading.Lock()
+        self._meshes: dict[int, object] = {}
+
+    def get(self, shards: int):
+        with self._lock:
+            mesh = self._meshes.get(shards)
+            if mesh is None:
+                avail = len(jax.devices())
+                if shards > avail:
+                    raise ValueError(
+                        f"MeshPlacement(shards={shards}) needs {shards} "
+                        f"devices but only {avail} are visible (on CPU, set "
+                        f"XLA_FLAGS=--xla_force_host_platform_device_count="
+                        f"{shards} before importing jax)")
+                mesh = compat.make_mesh((shards,), (AXIS,))
+                self._meshes[shards] = mesh
+            return mesh
+
+
+_MESHES = _MeshCache()
+
+
+class _Carry(NamedTuple):
+    """Per-shard simulation state carried through the mesh round loop
+    (the sharded analogue of ``events.EventState``; L = local units,
+    m = per-shard pool slots)."""
+    w: jnp.ndarray          # (L, D) f32 local unit weights
+    c: jnp.ndarray          # (L,) i32 cascading counters
+    clock: jnp.ndarray      # (L,) f32 per-unit logical clocks
+    nevents: jnp.ndarray    # (L,) i32 events processed per unit
+    msg_t: jnp.ndarray      # (m,) f32 delivery time (+inf = free slot)
+    msg_gen: jnp.ndarray    # (m,) i32 round key: generation
+    msg_cid: jnp.ndarray    # (m,) i32 round key: originating sample event
+    msg_dst: jnp.ndarray    # (m,) i32 receiving unit (local index)
+    msg_dir: jnp.ndarray    # (m,) i32 receiver-side direction code (0..3)
+    msg_w: jnp.ndarray      # (m, D) f32 payload: sender weights at send time
+    free_ring: jnp.ndarray  # (m,) i32 ring queue of free slot ids
+    free_head: jnp.ndarray  # () i32
+    free_n: jnp.ndarray     # () i32
+    casc_key: jnp.ndarray   # (E, 2) u32 per-cascade local PRNG chain
+    wcount: jnp.ndarray     # (E,) i32 max generation delivered locally
+    sizes: jnp.ndarray      # (E,) i32 local firing incidents per cascade
+    gmu: jnp.ndarray        # (E,) i32 aux (identical on every shard)
+    q2: jnp.ndarray         # (E,) f32 aux (identical on every shard)
+    greedy: jnp.ndarray     # (E,) i32 aux (identical on every shard)
+    t: jnp.ndarray          # () f32 last locally processed round time
+    drounds: jnp.ndarray    # () i32 local delivery rounds
+    deliveries: jnp.ndarray  # () i32 local weight-message deliveries
+    dropped: jnp.ndarray    # () i32 local pool-overflow drops
+    lat_key: jnp.ndarray    # (2,) u32 per-shard latency stream
+
+
+class _Outbox(NamedTuple):
+    """One round's cross-shard traffic: boundary-row fire masks and the
+    firing rows' weights, stamped with the round's (t, gen, cid). Masks are
+    int32 (collectives), already zeroed at the global lattice boundary."""
+    up_mask: jnp.ndarray    # (side,) i32 — top-row firings, for shard me-1
+    up_w: jnp.ndarray       # (side, D) f32
+    dn_mask: jnp.ndarray    # (side,) i32 — bottom-row firings, for me+1
+    dn_w: jnp.ndarray       # (side, D) f32
+    t: jnp.ndarray          # (1,) f32 send time
+    gen: jnp.ndarray        # (1,) i32
+    cid: jnp.ndarray        # (1,) i32
+
+
+@dataclasses.dataclass(frozen=True)
+class MeshPlacement:
+    """Units + message pool partitioned over a ``shards``-device mesh.
+
+    ``cfg.side`` must divide by ``shards`` (contiguous row bands); the pool
+    ``capacity`` is split evenly per shard (default 8 · N/K slots each).
+    ``max_rounds`` (the budgeted single-pool runner) is not supported —
+    a global round budget has no per-shard meaning.
+    """
+
+    name = "mesh"
+    shards: int = 1
+
+    def __post_init__(self):
+        if self.shards < 1:
+            raise ValueError(f"shards must be >= 1, got {self.shards}")
+
+    def pool_capacity(self, cfg, ecfg) -> int:
+        """Per-shard pool slots: an even split of ``capacity``, or 8 · L."""
+        n_local = max(1, cfg.n_units // self.shards)
+        m = (ecfg.capacity // self.shards if ecfg.capacity is not None
+             else 8 * n_local)
+        return max(int(m), 4)
+
+    def pack_scale(self, cfg, ecfg, num_events: int) -> None:
+        """Mesh pools always use the exact lexicographic selector (per-shard
+        gen/cid stay plain int32 lanes — halo metadata travels unpacked)."""
+        return None
+
+    def make_selector(self, cfg, ecfg, num_events: int):
+        def select(msg_t, msg_key, msg_gen, msg_cid):
+            del msg_key
+            return single_mod.pool_min_lex(msg_t, msg_gen, msg_cid)
+        return select
+
+    def routing(self, near):
+        """Global-lattice candidate tables (the mesh runner derives its
+        shard-local equivalents internally — see ``_build_mesh_runner``)."""
+        return single_mod.SinglePool().routing(near)
+
+    def build_runner(self, cfg, ecfg, num_events: int, search, p_fn, l_c_fn):
+        if self.shards == 1:
+            # no partition boundary: the single-pool runner IS the 1-shard
+            # mesh, making shards=1 ≡ SinglePool bitwise by construction
+            return single_mod.SinglePool().build_runner(
+                cfg, ecfg, num_events, search, p_fn, l_c_fn)
+        if cfg.side % self.shards:
+            raise ValueError(
+                f"side={cfg.side} must divide into shards={self.shards} "
+                f"contiguous row bands")
+        if ecfg.max_rounds is not None:
+            raise ValueError(
+                "max_rounds (the budgeted runner) is single-pool only; a "
+                "global round budget has no per-shard meaning under "
+                "placement='mesh'")
+        return _build_mesh_runner(self, cfg, ecfg, num_events,
+                                  search, p_fn, l_c_fn)
+
+
+def _build_mesh_runner(pl: MeshPlacement, cfg, ecfg, num_events: int,
+                       search, p_fn, l_c_fn):
+    """Compile-time construction of the sharded runner ``go(state, samples,
+    step_keys, lat_key)``. See the module docstring for the execution model;
+    every closure below is per-shard code inside one ``shard_map``."""
+    from repro.core import events as events_lib
+
+    k_shards = pl.shards
+    side, d, theta = cfg.side, cfg.dim, cfg.theta
+    n = cfg.n_units
+    rows = side // k_shards           # local lattice rows per shard
+    length = rows * side              # L: local units per shard
+    e = num_events
+    spacing = ecfg.sample_spacing
+    m = pl.pool_capacity(cfg, ecfg)
+    # a round's selection width: one local fire (≤ 4L) plus one halo burst
+    # (≤ 2·side) at zero/constant latency; exponential ties can span the pool
+    k_round = m if ecfg.latency == "exponential" else min(4 * length
+                                                          + 2 * side, m)
+    max_waves = single_mod.wave_cap(cfg)
+    iter_cap = min(e * (max_waves + 2) + 1, 2 ** 31 - 1)
+    e_local = max(1, cfg.e // k_shards)
+    exact = search is afm_lib.search_exact
+    use_far = cfg.greedy_use_far
+    mesh = _MESHES.get(k_shards)
+
+    # --- static local-lattice tables (shard-relative, boundary rows route
+    # through the halo, off-lattice columns are dropped) ---
+    uu = jnp.arange(length, dtype=jnp.int32)
+    rr, ss = uu // side, uu % side
+    # candidate order (up, down, left, right) == receiver direction codes
+    # (0 from-below, 1 from-above, 2 from-right, 3 from-left) — the same
+    # slot convention as core.events / core.cascade._shift4
+    dst_local = jnp.stack([
+        jnp.where(rr > 0, uu - side, -1),
+        jnp.where(rr < rows - 1, uu + side, -1),
+        jnp.where(ss > 0, uu - 1, -1),
+        jnp.where(ss < side - 1, uu + 1, -1),
+    ], axis=1).reshape(-1)                                       # (4L,)
+    dirs4 = jnp.tile(jnp.arange(4, dtype=jnp.int32), (length, 1)).reshape(-1)
+    src4 = jnp.repeat(uu, 4)
+    # halo arrival tables: from-above lands on my row 0 (dir 1 = from
+    # row-1), from-below lands on my last row (dir 0 = from row+1)
+    halo_dst = jnp.concatenate([
+        jnp.arange(side, dtype=jnp.int32),
+        length - side + jnp.arange(side, dtype=jnp.int32)])
+    halo_dir = jnp.concatenate([
+        jnp.full((side,), 1, jnp.int32), jnp.full((side,), 0, jnp.int32)])
+    dn_perm = [(i, (i + 1) % k_shards) for i in range(k_shards)]
+    up_perm = [(i, (i - 1) % k_shards) for i in range(k_shards)]
+
+    def delays(lat_sub, count: int):
+        if ecfg.latency == "exponential":
+            return jax.random.exponential(lat_sub, (count,)) * ecfg.delay
+        if ecfg.latency == "constant":
+            return jnp.full((count,), ecfg.delay, jnp.float32)
+        return jnp.zeros((count,), jnp.float32)
+
+    def split_lat(lat_key):
+        # the stream advances once per draw site whether or not anything
+        # fired — zero/constant draws consume no bits (same discipline as
+        # the single-pool engine)
+        if ecfg.latency == "exponential":
+            return jax.random.split(lat_key)
+        return lat_key, lat_key
+
+    def empty_outbox():
+        zi = jnp.zeros((side,), jnp.int32)
+        zw = jnp.zeros((side, d), jnp.float32)
+        return _Outbox(zi, zw, zi, zw, jnp.zeros((1,), jnp.float32),
+                       jnp.zeros((1,), jnp.int32), jnp.zeros((1,), jnp.int32))
+
+    def enqueue(cy: _Carry, valid, dstv, dirv, wv, tv, genv, cidv) -> _Carry:
+        """Allocate pool slots off the free ring for the valid candidates:
+        the r-th valid candidate takes the r-th free slot; candidates past
+        the free count are dropped and counted."""
+        rank = jnp.cumsum(valid.astype(jnp.int32)) - 1
+        can = valid & (rank < cy.free_n)
+        slot = jnp.where(can, cy.free_ring[(cy.free_head + rank) % m], m)
+        nalloc = jnp.sum(can, dtype=jnp.int32)
+        drop = jnp.sum(valid, dtype=jnp.int32) - nalloc
+        return cy._replace(
+            msg_t=cy.msg_t.at[slot].set(tv, mode="drop"),
+            msg_gen=cy.msg_gen.at[slot].set(genv, mode="drop"),
+            msg_cid=cy.msg_cid.at[slot].set(cidv, mode="drop"),
+            msg_dst=cy.msg_dst.at[slot].set(dstv, mode="drop"),
+            msg_dir=cy.msg_dir.at[slot].set(dirv, mode="drop"),
+            msg_w=cy.msg_w.at[slot].set(wv, mode="drop"),
+            free_head=(cy.free_head + nalloc) % m,
+            free_n=cy.free_n - nalloc,
+            dropped=cy.dropped + drop)
+
+    def fire(cy: _Carry, me, fired, cid, t, gen):
+        """Broadcast-after-theta on the local band: reset counters, enqueue
+        the in-shard neighbour messages, and emit the boundary-row firings
+        as this round's outbox (delivered by the caller's exchange)."""
+        nfired = jnp.sum(fired, dtype=jnp.int32)
+        cy = cy._replace(sizes=cy.sizes.at[cid].add(nfired),
+                         c=jnp.where(fired, 0, cy.c))
+        lat_key, lat_sub = split_lat(cy.lat_key)
+        cy = cy._replace(lat_key=lat_key)
+        valid = fired[src4] & (dst_local >= 0)
+        tv = t + delays(lat_sub, 4 * length)
+        cy = enqueue(cy, valid, dst_local, dirs4, cy.w[src4], tv,
+                     jnp.asarray(gen, jnp.int32), jnp.asarray(cid, jnp.int32))
+        gi = jnp.asarray(gen, jnp.int32)
+        ci = jnp.asarray(cid, jnp.int32)
+        out = _Outbox(
+            up_mask=(fired[:side] & (me > 0)).astype(jnp.int32),
+            up_w=cy.w[:side],
+            dn_mask=(fired[length - side:]
+                     & (me < k_shards - 1)).astype(jnp.int32),
+            dn_w=cy.w[length - side:],
+            t=jnp.asarray(t, jnp.float32).reshape(1),
+            gen=gi.reshape(1), cid=ci.reshape(1))
+        return cy, out
+
+    def exchange(cy: _Carry, out: _Outbox) -> _Carry:
+        """The batched per-round halo: every shard's outbox crosses one
+        partition boundary in each direction (one ppermute pair), and the
+        receiver enqueues what arrives, drawing latency delays from its own
+        stream. Runs unconditionally every round iteration — an idle round
+        exchanges zero masks — because collectives cannot live inside a
+        data-dependent branch."""
+        def shift(x, perm):
+            return jax.lax.ppermute(x, AXIS, perm)
+        # what I receive "from above" is the shard-above's down-outbox
+        a_mask, a_w, a_t, a_gen, a_cid = (
+            shift(out.dn_mask, dn_perm), shift(out.dn_w, dn_perm),
+            shift(out.t, dn_perm), shift(out.gen, dn_perm),
+            shift(out.cid, dn_perm))
+        b_mask, b_w, b_t, b_gen, b_cid = (
+            shift(out.up_mask, up_perm), shift(out.up_w, up_perm),
+            shift(out.t, up_perm), shift(out.gen, up_perm),
+            shift(out.cid, up_perm))
+        # senders zero their boundary masks at the lattice edge, so the
+        # ring wrap (shard K-1 -> 0 and 0 -> K-1) arrives all-invalid
+        valid = jnp.concatenate([a_mask, b_mask]) != 0
+        lat_key, lat_sub = split_lat(cy.lat_key)
+        cy = cy._replace(lat_key=lat_key)
+        tv = jnp.concatenate([jnp.full((side,), a_t[0]),
+                              jnp.full((side,), b_t[0])])
+        tv = tv + delays(lat_sub, 2 * side)
+        genv = jnp.concatenate([jnp.full((side,), a_gen[0]),
+                                jnp.full((side,), b_gen[0])])
+        cidv = jnp.concatenate([jnp.full((side,), a_cid[0]),
+                                jnp.full((side,), b_cid[0])])
+        wv = jnp.concatenate([a_w, b_w], axis=0)
+        return enqueue(cy, valid, halo_dst, halo_dir, wv, tv, genv, cidv)
+
+    def make_round_fns(me, i0, near_g, far_g):
+        """Per-shard round handlers (closures over the shard index, the
+        run's starting sample count, and the replicated link tables — all
+        loop-invariant)."""
+
+        def delivery_round(cy: _Carry, tmin, gmin, cmin, sel):
+            """Deliver one local round: the ≤k_round selected slots are
+            compressed out of the pool, segment-summed per receiver in
+            direction-slot order, and applied as a row scatter — the
+            single-pool delivery math on the local band. Refire gating uses
+            the message generation (``gmin < max_waves``), which is the
+            globally consistent wave depth regardless of how many rounds
+            this shard happened to process."""
+            cid = cmin
+            sched_i = i0 + cid
+            l_c = l_c_fn(sched_i, cfg)
+            p_i = p_fn(sched_i, cfg)
+            ck, sub = jax.random.split(cy.casc_key[cid])
+            bern = (jax.random.uniform(sub, (4, rows, side))
+                    < p_i).reshape(4, length)
+            idx = jnp.nonzero(sel, size=k_round, fill_value=m)[0]
+            ok = idx < m
+            ii = jnp.minimum(idx, m - 1)
+            dsts = jnp.where(ok, cy.msg_dst[ii], length)
+            dirs = jnp.where(ok, cy.msg_dir[ii], 0)
+            ws = cy.msg_w[ii]
+            drive = jnp.where(
+                ok, bern[dirs, jnp.minimum(dsts, length - 1)], False)
+            c = cy.c.at[dsts].add(drive.astype(jnp.int32), mode="drop")
+            n_recv = jnp.zeros((length,), jnp.int32).at[dsts].add(
+                ok.astype(jnp.int32), mode="drop")
+            received = n_recv > 0
+            ridx = jnp.nonzero(received, size=k_round, fill_value=length)[0]
+            pos = jnp.searchsorted(ridx, dsts)
+            acc = jnp.zeros((k_round, d), jnp.float32)
+            for s4 in range(4):                      # direction-slot order
+                acc = acc.at[jnp.where(ok & (dirs == s4), pos,
+                                       k_round)].add(ws, mode="drop")
+            rv = jnp.minimum(ridx, length - 1)
+            nf = n_recv[rv].astype(cy.w.dtype)
+            wr = cy.w[rv]
+            w_rows = wr + l_c * (acc - nf[:, None] * wr)
+            w = cy.w.at[ridx].set(w_rows, mode="drop")
+            nsel = jnp.sum(sel, dtype=jnp.int32)
+            freed_rank = jnp.cumsum(sel.astype(jnp.int32)) - 1
+            tail = jnp.where(sel,
+                             (cy.free_head + cy.free_n + freed_rank) % m, m)
+            cy = cy._replace(
+                w=w, c=c, t=jnp.maximum(cy.t, tmin),
+                clock=jnp.where(received, tmin, cy.clock),
+                nevents=cy.nevents + n_recv,
+                msg_t=jnp.where(sel, jnp.inf, cy.msg_t),
+                free_ring=cy.free_ring.at[tail].set(
+                    jnp.arange(m, dtype=jnp.int32), mode="drop"),
+                free_n=cy.free_n + nsel,
+                casc_key=cy.casc_key.at[cid].set(ck),
+                wcount=cy.wcount.at[cid].set(
+                    jnp.maximum(cy.wcount[cid], gmin)),
+                deliveries=cy.deliveries + nsel,
+                drounds=cy.drounds + 1)
+            new_fired = (c >= theta) & received
+            allowed = new_fired & (gmin < max_waves)
+            return fire(cy, me, allowed, cid, tmin, gmin + 1)
+
+        def greedy(w_loc, sample, jstar, qstar):
+            """Min-reduce greedy descent at B=1: each hop's candidates are
+            evaluated by their owning shard, one argmin-reduce elects the
+            global winner. The loop predicate derives from the collective
+            result, so every shard iterates in lockstep."""
+            lo = me * length
+
+            def gbody(carry):
+                j, q, active, steps = carry
+                cands = (jnp.concatenate([near_g[j], far_g[j]], axis=-1)
+                         if use_far else near_g[j])
+                is_valid = cands >= 0
+                local = is_valid & (cands >= lo) & (cands < lo + length)
+                lidx = jnp.clip(cands - lo, 0, length - 1)
+                dq = jnp.sum((w_loc[lidx] - sample[None, :]) ** 2, axis=-1)
+                dq = jnp.where(local, dq, jnp.inf)
+                kb = jnp.argmin(dq)
+                q_glob, j_glob = _argmin_over_axis(
+                    dq[kb][None], cands[kb][None].astype(jnp.int32), AXIS)
+                improve = active & (q_glob[0] < q)
+                return (jnp.where(improve, j_glob[0], j),
+                        jnp.where(improve, q_glob[0], q),
+                        improve, steps + 1)
+
+            def gcond(carry):
+                return carry[2] & (carry[3] < jnp.int32(n))
+
+            j, q, _, steps = jax.lax.while_loop(
+                gcond, gbody,
+                (jstar, qstar, jnp.bool_(True), jnp.int32(0)))
+            return j, q, steps
+
+        def sample_round(cy: _Carry, sample, step_key, ev):
+            """Deliver the next sample collectively: probe-and-reduce (or
+            exact) search elects the GMU, the owning shard applies Eq. (3),
+            draws the counter drive, and fires on a threshold crossing."""
+            t_s = ev.astype(jnp.float32) * spacing
+            i_now = i0 + ev
+            k_search, k_cascade = jax.random.split(step_key)
+            p_i = p_fn(i_now, cfg)
+            if exact:
+                q = jnp.sum((cy.w - sample[None, :]) ** 2, axis=-1)
+                jl = jnp.argmin(q)
+                q2v, gmu_g = _argmin_over_axis(
+                    q[jl][None], (me * length + jl).astype(jnp.int32)[None],
+                    AXIS)
+                q2v, gmu_g = q2v[0], gmu_g[0]
+                gsteps = jnp.int32(0)
+            else:
+                kp = jax.random.fold_in(k_search, me)
+                probes = jax.random.randint(kp, (e_local,), 0, length)
+                q = jnp.sum((cy.w[probes] - sample[None, :]) ** 2, axis=-1)
+                kb = jnp.argmin(q)
+                qstar, jstar = _argmin_over_axis(
+                    q[kb][None],
+                    (me * length + probes[kb]).astype(jnp.int32)[None], AXIS)
+                gmu_g, q2v, gsteps = greedy(cy.w, sample,
+                                            jstar[0], qstar[0])
+            # Eq. (3) at the owner (index `length` is out-of-band -> drop)
+            lo = me * length
+            mine = (gmu_g >= lo) & (gmu_g < lo + length)
+            lu = jnp.clip(gmu_g - lo, 0, length - 1)
+            owner_at = jnp.where(mine, lu, length)
+            upd = cy.w[lu] + cfg.l_s * (sample - cy.w[lu])
+            w = cy.w.at[owner_at].set(upd, mode="drop")
+            # counter drive: one Bernoulli at the GMU from the owner's
+            # per-shard drive stream
+            k_drive, k_chain = jax.random.split(k_cascade)
+            hit = jax.random.uniform(jax.random.fold_in(k_drive, me),
+                                     ()) < p_i
+            c = cy.c.at[jnp.where(mine & hit, lu, length)].add(
+                1, mode="drop")
+            fired0 = c >= theta
+            cy = cy._replace(
+                w=w, c=c, t=jnp.maximum(cy.t, t_s),
+                clock=cy.clock.at[owner_at].set(t_s, mode="drop"),
+                nevents=cy.nevents.at[owner_at].add(1, mode="drop"),
+                casc_key=cy.casc_key.at[ev].set(
+                    jax.random.fold_in(k_chain, me)),
+                gmu=cy.gmu.at[ev].set(gmu_g),
+                q2=cy.q2.at[ev].set(q2v),
+                greedy=cy.greedy.at[ev].set(gsteps))
+            if max_waves >= 1:
+                cy, out = fire(cy, me, fired0, ev, t_s, jnp.int32(1))
+            else:
+                out = empty_outbox()
+            return exchange(cy, out)
+
+        def drain(cy: _Carry, t_limit):
+            """Run delivery rounds until no shard holds a due message.
+            Each iteration: shards with a due round deliver it (local
+            branch — no collectives inside), then all shards exchange
+            halos unconditionally and re-select."""
+            def select(cy):
+                return single_mod.pool_min_lex(cy.msg_t, cy.msg_gen,
+                                               cy.msg_cid)
+
+            def dcond(st):
+                cy_, (tmin, _g, _c, _s, have), it = st
+                due = have & (tmin <= t_limit)
+                anydue = jax.lax.psum(due.astype(jnp.int32), AXIS) > 0
+                return anydue & (it < iter_cap)
+
+            def dbody(st):
+                cy_, (tmin, g, ci, sel, have), it = st
+                due = have & (tmin <= t_limit)
+                cy_, out = jax.lax.cond(
+                    due,
+                    lambda c: delivery_round(c, tmin, g, ci, sel),
+                    lambda c: (c, empty_outbox()),
+                    cy_)
+                cy_ = exchange(cy_, out)
+                return (cy_, select(cy_), it + 1)
+
+            st = jax.lax.while_loop(dcond, dbody,
+                                    (cy, select(cy), jnp.int32(0)))
+            return st[0]
+
+        return sample_round, drain
+
+    def local_body(w, c, near_g, far_g, i0, samples, step_keys, lat_key):
+        # per-device views: w (rows, side, D); everything else replicated
+        me = jax.lax.axis_index(AXIS)
+        sample_round, drain = make_round_fns(me, i0, near_g, far_g)
+        z = jnp.zeros
+        cy = _Carry(
+            w=w.reshape(length, d), c=c,
+            clock=z((length,), jnp.float32), nevents=z((length,), jnp.int32),
+            msg_t=jnp.full((m,), jnp.inf, jnp.float32),
+            msg_gen=z((m,), jnp.int32), msg_cid=z((m,), jnp.int32),
+            msg_dst=z((m,), jnp.int32), msg_dir=z((m,), jnp.int32),
+            msg_w=z((m, d), jnp.float32),
+            free_ring=jnp.arange(m, dtype=jnp.int32),
+            free_head=jnp.int32(0), free_n=jnp.int32(m),
+            casc_key=z((e, 2), jnp.uint32), wcount=z((e,), jnp.int32),
+            sizes=z((e,), jnp.int32), gmu=z((e,), jnp.int32),
+            q2=z((e,), jnp.float32), greedy=z((e,), jnp.int32),
+            t=jnp.float32(0.0), drounds=jnp.int32(0),
+            deliveries=jnp.int32(0), dropped=jnp.int32(0),
+            lat_key=jax.random.fold_in(lat_key, me))
+
+        def sbody(cy, xs):
+            sample, key, ev = xs
+            cy = drain(cy, ev.astype(jnp.float32) * spacing)
+            return sample_round(cy, sample, key, ev), None
+
+        cy, _ = jax.lax.scan(
+            sbody, cy, (samples, step_keys, jnp.arange(e, dtype=jnp.int32)))
+        cy = drain(cy, jnp.inf)
+        stranded = m - cy.free_n       # nonzero only on an iter_cap trip
+        return (cy.w.reshape(rows, side, d), cy.c, cy.clock, cy.nevents,
+                jax.lax.psum(cy.sizes, AXIS),
+                jax.lax.pmax(cy.wcount, AXIS),
+                cy.gmu, cy.q2, cy.greedy,
+                jnp.int32(e) + jax.lax.psum(cy.drounds, AXIS),
+                jax.lax.psum(cy.deliveries, AXIS),
+                jax.lax.psum(cy.dropped + stranded, AXIS),
+                jax.lax.pmax(cy.t, AXIS))
+
+    sharded = P(AXIS)
+    repl = P()
+    mapped = compat.shard_map(
+        local_body, mesh=mesh,
+        in_specs=(sharded, sharded, repl, repl, repl, repl, repl, repl),
+        out_specs=(sharded, sharded, sharded, sharded,
+                   repl, repl, repl, repl, repl,
+                   repl, repl, repl, repl))
+
+    def go(state, samples, step_keys, lat_key):
+        (w, c, clock, nevents, sizes, waves, gmu, q2, greedy,
+         rounds, deliveries, dropped, t_end) = mapped(
+            state.w.reshape(side, side, d),
+            jnp.asarray(state.c, jnp.int32),
+            state.near, state.far, jnp.asarray(state.i, jnp.int32),
+            samples, step_keys, jnp.asarray(lat_key, jnp.uint32))
+        final = afm_lib.AFMState(
+            w=w.reshape(n, d), c=c, far=state.far, near=state.near,
+            i=jnp.asarray(state.i, jnp.int32) + jnp.int32(e))
+        aux = afm_lib.StepAux(
+            gmu=gmu[:, None], q2=q2[:, None], cascade_size=sizes,
+            waves=waves, greedy_steps=greedy[:, None])
+        report = events_lib.EventReport(
+            rounds=rounds, samples=jnp.int32(e), deliveries=deliveries,
+            dropped=dropped, t_end=t_end, clock=clock, nevents=nevents)
+        return final, aux, report
+
+    return go

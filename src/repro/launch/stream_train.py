@@ -209,6 +209,10 @@ def main():
                     help="async backend: 'auto' fuses zero-latency chunks "
                          "into the reference scan, 'event' always runs the "
                          "discrete-event simulation")
+    ap.add_argument("--shards", type=int, default=1,
+                    help="async backend: partition the event engine over "
+                         "this many devices (placement='mesh'; must divide "
+                         "--side)")
     ap.add_argument("--search", default=None,
                     choices=(None, "heuristic", "exact"))
     ap.add_argument("--e-factor", type=float, default=0.5)
@@ -228,10 +232,12 @@ def main():
     if args.backend == "async":
         opts.update(latency=args.latency, delay=args.delay,
                     engine=args.engine, lat_seed=args.lat_seed)
+        if args.shards > 1:
+            opts.update(placement="mesh", shards=args.shards)
     elif (args.latency != "zero" or args.delay or args.engine != "auto"
-          or args.lat_seed):
-        raise SystemExit("--latency/--delay/--engine/--lat-seed only apply "
-                         "to the async backend")
+          or args.lat_seed or args.shards > 1):
+        raise SystemExit("--latency/--delay/--engine/--lat-seed/--shards "
+                         "only apply to the async backend")
     if args.search:
         if args.backend == "sharded":
             raise SystemExit("--search is not supported by the sharded "

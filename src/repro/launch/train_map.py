@@ -20,6 +20,11 @@ reports map quality + classification metrics:
     PYTHONPATH=src python -m repro.launch.train_map --dataset satimage \
         --backend async --latency exponential --delay 0.5
 
+    # the same event engine partitioned over a device mesh (row bands of
+    # the lattice, per-shard pools, batched halo exchange):
+    PYTHONPATH=src python -m repro.launch.train_map --dataset satimage \
+        --backend async --shards 2
+
     # persist the fitted map for repro.launch.serve_map:
     PYTHONPATH=src python -m repro.launch.train_map --dataset satimage \
         --save-artifact /tmp/satimage-map           # one artifact dir
@@ -61,9 +66,14 @@ def build_backend_options(args) -> dict:
     if args.backend == "async":
         opts.update(latency=args.latency, delay=args.delay,
                     lat_seed=args.lat_seed)
+        if args.shards > 1:
+            opts.update(placement="mesh", shards=args.shards)
     elif args.latency != "zero" or args.delay or args.lat_seed:
         raise SystemExit("--latency/--delay/--lat-seed only apply to the "
                          "async backend")
+    elif args.shards > 1:
+        raise SystemExit("--shards only applies to the async backend "
+                         "(sharded uses --mesh)")
     if args.search:
         opts["search"] = args.search
     return opts
@@ -93,6 +103,11 @@ def main():
     ap.add_argument("--lat-seed", type=int, default=0,
                     help="async backend: seed of the exponential-latency "
                          "stream (independent of --seed)")
+    ap.add_argument("--shards", type=int, default=1,
+                    help="async backend: partition the event engine over "
+                         "this many devices (placement='mesh'; must divide "
+                         "--side; on CPU export XLA_FLAGS="
+                         "--xla_force_host_platform_device_count=K first)")
     ap.add_argument("--search", default=None,
                     choices=(None, "heuristic", "exact"),
                     help="override the backend's search stage")

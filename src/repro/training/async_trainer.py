@@ -33,6 +33,7 @@ import jax.numpy as jnp
 from repro.api import backends as backends_lib
 from repro.core import afm
 from repro.core import events as events_lib
+from repro.core import placement as placement_lib
 from repro.core import search as search_lib
 from repro.core.afm import AFMConfig, AFMState
 from repro.core.events import EventConfig, EventReport  # re-export  # noqa: F401
@@ -71,9 +72,18 @@ class AsyncBackend:
                  it to measure the engine itself; results are bitwise
                  identical either way).
       search:    'heuristic' (paper relay race) or 'exact' (full BMU).
+      placement: 'single' (one pool, one device; default) or 'mesh' —
+                 partition units and the message pool across a
+                 ``shard_map`` device mesh (``repro.core.placement``).
+      shards:    device count for ``placement='mesh'``; must divide
+                 ``cfg.side`` and not exceed the visible devices.
+                 ``shards=1`` runs the identical single-pool engine.
       lat_seed:  seed of the exponential-latency stream (kept separate from
                  the training keys so zero/constant runs stay bitwise
-                 reproducible against ``reference``).
+                 reproducible against ``reference``). Under a multi-shard
+                 placement each shard folds its shard id into this stream —
+                 same ``(lat_seed, shards)`` replays bitwise (see
+                 ``run_events``).
       donate_run: donate the input state's buffers to each ``run()`` call
                  (saves a dense-state copy per run on accelerators; no-op
                  on CPU). Opt-in because it changes ``run``'s contract to
@@ -91,6 +101,7 @@ class AsyncBackend:
                  delay: float = 0.0, sample_spacing: float = 1.0,
                  capacity: int | None = None, max_rounds: int | None = None,
                  engine: str = "auto", search: str = "heuristic",
+                 placement: str = "single", shards: int = 1,
                  lat_seed: int = 0, donate_run: bool = False):
         if search not in _SEARCHES:
             raise ValueError(f"search must be one of {sorted(_SEARCHES)}, "
@@ -100,6 +111,18 @@ class AsyncBackend:
                                 sample_spacing=sample_spacing,
                                 capacity=capacity, max_rounds=max_rounds,
                                 engine=engine)
+        # fail fast: a bad placement spec or an indivisible shard count
+        # should surface at construction, not on the first training call
+        self.placement = placement_lib.resolve_placement(
+            placement, shards=int(shards))
+        if self.placement.shards > 1:
+            if cfg.side % self.placement.shards:
+                raise ValueError(
+                    f"side={cfg.side} must divide into shards="
+                    f"{self.placement.shards} contiguous row bands")
+            if max_rounds is not None:
+                raise ValueError("max_rounds is single-pool only; drop it "
+                                 "or use placement='single'")
         self.search = _SEARCHES[search]
         self._lat_key = jax.random.PRNGKey(lat_seed)
         self.last_report: EventReport | None = None
@@ -123,7 +146,8 @@ class AsyncBackend:
         step_keys = jax.random.split(key, samples.shape[0])
         state, aux, report = events_lib.run_events(
             state, samples, step_keys, self.cfg, self.ecfg,
-            search=self.search, lat_key=self._next_lat_key())
+            search=self.search, lat_key=self._next_lat_key(),
+            placement=self.placement)
         self.last_report = report
         return state, aux
 
@@ -141,7 +165,7 @@ class AsyncBackend:
         state, aux, report = events_lib.run_events(
             state, samples, step_keys, self.cfg, self.ecfg,
             search=self.search, lat_key=self._next_lat_key(),
-            donate=self._donate_run)
+            donate=self._donate_run, placement=self.placement)
         jax.block_until_ready(state.w)
         self.last_report = report
         return state, aux

@@ -1,20 +1,39 @@
-"""Kernel micro-bench: BMU search kernel vs pure-jnp oracle.
+"""Kernel bench: the fused training megakernel vs the staged kernel path.
 
-On this CPU container the Pallas kernel runs in interpret mode (Python), so
-wall time is NOT indicative of TPU performance; we report the oracle's XLA
-wall time (the production CPU path) plus correctness across the paper's
-shapes, and the kernel's VMEM working-set / arithmetic-intensity derivation
-used for the TPU roofline.
+Two measurements share this module (DESIGN.md §11):
+
+- **training-step throughput** — best-of-5 warm ``TopoMap.fit`` wall time
+  through the ``pallas`` backend with ``kernel='staged'`` vs
+  ``kernel='fused'``, on both the interpret path (the real kernel bodies,
+  the path CI exercises) and the jnp-oracle path (the production CPU
+  path). The two kernels are bitwise-interchangeable on the exact tier, so
+  the ratio is pure execution cost; ``--assert-fused-floor`` gates it.
+- **BMU micro-bench** — the legacy oracle-vs-interpret-kernel correctness
+  and arithmetic-intensity rows across the paper's shapes.
+
+On this CPU container the Pallas kernels run in interpret mode (traced to
+XLA), so wall time is NOT indicative of TPU performance; the analytic
+roofline rows (``roofline_rows`` in the saved payload, ingested by
+``benchmarks.roofline``) carry the TPU projection: the megakernel's
+one-HBM-pass-over-W memory term vs the staged path's ``1 + 2*waves``
+passes, with the wave count measured from the real fit.
 """
 from __future__ import annotations
 
+import argparse
+import json
 import time
 
 import jax
 import numpy as np
 
 from benchmarks import common
+from repro.api import AFMConfig, TopoMap
 from repro.kernels.bmu import ops as bmu_ops, ref as bmu_ref
+
+# TPU v5e per-chip constants — the same roofline model as repro.launch.dryrun
+PEAK_FLOPS = 197e12          # bf16 FLOP/s
+HBM_BW = 819e9               # bytes/s
 
 
 def _time(fn, *args, iters=5):
@@ -26,7 +45,9 @@ def _time(fn, *args, iters=5):
     return (time.time() - t0) / iters * 1e6  # us
 
 
-def run(quick: bool = True):
+def _bmu_micro_rows(quick: bool):
+    """Legacy BMU micro-bench: oracle wall time + interpret-kernel parity +
+    the kernel's arithmetic-intensity derivation for the TPU roofline."""
     rows = []
     shapes = [(900, 64, 784), (1156, 256, 784), (2500, 64, 36)]
     if not quick:
@@ -48,9 +69,149 @@ def run(quick: bool = True):
                      "tpu_bound": "compute" if intensity > 240 else "memory"})
         print(f"  N={n:6d} B={b:4d} D={d:4d} oracle={us_ref:9.1f}us "
               f"match={ok} AI={intensity:.1f}", flush=True)
-    common.save("kernel_bench", {"rows": rows})
-    return rows, {"all_match": all(r["match"] for r in rows)}
+    return rows
+
+
+def _timed_fit(cfg: AFMConfig, data, options: dict, reps: int = 5):
+    """Warm-compile one ``pallas``-backend fit, then best-of-``reps`` wall
+    time on the cached compiled run (``async_bench``'s timing discipline)."""
+    key = jax.random.PRNGKey(7)
+    tm = TopoMap(cfg, backend="pallas", backend_options=options)
+    tm.fit(data, key=key)                    # compile + warm
+    best = float("inf")
+    for _ in range(reps):
+        t0 = time.perf_counter()
+        tm.fit(data, key=key)
+        best = min(best, time.perf_counter() - t0)
+    return tm, best
+
+
+def _bits(x) -> np.ndarray:
+    return np.asarray(x, np.float32).view(np.uint32)
+
+
+def _train_rows(cfg: AFMConfig, data, reps: int):
+    """staged-vs-fused fit throughput on both kernel paths; the exact tier
+    is bitwise-interchangeable, so each pair also cross-checks the final
+    weights bit-for-bit (NaN-safe uint32 view)."""
+    rows = []
+    waves_mean = 0.0
+    for path, flags in [("interpret", dict(use_pallas=True, interpret=True)),
+                        ("oracle", dict(use_pallas=False, interpret=False))]:
+        fits = {}
+        for kernel in ("staged", "fused"):
+            tm, best = _timed_fit(cfg, data, dict(flags, kernel=kernel),
+                                  reps=reps)
+            fits[kernel] = tm
+            sps = cfg.num_steps * cfg.batch / best
+            rows.append({"path": path, "kernel": kernel,
+                         "best_s": round(best, 4),
+                         "samples_per_s": round(sps, 1)})
+            print(f"  {path:9s} {kernel:6s} best={best:7.4f}s "
+                  f"{sps:9.1f} samples/s", flush=True)
+        bitwise = bool(np.array_equal(_bits(fits["staged"].state_.w),
+                                      _bits(fits["fused"].state_.w)))
+        for r in rows[-2:]:
+            r["bitwise_equal"] = bitwise
+        waves_mean = float(np.mean(np.asarray(fits["staged"].fit_aux_.waves)))
+    return rows, waves_mean
+
+
+def _roofline_rows(waves: float, shapes) -> list:
+    """Analytic TPU roofline rows for the training step (per event), in the
+    ``benchmarks.roofline`` row schema. Both kernels execute the same FLOPs
+    (search cross term + the wave loop's shift-sum/update); they differ only
+    in HBM traffic over the (N, D) weight matrix. Staged: one search read
+    plus three passes per wave — the cascade kernel and the jnp weight merge
+    are separate HLOs, so each wave re-reads W for the fired shift-sum,
+    re-reads it for the merge, and writes it back. Fused: exactly one read
+    and one write per step, wave count notwithstanding — the wave loop runs
+    out of VMEM (the one-HBM-pass argument, DESIGN.md §11)."""
+    rows = []
+    for n, d in shapes:
+        flops = 2.0 * n * d + 6.0 * d + waves * 6.0 * n * d
+        passes = {"afm-staged": 1.0 + 3.0 * waves, "afm-fused-megakernel": 2.0}
+        for arch, np_ in passes.items():
+            bytes_hbm = 4.0 * (np_ * n * d + d + n)
+            t_c, t_m = flops / PEAK_FLOPS, bytes_hbm / HBM_BW
+            rows.append({
+                "arch": arch, "shape": f"{n}x{d}", "mesh": "1chip",
+                "waves_per_step": round(waves, 2),
+                "flops_per_step": flops, "bytes_per_step": bytes_hbm,
+                "roofline": {
+                    "compute_s": t_c, "memory_s": t_m, "collective_s": 0.0,
+                    "bottleneck": "compute" if t_c >= t_m else "memory",
+                },
+                "useful_flops_ratio": 1.0,
+            })
+    return rows
+
+
+def run(quick: bool = True):
+    print(" BMU micro-bench (oracle wall time, interpret-kernel parity):",
+          flush=True)
+    bmu_rows = _bmu_micro_rows(quick)
+
+    # heavy-cascade training config: low theta + slow decay keep the wave
+    # loop busy, so the fused kernel's wave fusion is actually on the clock
+    side = 10 if quick else 16
+    cfg = AFMConfig(side=side, dim=16, theta=3, c_m=0.3, c_d=50.0,
+                    i_max=(960 if quick else 4096), e_factor=0.5, batch=1)
+    data = np.asarray(
+        jax.random.normal(jax.random.PRNGKey(3), (256, cfg.dim)))
+    print(f" training-step bench: N={cfg.n_units} D={cfg.dim} "
+          f"events={cfg.num_steps} (staged vs fused):", flush=True)
+    train_rows, waves = _train_rows(cfg, data, reps=5)
+
+    roofline_rows = _roofline_rows(waves, [(cfg.n_units, cfg.dim),
+                                           (900, 784), (2500, 36)])
+
+    sps = {(r["path"], r["kernel"]): r["samples_per_s"] for r in train_rows}
+    derived = {
+        "all_match": all(r["match"] for r in bmu_rows),
+        "bitwise": all(r["bitwise_equal"] for r in train_rows),
+        "waves_per_step": round(waves, 2),
+        "fused_vs_staged_interpret": round(
+            sps[("interpret", "fused")] / sps[("interpret", "staged")], 3),
+        "fused_vs_staged_oracle": round(
+            sps[("oracle", "fused")] / sps[("oracle", "staged")], 3),
+        "fused_interpret_samples_per_s": sps[("interpret", "fused")],
+        "staged_interpret_samples_per_s": sps[("interpret", "staged")],
+    }
+    results = {"rows": bmu_rows, "train": train_rows,
+               "roofline_rows": roofline_rows}
+    common.save("kernel_bench", results)
+    return results, derived
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--full", action="store_true",
+                    help="bigger map + full shape sweep")
+    ap.add_argument("--json-out", default=None, metavar="PATH",
+                    help="write {'results', 'derived'} JSON to PATH")
+    ap.add_argument("--assert-fused-floor", type=float, default=None,
+                    metavar="RATIO",
+                    help="fail unless fused >= RATIO x staged samples/s on "
+                         "the interpret path (the CI perf-smoke gate)")
+    args = ap.parse_args()
+    results, derived = run(quick=not args.full)
+    print("derived:", derived)
+    if args.json_out:
+        with open(args.json_out, "w") as f:
+            json.dump({"results": results, "derived": derived}, f, indent=1)
+        print(f"wrote {args.json_out}")
+    if not derived["all_match"] or not derived["bitwise"]:
+        raise SystemExit(f"kernel parity FAILED: {derived}")
+    if args.assert_fused_floor is not None:
+        ratio = derived["fused_vs_staged_interpret"]
+        if ratio < args.assert_fused_floor:
+            raise SystemExit(
+                f"perf smoke FAILED: fused/staged interpret throughput "
+                f"{ratio:.3f}x < floor {args.assert_fused_floor}x")
+        print(f"perf smoke OK: fused/staged {ratio:.3f}x >= "
+              f"{args.assert_fused_floor}x")
 
 
 if __name__ == "__main__":
-    run()
+    main()

@@ -1,6 +1,12 @@
-"""§Roofline report: aggregate results/dryrun/*.json into the per-(arch,
-shape, mesh) three-term roofline table (compute / memory / collective),
-dominant bottleneck, and MODEL_FLOPS / HLO_FLOPs utilisation ratio."""
+"""§Roofline report: aggregate the per-(arch, shape, mesh) three-term
+roofline table (compute / memory / collective), dominant bottleneck, and
+MODEL_FLOPS / HLO_FLOPs utilisation ratio.
+
+Two row sources share the schema: legacy compile-and-measure artifacts under
+``results/dryrun/*.json``, and the training-megakernel rows that
+``benchmarks.kernel_bench`` derives analytically (fused one-HBM-pass vs
+staged multi-pass, with the wave count measured from a real fit) into
+``results/bench/kernel_bench.json`` under ``"roofline_rows"``."""
 from __future__ import annotations
 
 import glob
@@ -8,6 +14,14 @@ import json
 import os
 
 DRYRUN_DIR = os.path.join(os.path.dirname(__file__), "..", "results", "dryrun")
+KERNEL_BENCH = os.path.join(os.path.dirname(__file__), "..", "results",
+                            "bench", "kernel_bench.json")
+
+
+def _keep(d, mesh, tag) -> bool:
+    if mesh and d["mesh"] != mesh:
+        return False
+    return tag == "ANY" or d.get("tag") == tag
 
 
 def load_all(mesh: str | None = None, tag: object = "ANY"):
@@ -15,11 +29,15 @@ def load_all(mesh: str | None = None, tag: object = "ANY"):
     for path in sorted(glob.glob(os.path.join(DRYRUN_DIR, "*.json"))):
         with open(path) as f:
             d = json.load(f)
-        if mesh and d["mesh"] != mesh:
-            continue
-        if tag != "ANY" and d.get("tag") != tag:
-            continue
-        rows.append(d)
+        if _keep(d, mesh, tag):
+            rows.append(d)
+    # megakernel dry-run rows ride in the kernel benchmark's artifact
+    if os.path.exists(KERNEL_BENCH):
+        with open(KERNEL_BENCH) as f:
+            payload = json.load(f)
+        for d in payload.get("roofline_rows", []):
+            if _keep(d, mesh, tag):
+                rows.append(d)
     return rows
 
 

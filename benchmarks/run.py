@@ -26,7 +26,7 @@ MODULES = [
     ("table2_classification", "benchmarks.table2_classification"),
     ("table3_cascade_stats", "benchmarks.table3_cascade_stats"),
     ("complexity", "benchmarks.complexity"),
-    ("kernel_bench", "benchmarks.kernel_bench"),
+    ("kernels_bench", "benchmarks.kernel_bench"),
     ("serving_bench", "benchmarks.serving_bench"),
     ("async_bench", "benchmarks.async_bench"),
     ("roofline", "benchmarks.roofline"),

@@ -42,6 +42,7 @@ from repro.core import search as search_lib
 from repro.core.afm import AFMConfig, AFMState
 from repro.kernels.bmu import ops as bmu_ops
 from repro.kernels.cascade import ops as cascade_ops
+from repro.kernels.fused import ops as fused_ops
 from repro.sharding import compat
 
 BACKENDS: dict[str, type] = {}
@@ -216,16 +217,46 @@ class PallasBackend(_DenseBackend):
     the real kernel bodies in the Pallas interpreter (slow; used by the parity
     tests). On TPU both default to the compiled kernels. ``search='heuristic'``
     keeps the paper's relay race and uses the kernel only for the cascade.
+
+    ``kernel`` picks the training-step execution (DESIGN.md §11):
+
+    - ``'staged'`` (default) — BMU kernel for search, cascade kernel per
+      wave, the jnp adapt stage in between (three HBM passes over W).
+    - ``'fused'`` — the ``kernels.fused`` training megakernel: search +
+      adapt + block-unrolled wave loop in one Pallas program, one HBM
+      read/write of W per step. Bitwise-equal to ``'staged'`` on the exact
+      tier (property-tested).
+
+    ``precision`` picks the distance tier for the exact-BMU search:
+    ``'exact'`` (f32, bitwise) or ``'bf16'`` (tolerance tier — bf16 cross
+    term + exact-f32 polish; training only). The ``bmu()`` inference method
+    always stays on the exact tier regardless — the tolerance tier must be
+    chosen, never inherited.
     """
 
     def __init__(self, cfg: AFMConfig, *, search: str = "exact",
-                 use_pallas: bool | None = None, interpret: bool | None = None):
+                 use_pallas: bool | None = None, interpret: bool | None = None,
+                 kernel: str = "staged", precision: str = "exact"):
+        if kernel not in ("staged", "fused"):
+            raise ValueError(f"kernel must be 'staged' or 'fused', got "
+                             f"{kernel!r}")
+        if precision not in bmu_ops.PRECISIONS:
+            raise ValueError(f"precision must be one of "
+                             f"{bmu_ops.PRECISIONS}, got {precision!r}")
         use_pallas, interpret = bmu_ops.resolve_flags(use_pallas, interpret)
         self.cfg = cfg
         self._jit_step = None
         self._jit_run = None
         self.use_pallas = use_pallas
         self.interpret = interpret
+        self.kernel = kernel
+        self.precision = precision
+        if kernel == "fused":
+            base = _stages_for(search)        # validates the search name
+            self.stages = base._replace(fused=fused_ops.make_fused_stage(
+                search=search, precision=precision, use_pallas=use_pallas,
+                interpret=interpret))
+            return
         wave_fn = functools.partial(cascade_ops.cascade_wave,
                                     use_pallas=use_pallas, interpret=interpret)
         self.stages = _stages_for(search, cascade_wave_fn=wave_fn)
@@ -234,7 +265,9 @@ class PallasBackend(_DenseBackend):
 
     def _search_stage(self, state, samples, key, cfg):
         del key, cfg
-        idx, q2 = self.bmu(state.w, samples)
+        idx, q2 = bmu_ops.bmu(state.w, samples, use_pallas=self.use_pallas,
+                              interpret=self.interpret,
+                              precision=self.precision)
         zeros = jnp.zeros(samples.shape[:1], jnp.int32)
         return search_lib.SearchResult(idx.astype(jnp.int32), q2, zeros, zeros)
 

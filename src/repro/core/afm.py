@@ -128,10 +128,18 @@ def init(key: jax.Array, cfg: AFMConfig,
 
 
 class Stages(NamedTuple):
-    """The three injectable phases of one AFM step (DESIGN.md §2)."""
+    """The three injectable phases of one AFM step (DESIGN.md §2), plus an
+    optional whole-step fusion seam: when ``fused`` is set, ``_step``
+    delegates the entire step to it — ``(state, samples, key, cfg) ->
+    (AFMState, StepAux)`` — and the three staged callables are bypassed
+    (the fused Pallas megakernel, ``repro.kernels.fused``, plugs in here;
+    DESIGN.md §11). A fused implementation owns the step's key split and
+    schedule evaluation and must reproduce the staged contract (bitwise on
+    the exact tier)."""
     search: Callable    # (state, samples, key, cfg) -> SearchResult
     adapt: Callable     # (state, samples, gmu, cfg) -> (w (N,D), counts (N,))
     cascade: Callable   # (w, c, counts, l_c, p, key, cfg) -> CascadeResult
+    fused: Callable | None = None  # (state, samples, key, cfg) -> (state, aux)
 
 
 def search_heuristic(state: AFMState, samples: jnp.ndarray, key: jax.Array,
@@ -152,10 +160,10 @@ def search_exact(state: AFMState, samples: jnp.ndarray, key: jax.Array,
     return search_lib.SearchResult(gmu, q2, zeros, zeros)
 
 
-def adapt_gmu(state: AFMState, samples: jnp.ndarray, gmu: jnp.ndarray,
-              cfg: AFMConfig) -> tuple[jnp.ndarray, jnp.ndarray]:
-    """Eq. (3) — GMU adaptation; conflicting GMUs merge by averaging the
-    per-sample targets (B=1: exactly Eq. 3). Returns (w, per-unit counts)."""
+def adapt_merge(w: jnp.ndarray, samples: jnp.ndarray, gmu: jnp.ndarray,
+                cfg: AFMConfig) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Eq. (3) on a flat (N, D) weight matrix — the state-free body of
+    ``adapt_gmu`` (the fused kernel's oracle shares it op-for-op)."""
     n = cfg.n_units
     b = samples.shape[0]
     ones = jnp.ones((b,), jnp.float32)
@@ -163,8 +171,15 @@ def adapt_gmu(state: AFMState, samples: jnp.ndarray, gmu: jnp.ndarray,
     target_sum = jnp.zeros((n, cfg.dim), jnp.float32).at[gmu].add(samples)
     hit = counts > 0
     mean = target_sum / jnp.maximum(counts, 1.0)[:, None]
-    mean_target = jnp.where(hit[:, None], mean, state.w)
-    return state.w + cfg.l_s * (mean_target - state.w), counts
+    mean_target = jnp.where(hit[:, None], mean, w)
+    return w + cfg.l_s * (mean_target - w), counts
+
+
+def adapt_gmu(state: AFMState, samples: jnp.ndarray, gmu: jnp.ndarray,
+              cfg: AFMConfig) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Eq. (3) — GMU adaptation; conflicting GMUs merge by averaging the
+    per-sample targets (B=1: exactly Eq. 3). Returns (w, per-unit counts)."""
+    return adapt_merge(state.w, samples, gmu, cfg)
 
 
 def cascade_default(w: jnp.ndarray, c: jnp.ndarray, counts: jnp.ndarray,
@@ -189,6 +204,8 @@ def _step(state: AFMState, samples: jnp.ndarray, key: jax.Array,
           cfg: AFMConfig, stages: Stages = DEFAULT_STAGES
           ) -> tuple[AFMState, StepAux]:
     """Shared body for faithful (B=1) and batched (B>1) steps."""
+    if stages.fused is not None:
+        return stages.fused(state, samples, key, cfg)
     n = cfg.n_units
     b = samples.shape[0]
     k_search, k_cascade = jax.random.split(key)

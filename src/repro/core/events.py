@@ -73,6 +73,7 @@ from repro.core.placement import single as placement_single
 
 LATENCIES = ("zero", "constant", "exponential")
 ENGINES = ("auto", "event")
+KERNELS = ("staged", "fused", "fused-interpret")
 
 # The pool-min selectors, packing rule, and +inf sentinel moved behind the
 # placement seam (``repro.core.placement.single``); these aliases keep the
@@ -115,6 +116,15 @@ class EventConfig:
                     runs to the fused reference scan; 'event' always runs the
                     discrete-event simulation (benchmarks and the parity
                     suite use it to measure/pin the engine itself).
+    kernel:         step execution inside the zero-latency fast path —
+                    'staged' (default: the inline jnp scan), 'fused' (the
+                    ``kernels.fused`` training megakernel: compiled on TPU,
+                    its jnp oracle elsewhere), or 'fused-interpret' (the
+                    real megakernel body in the Pallas interpreter — slow;
+                    the golden/CI parity runs). All three are
+                    bitwise-identical (DESIGN.md §11); a fused kernel
+                    requires the fast-path regime (latency='zero',
+                    engine='auto', max_rounds=None, single pool).
     """
     latency: str = "zero"
     delay: float = 0.0
@@ -122,6 +132,7 @@ class EventConfig:
     capacity: int | None = None
     max_rounds: int | None = None
     engine: str = "auto"
+    kernel: str = "staged"
 
     def __post_init__(self):
         if self.latency not in LATENCIES:
@@ -130,6 +141,15 @@ class EventConfig:
         if self.engine not in ENGINES:
             raise ValueError(f"engine must be one of {ENGINES}, got "
                              f"{self.engine!r}")
+        if self.kernel not in KERNELS:
+            raise ValueError(f"kernel must be one of {KERNELS}, got "
+                             f"{self.kernel!r}")
+        if self.kernel != "staged" and (
+                self.latency != "zero" or self.engine != "auto"
+                or self.max_rounds is not None):
+            raise ValueError(
+                "kernel='fused' runs only in the zero-latency fast-path "
+                "regime: latency='zero', engine='auto', max_rounds=None")
         if self.delay < 0:
             raise ValueError(f"delay must be >= 0, got {self.delay}")
         if self.latency == "zero" and self.delay:
@@ -493,16 +513,49 @@ def _make_fused_zero(cfg: AFMConfig, ecfg: EventConfig, num_events: int,
     """Zero-latency fast path: the ``reference`` backend's fused step scan
     (identical op sequence, so bitwise-identical weights/counters/aux) plus
     an accounting sidecar that reproduces the engine's ``EventReport``
-    exactly — rounds, per-unit clocks/event counts, delivery totals."""
+    exactly — rounds, per-unit clocks/event counts, delivery totals.
+
+    ``ecfg.kernel`` swaps the per-step body: 'staged' keeps the inline jnp
+    scan below; 'fused' / 'fused-interpret' delegate the post-search step to
+    the ``kernels.fused`` megakernel (one HBM pass over W), whose receive
+    sidecar and tail loop reproduce the same accounting bitwise."""
+    from repro.kernels.bmu import ops as bmu_ops
+    from repro.kernels.fused import ops as fused_ops
+
     n, d, side, theta = cfg.n_units, cfg.dim, cfg.side, cfg.theta
     _, _, max_waves, _ = _resolve(cfg, ecfg, num_events)
     e = num_events
     spacing = ecfg.sample_spacing
+    if ecfg.kernel == "fused-interpret":
+        kflags = (True, True)             # real kernel body, interpreted
+    else:
+        kflags = bmu_ops.resolve_flags(None, None)
 
     def go(state: AFMState, samples, step_keys, lat_key):
         del lat_key                       # zero latency consumes no delays
         far, near = state.far, state.near
         i0 = jnp.asarray(state.i, jnp.int32)
+
+        def body_fused(carry, xs):
+            # megakernel step: search stays external (the engine's per-event
+            # relay race / exact pass), the kernel fuses adapt + drive +
+            # waves; ``recv0=nev`` threads the receipt sidecar through it
+            w, c, nev, clock = carry
+            sample, key, ev = xs
+            i = i0 + ev
+            t_s = ev.astype(jnp.float32) * spacing
+            k_search, k_cascade = jax.random.split(key)
+            st = AFMState(w, c, far, near, i)
+            res = search(st, sample[None, :], k_search, cfg)
+            parts = fused_ops.fused_step_parts(
+                w, c, sample[None, :], k_cascade, cfg,
+                l_c=l_c_fn(i, cfg), p_i=p_fn(i, cfg), search_result=res,
+                use_pallas=kflags[0], interpret=kflags[1], recv0=nev)
+            clock = jnp.where(parts.recv != nev, t_s, clock)
+            carry = (parts.w, parts.c, parts.recv, clock)
+            ys = (res.gmu[0], res.q2[0], res.greedy_steps[0],
+                  parts.size, parts.waves)
+            return carry, ys
 
         def body(carry, xs):
             # per-unit accounting stays out of the per-step path: the
@@ -561,8 +614,9 @@ def _make_fused_zero(cfg: AFMConfig, ecfg: EventConfig, num_events: int,
         carry0 = (state.w, jnp.asarray(state.c, jnp.int32),
                   jnp.zeros((n,), jnp.int32), jnp.zeros((n,), jnp.float32))
         xs = (samples, step_keys, jnp.arange(e, dtype=jnp.int32))
+        step = body if ecfg.kernel == "staged" else body_fused
         (w, c, nev, clock), (gmu, q2, greedy, sizes, waves) = \
-            jax.lax.scan(body, carry0, xs)
+            jax.lax.scan(step, carry0, xs)
         deliv = jnp.sum(nev)            # wave receipts only, pre gmu fold-in
         final = AFMState(w, c, far, near, i0 + jnp.int32(e))
         aux = afm_lib.StepAux(

@@ -192,6 +192,10 @@ class MeshPlacement:
                 "max_rounds (the budgeted runner) is single-pool only; a "
                 "global round budget has no per-shard meaning under "
                 "placement='mesh'")
+        if ecfg.kernel != "staged":
+            raise ValueError(
+                "kernel='fused' is single-pool only (the megakernel holds "
+                "the whole lattice in one program); use shards=1")
         return _build_mesh_runner(self, cfg, ecfg, num_events,
                                   search, p_fn, l_c_fn)
 

@@ -141,6 +141,13 @@ class SinglePool:
         if events._zero_fast_ok(cfg, ecfg, num_events):
             return events._make_fused_zero(cfg, ecfg, num_events,
                                            search, p_fn, l_c_fn)
+        if ecfg.kernel != "staged":
+            # EventConfig validation already pins latency/engine/max_rounds;
+            # the only way to land here is an explicit undersized capacity
+            raise ValueError(
+                "kernel='fused' needs the zero-latency fast path, but "
+                "capacity < 4*N disqualifies it (a fire's 4N messages must "
+                "fit the pool); raise capacity or drop the kernel override")
         if ecfg.max_rounds is None:
             return events._make_engine(cfg, ecfg, num_events,
                                        search, p_fn, l_c_fn, placement=self)

@@ -23,7 +23,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
 
-def _bmu_kernel(w_ref, s_ref, w2_ref, min_ref, idx_ref, *, block_n: int):
+def _bmu_kernel(w_ref, s_ref, w2_ref, min_ref, idx_ref, *, block_n: int,
+                precision: str = "exact"):
     j = pl.program_id(1)
 
     @pl.when(j == 0)
@@ -33,6 +34,11 @@ def _bmu_kernel(w_ref, s_ref, w2_ref, min_ref, idx_ref, *, block_n: int):
 
     s = s_ref[...]                                   # (bb, D)
     w = w_ref[...]                                   # (bn, D)
+    if precision == "bf16":
+        # tolerance tier: bf16 MXU inputs, f32 accumulate (the wrapper
+        # polishes the winner's distance with one exact-f32 gather)
+        s = s.astype(jnp.bfloat16)
+        w = w.astype(jnp.bfloat16)
     cross = jax.lax.dot_general(
         s, w, (((1,), (1,)), ((), ())),
         preferred_element_type=jnp.float32)          # (bb, bn)
@@ -44,12 +50,16 @@ def _bmu_kernel(w_ref, s_ref, w2_ref, min_ref, idx_ref, *, block_n: int):
     min_ref[...] = jnp.where(better, local_min, min_ref[...])
 
 
-@functools.partial(jax.jit, static_argnames=("block_b", "block_n", "interpret"))
+@functools.partial(jax.jit, static_argnames=("block_b", "block_n",
+                                             "interpret", "precision"))
 def bmu_pallas(w: jnp.ndarray, s: jnp.ndarray, *, block_b: int = 128,
-               block_n: int = 128, interpret: bool = False):
+               block_n: int = 128, interpret: bool = False,
+               precision: str = "exact"):
     """w: (N, D); s: (B, D). Returns (idx (B,) int32, q2 (B,) f32).
 
     N, B, D are padded to block multiples by the wrapper (`ops.bmu`).
+    ``precision='bf16'`` selects the bf16-cross tolerance tier (the wrapper
+    replaces the returned distance with an exact-f32 gather polish).
     """
     n, d = w.shape
     b, _ = s.shape
@@ -57,7 +67,7 @@ def bmu_pallas(w: jnp.ndarray, s: jnp.ndarray, *, block_b: int = 128,
     w2 = jnp.sum(w.astype(jnp.float32) ** 2, axis=-1)
     grid = (b // block_b, n // block_n)
     min_out, idx_out = pl.pallas_call(
-        functools.partial(_bmu_kernel, block_n=block_n),
+        functools.partial(_bmu_kernel, block_n=block_n, precision=precision),
         grid=grid,
         in_specs=[
             pl.BlockSpec((block_n, d), lambda i, j: (j, 0)),   # w tile

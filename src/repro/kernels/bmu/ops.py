@@ -34,20 +34,34 @@ def _pad_to(x, mult, axis, value=0.0):
     return jnp.pad(x, widths, constant_values=value)
 
 
+PRECISIONS = ("exact", "bf16")
+
+
 @functools.partial(jax.jit, static_argnames=("block_b", "block_n", "use_pallas",
-                                             "interpret"))
+                                             "interpret", "precision"))
 def bmu(w: jnp.ndarray, s: jnp.ndarray, *, block_b: int = 128,
         block_n: int = 128, use_pallas: bool | None = None,
-        interpret: bool | None = None):
+        interpret: bool | None = None, precision: str = "exact"):
     """argmin_j |w_j - s_i|^2 over units. Returns (idx (B,), q2 (B,)).
 
     Both flags default to auto: the compiled kernel on TPU, the jnp oracle
     elsewhere. Forcing ``interpret=True`` off-TPU runs the real kernel body
     in the Pallas interpreter (slow; parity tests); on real TPU pass
     interpret=False explicitly or rely on auto.
+
+    ``precision`` picks the distance tier: ``'exact'`` (f32; the bitwise
+    contract) or ``'bf16'`` (bf16 cross term, f32 accumulate, exact-f32
+    gather polish of the winner's distance — the tolerance tier of DESIGN.md
+    §11: index agreement + a q2 ULP bound, never silently substituted for
+    the exact tier).
     """
+    if precision not in PRECISIONS:
+        raise ValueError(f"precision must be one of {PRECISIONS}, got "
+                         f"{precision!r}")
     use_pallas, interpret = resolve_flags(use_pallas, interpret)
     if not use_pallas:
+        if precision == "bf16":
+            return ref.bmu_bf16_ref(w, s)
         return ref.bmu_ref(w, s)
     n, d = w.shape
     b = s.shape[0]
@@ -59,5 +73,12 @@ def bmu(w: jnp.ndarray, s: jnp.ndarray, *, block_b: int = 128,
     sp = _pad_to(sp, 128, 1)
     idx, q2 = bmu_pallas(wp, sp, block_b=block_b,
                          block_n=min(block_n, wp.shape[0]),
-                         interpret=interpret)
-    return idx[:b], q2[:b]
+                         interpret=interpret, precision=precision)
+    idx, q2 = idx[:b], q2[:b]
+    if precision == "bf16":
+        # exact-f32 polish: the kernel ranked with bf16 distances; the
+        # returned magnitude is re-gathered at full precision (matches
+        # ``ref.bmu_bf16_ref`` op-for-op)
+        dw = w.astype(jnp.float32)[idx] - s.astype(jnp.float32)
+        q2 = jnp.maximum(jnp.sum(dw * dw, axis=-1), 0.0)
+    return idx, q2

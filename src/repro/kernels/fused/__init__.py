@@ -1,0 +1,8 @@
+"""Fused training megakernel: BMU search + GMU adapt + cascade waves in one
+Pallas program (one HBM read of the weight matrix per step).
+
+``ops.fused_step_parts`` is the public op; ``ops.make_fused_stage`` adapts it
+to the ``core.afm.Stages`` seam (``Stages.fused``). ``ref`` holds the jnp
+oracle that pins the bitwise contract on CPU.
+"""
+from repro.kernels.fused import ops, ref  # noqa: F401

@@ -1,0 +1,233 @@
+"""Pallas TPU megakernel: one fused AFM training step.
+
+The staged hot path reads the (N, D) weight matrix from HBM three times per
+step — once for the BMU distance pass, once for the Eq. (3) GMU merge, once
+per cascade wave for the broadcast stencil. This kernel runs the whole
+post-sample pipeline as a single program (grid=()) with the weight matrix
+resident in VMEM: search (optional — the heuristic relay race stays outside),
+GMU adaptation, the counter drive, and a block-unrolled cascade wave loop
+(SNIPPETS.md Snippet 3 idiom: a ``while_loop`` whose body is ``unroll``
+straight-line waves with per-wave activity masking), for **one** HBM read and
+one write of W per step.
+
+PRNG stays outside: the drive draws ((8, side, side)) and the first
+``w_cap`` waves' Bernoulli tensors ((w_cap, 4, side, side)) are precomputed
+by the wrapper from the same key chain as ``core.cascade`` — each wave's
+draw depends only on its position in the chain, never on the lattice state,
+so precomputation is bitwise-free. Cascades outliving ``w_cap`` waves are
+finished by the wrapper's jnp tail loop (``ops.fused_step_parts``).
+
+Two distance tiers for the in-kernel search (``precision``):
+
+- ``"exact"`` — f32 expanded form, op-for-op ``core.search.exact_bmu``'s
+  single-block path: bitwise against the staged pipeline.
+- ``"bf16"``  — bf16 cross term with f32 accumulation on the MXU, then an
+  exact-f32 gather polish of the winner's distance: half the VMEM/HBM
+  traffic for W in the distance pass, tolerance-tested (index agreement +
+  q2 ULP bound) rather than bitwise. See ``kernels.bmu.ref.bmu_bf16_ref``.
+
+Lattice shifts use rolls + 2-D iota masks (the ``kernels.cascade`` idiom —
+TPU-friendly) summed in ``core.cascade._shift_sum``'s exact order, so the
+float weight updates stay bitwise against the concatenate-based oracle. The
+Eq. (3) merge keeps the oracle's scatter-adds (``.at[gmu].add``); on a real
+TPU Mosaic may prefer a one-hot matmul, which would need its own parity
+audit — the interpret path (CI) is the contract here.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _masks(side: int):
+    row = jax.lax.broadcasted_iota(jnp.int32, (side, side), 0)
+    col = jax.lax.broadcasted_iota(jnp.int32, (side, side), 1)
+    return row, col
+
+
+def _shift_sum3(x3, row, col):
+    """4-neighbour sum for (side, side, D), zero beyond the boundary —
+    value-identical to ``cascade._shift_sum`` (same shifted arrays, same
+    ``((up + dn) + lf) + rt`` addition order)."""
+    side = x3.shape[0]
+    up = jnp.where((row < side - 1)[..., None], jnp.roll(x3, -1, axis=0), 0.0)
+    dn = jnp.where((row > 0)[..., None], jnp.roll(x3, 1, axis=0), 0.0)
+    lf = jnp.where((col < side - 1)[..., None], jnp.roll(x3, -1, axis=1), 0.0)
+    rt = jnp.where((col > 0)[..., None], jnp.roll(x3, 1, axis=1), 0.0)
+    return up + dn + lf + rt
+
+
+def _shift4_i32(x, row, col):
+    """(4, side, side) neighbour stack of an int32 lattice, in
+    ``cascade._shift4`` slot order (below, above, right, left)."""
+    side = x.shape[0]
+    return jnp.stack([
+        jnp.where(row < side - 1, jnp.roll(x, -1, axis=0), 0),
+        jnp.where(row > 0, jnp.roll(x, 1, axis=0), 0),
+        jnp.where(col < side - 1, jnp.roll(x, -1, axis=1), 0),
+        jnp.where(col > 0, jnp.roll(x, 1, axis=1), 0),
+    ], axis=0)
+
+
+def _fused_kernel(*refs, b: int, side: int, d: int, theta: int, budget: int,
+                  w_cap: int, unroll: int, has_search: bool, precision: str):
+    if has_search:
+        (w_ref, c_ref, s_ref, scal_ref, drive_ref, bern_ref, gmu_ref,
+         w_out, c_out, fired_out, stats_out, recv_out) = refs
+    else:
+        (w_ref, c_ref, s_ref, scal_ref, drive_ref, bern_ref,
+         w_out, c_out, fired_out, stats_out, recv_out,
+         gmu_out, q2_out) = refs
+    n = side * side
+    w = w_ref[...]                                   # (N, D) — the HBM read
+    s = s_ref[...]                                   # (B, D)
+    l_s = scal_ref[0]
+    l_c = scal_ref[1]
+    row, col = _masks(side)
+
+    # ---- search (Eq. 1) — skipped when the relay race ran outside
+    if has_search:
+        gmu = gmu_ref[...]
+    elif precision == "exact":
+        # op-for-op ``search.exact_bmu``'s single-block path (bitwise)
+        s2 = jnp.sum(s * s, axis=-1)
+        w2 = jnp.sum(w * w, axis=-1)
+        q2m = s2[:, None] - 2.0 * (s @ w.T) + w2[None, :]
+        idx = jnp.argmin(q2m, axis=-1)
+        best = jnp.take_along_axis(q2m, idx[:, None], axis=-1)[:, 0]
+        gmu = idx.astype(jnp.int32)
+        gmu_out[...] = gmu
+        q2_out[...] = jnp.maximum(best, 0.0)
+    else:
+        # bf16 tier: cross term on bf16 inputs, f32 accumulate, then an
+        # exact-f32 polish of the winner (``kernels.bmu.ref.bmu_bf16_ref``)
+        s2 = jnp.sum(s * s, axis=-1)
+        w2 = jnp.sum(w * w, axis=-1)
+        cross = jax.lax.dot_general(
+            s.astype(jnp.bfloat16), w.astype(jnp.bfloat16),
+            (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32)
+        q2a = s2[:, None] - 2.0 * cross + w2[None, :]
+        gmu = jnp.argmin(q2a, axis=-1).astype(jnp.int32)
+        dw = w[gmu] - s
+        gmu_out[...] = gmu
+        q2_out[...] = jnp.maximum(jnp.sum(dw * dw, axis=-1), 0.0)
+
+    # ---- Eq. (3) GMU merge — op-for-op ``afm.adapt_merge``
+    ones = jnp.ones((b,), jnp.float32)
+    counts = jnp.zeros((n,), jnp.float32).at[gmu].add(ones)
+    target_sum = jnp.zeros((n, d), jnp.float32).at[gmu].add(s)
+    hit = counts > 0
+    mean = target_sum / jnp.maximum(counts, 1.0)[:, None]
+    mean_target = jnp.where(hit[:, None], mean, w)
+    w = w + l_s * (mean_target - w)
+
+    # ---- counter drive (precomputed draws)
+    gmu_mask = counts.astype(jnp.int32).reshape(side, side)
+    k8 = jax.lax.broadcasted_iota(jnp.int32, (8, side, side), 0)
+    inc = jnp.sum(drive_ref[...] * (k8 < jnp.minimum(gmu_mask, 8)).astype(
+        jnp.int32), axis=0)
+    c = c_ref[...] + inc
+    fired = c >= theta
+    w3 = w.reshape(side, side, d)
+    bern_all = bern_ref[...]                         # (w_cap, 4, side, side)
+
+    # ---- block-unrolled wave loop: while over blocks of ``unroll``
+    # straight-line waves; inactive waves are full-array selects (never
+    # arithmetic no-ops — ``w + l_c*0`` would flip -0.0 to +0.0)
+    def wave_once(w3, c, fired, widx):
+        firedf = fired.astype(jnp.float32)
+        sum_wk = _shift_sum3(w3 * firedf[..., None], row, col)
+        bern = jax.lax.dynamic_index_in_dim(bern_all, widx, keepdims=False)
+        cr = jnp.where(fired, 0, c)
+        recv4 = _shift4_i32(fired.astype(jnp.int32), row, col)
+        n_recv = recv4.sum(axis=0)
+        cn = cr + jnp.sum(bern * recv4, axis=0)
+        new_fired = (cn >= theta) & (n_recv > 0)
+        nf = n_recv.astype(jnp.float32)
+        w3n = w3 + l_c * (sum_wk - nf[..., None] * w3)
+        return w3n, cn, new_fired, n_recv
+
+    def bcond(cc):
+        return jnp.any(cc[2]) & (cc[4] < budget)
+
+    def bbody(cc):
+        w3, c, fired, size, waves, recv = cc
+        for _ in range(unroll):
+            active = jnp.any(fired) & (waves < budget)
+            widx = jnp.minimum(waves, w_cap - 1)     # clamp inactive lanes
+            w3n, cn, fn, n_recv = wave_once(w3, c, fired, widx)
+            size = size + jnp.where(active, fired.sum(dtype=jnp.int32), 0)
+            recv = recv + jnp.where(active, n_recv, 0)
+            waves = waves + jnp.where(active, jnp.int32(1), jnp.int32(0))
+            w3 = jnp.where(active, w3n, w3)
+            c = jnp.where(active, cn, c)
+            fired = jnp.where(active, fn, fired)
+        return (w3, c, fired, size, waves, recv)
+
+    w3, c, fired, size, waves, recv = jax.lax.while_loop(
+        bcond, bbody,
+        (w3, c, fired, jnp.int32(0), jnp.int32(0),
+         jnp.zeros((side, side), jnp.int32)))
+
+    w_out[...] = w3.reshape(n, d)                    # the one HBM write
+    c_out[...] = c
+    fired_out[...] = fired.astype(jnp.int32)
+    stats_out[...] = jnp.stack([size, waves])
+    recv_out[...] = recv
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "theta", "budget", "unroll", "precision", "interpret"))
+def fused_step_pallas(w, c2, s, scal, drive, bern, gmu=None, *, theta: int,
+                      budget: int, unroll: int = 4, precision: str = "exact",
+                      interpret: bool = False):
+    """One fused post-sample step. Shapes: w (N, D) f32; c2 (side, side)
+    i32; s (B, D) f32; scal (2,) f32 = [l_s, l_c]; drive (8, side, side)
+    i32; bern (w_cap, 4, side, side) i32; gmu (B,) i32 or None (None fuses
+    the exact/bf16 distance search into the kernel).
+
+    Returns ``(w, c2, fired, stats, recv[, gmu, q2])`` — ``fired`` is the
+    still-super-threshold front after the last executed wave (int32 lattice;
+    the wrapper's tail loop continues it), ``stats`` is (2,) i32
+    [size, waves], ``recv`` the per-unit receive counts.
+    """
+    side = c2.shape[0]
+    n, d = w.shape
+    b = s.shape[0]
+    w_cap = bern.shape[0]
+    has_search = gmu is not None
+    full = lambda shape: pl.BlockSpec(shape, lambda: (0,) * len(shape))  # noqa: E731
+    in_specs = [full(w.shape), full(c2.shape), full(s.shape), full((2,)),
+                full(drive.shape), full(bern.shape)]
+    args = [w, c2.astype(jnp.int32), s, scal,
+            drive.astype(jnp.int32), bern.astype(jnp.int32)]
+    if has_search:  # lint: tracer-ok(static arg-presence flag, not a tracer)
+        in_specs.append(full((b,)))
+        args.append(gmu.astype(jnp.int32))
+    out_specs = [full((n, d)), full((side, side)), full((side, side)),
+                 full((2,)), full((side, side))]
+    out_shape = [
+        jax.ShapeDtypeStruct((n, d), jnp.float32),
+        jax.ShapeDtypeStruct((side, side), jnp.int32),
+        jax.ShapeDtypeStruct((side, side), jnp.int32),
+        jax.ShapeDtypeStruct((2,), jnp.int32),
+        jax.ShapeDtypeStruct((side, side), jnp.int32),
+    ]
+    if not has_search:  # lint: tracer-ok(static arg-presence flag)
+        out_specs += [full((b,)), full((b,))]
+        out_shape += [jax.ShapeDtypeStruct((b,), jnp.int32),
+                      jax.ShapeDtypeStruct((b,), jnp.float32)]
+    return pl.pallas_call(
+        functools.partial(
+            _fused_kernel, b=b, side=side, d=d, theta=int(theta),
+            budget=int(budget), w_cap=int(w_cap), unroll=int(unroll),
+            has_search=has_search, precision=precision),
+        grid=(),
+        in_specs=in_specs,
+        out_specs=out_specs,
+        out_shape=out_shape,
+        interpret=interpret,
+    )(*args)

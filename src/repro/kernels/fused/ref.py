@@ -1,0 +1,100 @@
+"""Pure-jnp oracle for the fused training step (adapt + drive + cascade).
+
+The staged reference path is ``afm._step``: search, then ``afm.adapt_gmu``,
+then ``cascade.drive_and_cascade``. This module repackages the post-search
+stages as one function with the *identical op sequence* — the fused Pallas
+kernel (``repro.kernels.fused.fused``) and the async engine's zero-latency
+scan must both reproduce it bitwise, so every helper here mirrors its staged
+counterpart op-for-op and only adds a receive-count sidecar (integer adds
+that consume no PRNG and touch no weight/counter math). The sidecar feeds
+the event engine's ``EventReport`` accounting (per-unit event counts).
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import cascade as cascade_lib
+
+
+class FusedCore(NamedTuple):
+    """Post-search step result on the lattice view."""
+    w: jnp.ndarray      # (N, D) f32 adapted weights
+    c: jnp.ndarray      # (N,) i32 counters
+    size: jnp.ndarray   # () i32 firing incidents
+    waves: jnp.ndarray  # () i32 wave count
+    recv: jnp.ndarray   # (N,) i32 per-unit broadcast receipts this step
+
+
+def drive_from_draws(c2, gmu_mask, draws):
+    """The post-sample counter drive of ``cascade.drive_and_cascade``, with
+    the Bernoulli draws precomputed by the caller: each of the ``gmu_mask``
+    adaptations increments the counter when its draw succeeds (counts capped
+    at the 8 draws, exactly like the staged path)."""
+    inc = jnp.sum(
+        draws.astype(jnp.int32)
+        * (jnp.arange(8)[:, None, None] < jnp.minimum(gmu_mask, 8)),
+        axis=0)
+    return c2 + inc
+
+
+def wave_loop(w3, c2, fired, key, *, l_c, p_i, theta: int, max_waves: int,
+              size0, waves0, recv0):
+    """Cascade waves to quiescence: op-for-op ``cascade.cascade``'s loop
+    (same PRNG chain, same update order) plus the receive-count sidecar.
+
+    ``size0`` / ``waves0`` / ``recv0`` seed the accumulators so the loop can
+    continue a cascade the fused kernel started (the tail continuation when
+    the kernel's precomputed wave budget runs out). ``recv0`` is
+    (side, side) int32.
+    """
+    side = c2.shape[0]
+
+    def wcond(cc):
+        return jnp.any(cc[2]) & (cc[5] < max_waves)
+
+    def wbody(cc):
+        wv, cv, fr, kk, size, waves, rec = cc
+        kk, sub = jax.random.split(kk)
+        firedf = fr.astype(wv.dtype)
+        sum_wk = cascade_lib._shift_sum(wv * firedf[..., None])
+        bern = jax.random.uniform(sub, (4, side, side)) < p_i
+        cv, new_fired, n_recv = cascade_lib._wave_jnp(cv, fr, bern, theta)
+        nf = n_recv.astype(wv.dtype)
+        wv = wv + l_c * (sum_wk - nf[..., None] * wv)
+        return (wv, cv, new_fired, kk,
+                size + fr.sum(dtype=jnp.int32), waves + 1, rec + n_recv)
+
+    w3, c2, _, _, size, waves, recv = jax.lax.while_loop(
+        wcond, wbody,
+        (w3, c2, fired, key,
+         jnp.asarray(size0, jnp.int32), jnp.asarray(waves0, jnp.int32),
+         jnp.asarray(recv0, jnp.int32)))
+    return w3, c2, size, waves, recv
+
+
+def adapt_drive_cascade(w, c, samples, gmu, k_cascade, cfg, *, l_c, p_i,
+                        max_waves: int, recv0=None) -> FusedCore:
+    """Everything after search, flat in / flat out: Eq. (3) GMU merge, the
+    counter drive, and the wave loop — the jnp oracle the fused kernel is
+    bitwise-pinned against. ``recv0`` ((N,) int32) seeds the receipt
+    sidecar (the async fused-zero runner accumulates it across steps)."""
+    from repro.core import afm as afm_lib
+
+    side, d, theta = cfg.side, cfg.dim, cfg.theta
+    w2, counts = afm_lib.adapt_merge(w, samples, gmu, cfg)
+    gmu_mask = counts.astype(jnp.int32).reshape(side, side)
+    k_drive, k_chain = jax.random.split(k_cascade)
+    draws = jax.random.uniform(k_drive, (8, side, side)) < p_i
+    c2 = drive_from_draws(c.reshape(side, side), gmu_mask, draws)
+    fired0 = c2 >= theta
+    rec0 = (jnp.zeros((side, side), jnp.int32) if recv0 is None
+            else recv0.reshape(side, side))
+    w3, c2, size, waves, recv = wave_loop(
+        w2.reshape(side, side, d), c2, fired0, k_chain,
+        l_c=l_c, p_i=p_i, theta=theta, max_waves=max_waves,
+        size0=0, waves0=0, recv0=rec0)
+    return FusedCore(w3.reshape(-1, d), c2.reshape(-1), size, waves,
+                     recv.reshape(-1))

@@ -72,6 +72,11 @@ class AsyncBackend:
                  it to measure the engine itself; results are bitwise
                  identical either way).
       search:    'heuristic' (paper relay race) or 'exact' (full BMU).
+      kernel:    'staged' (default), 'fused', or 'fused-interpret' — step
+                 execution inside the zero-latency fast path (the
+                 ``kernels.fused`` training megakernel; see ``EventConfig``
+                 and DESIGN.md §11). Bitwise-identical across all three;
+                 single-pool only.
       placement: 'single' (one pool, one device; default) or 'mesh' —
                  partition units and the message pool across a
                  ``shard_map`` device mesh (``repro.core.placement``).
@@ -101,8 +106,9 @@ class AsyncBackend:
                  delay: float = 0.0, sample_spacing: float = 1.0,
                  capacity: int | None = None, max_rounds: int | None = None,
                  engine: str = "auto", search: str = "heuristic",
-                 placement: str = "single", shards: int = 1,
-                 lat_seed: int = 0, donate_run: bool = False):
+                 kernel: str = "staged", placement: str = "single",
+                 shards: int = 1, lat_seed: int = 0,
+                 donate_run: bool = False):
         if search not in _SEARCHES:
             raise ValueError(f"search must be one of {sorted(_SEARCHES)}, "
                              f"got {search!r}")
@@ -110,7 +116,7 @@ class AsyncBackend:
         self.ecfg = EventConfig(latency=latency, delay=delay,
                                 sample_spacing=sample_spacing,
                                 capacity=capacity, max_rounds=max_rounds,
-                                engine=engine)
+                                engine=engine, kernel=kernel)
         # fail fast: a bad placement spec or an indivisible shard count
         # should surface at construction, not on the first training call
         self.placement = placement_lib.resolve_placement(

@@ -55,6 +55,15 @@ CASES = [
      96, dict(latency="constant", delay=2.5, capacity=12), True),
 ]
 
+#: Zero-latency cases the fused-megakernel runner must replay bitwise
+#: (``EventConfig(kernel='fused-interpret')`` — the real Pallas kernel body
+#: in the interpreter). ``tiny_pool`` is excluded by construction: its
+#: capacity (12 < 4N) disqualifies the fast path the kernel rides on, and
+#: its latency model is nonzero anyway. The goldens themselves are
+#: unchanged — the megakernel is pinned against the same fingerprints as
+#: every other runner.
+FUSED_CASES = ["small_zero", "ten_zero", "hot_zero"]
+
 
 def run_case(cfg: AFMConfig, num_events: int, ekw: dict, hot: bool):
     """One seeded engine run; seeds are derived from the config so cases

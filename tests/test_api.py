@@ -89,6 +89,27 @@ def test_pallas_cpu_fallback_matches_exact_batched_bitwise():
     np.testing.assert_array_equal(np.asarray(w_pal), np.asarray(w_ex))
 
 
+def test_pallas_fused_kernel_matches_staged_bitwise():
+    """backend_options={'kernel': 'fused'}: the training megakernel (here the
+    real kernel body in the interpreter) is bitwise-interchangeable with the
+    staged kernel path, and the option validates loudly."""
+    x, _ = _tiny_data()
+    cfg = dataclasses.replace(CFG, i_max=48)
+    key = jax.random.PRNGKey(17)
+    flags = {"interpret": True, "use_pallas": True}
+    w_fused = TopoMap(cfg, backend="pallas",
+                      backend_options=dict(flags, kernel="fused")
+                      ).fit(x, key=key).state_.w
+    w_staged = TopoMap(cfg, backend="pallas",
+                       backend_options=dict(flags, kernel="staged")
+                       ).fit(x, key=key).state_.w
+    np.testing.assert_array_equal(np.asarray(w_fused), np.asarray(w_staged))
+    with pytest.raises(ValueError, match="kernel"):
+        TopoMap(cfg, backend="pallas", backend_options={"kernel": "mega"})
+    with pytest.raises(ValueError, match="precision"):
+        TopoMap(cfg, backend="pallas", backend_options={"precision": "fp8"})
+
+
 def test_pallas_heuristic_search_trains():
     """search='heuristic' keeps the relay race, kernel only for the cascade."""
     x, _ = _tiny_data()

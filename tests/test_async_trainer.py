@@ -382,12 +382,13 @@ _CASE_BY_NAME = {name: (cfg, ne, ekw, hot)
 #: (case, runner variant): 'auto' is the production dispatch (fused scan at
 #: zero latency, sample-scan engine otherwise); 'event' forces the
 #: discrete-event engine (covers its zero-latency path); 'budget' runs the
-#: budgeted loop with a non-binding round budget. Every variant must equal
-#: the PR-4 dense engine's output bit-for-bit.
+#: budgeted loop with a non-binding round budget; 'fused' runs the training
+#: megakernel (real Pallas body, interpreted) inside the zero-latency scan.
+#: Every variant must equal the PR-4 dense engine's output bit-for-bit.
 _GOLDEN_RUNS = [(name, "auto") for name in _CASE_BY_NAME] + [
     ("small_zero", "event"), ("ten_zero", "event"), ("hot_zero", "event"),
     ("ten_zero", "budget"), ("hot_const", "budget"), ("tiny_pool", "budget"),
-]
+] + [(name, "fused") for name in _REGEN.FUSED_CASES]
 
 
 @pytest.mark.parametrize("case,variant", _GOLDEN_RUNS,
@@ -404,6 +405,8 @@ def test_round_semantics_match_pre_optimization_golden(case, variant):
         ekw["engine"] = "event"
     elif variant == "budget":
         ekw["max_rounds"] = 10 ** 7          # non-binding budget
+    elif variant == "fused":
+        ekw["kernel"] = "fused-interpret"    # the megakernel, interpreted
     key = jax.random.PRNGKey(cfg.side * 1000 + cfg.dim)
     k_init, k_data, k_steps, k_lat = jax.random.split(key, 4)
     data = jax.random.normal(k_data, (256, cfg.dim))
@@ -432,6 +435,48 @@ def test_zero_fast_path_dispatch_conditions():
     assert not ok(CFG, events.EventConfig(latency="constant", delay=1.0), 16)
     # a pool smaller than one fire's 4N candidates can overflow -> simulate
     assert not ok(CFG, events.EventConfig(capacity=CFG.n_units), 16)
+
+
+def test_fused_kernel_requires_fast_path_regime():
+    """kernel='fused' is a fast-path-only override: the config rejects any
+    regime the megakernel cannot bitwise-replay, and an undersized pool
+    (which disqualifies the fast path after validation) fails loudly at
+    runner build instead of silently falling back to the staged engine."""
+    for bad in (dict(latency="constant", delay=1.0),
+                dict(engine="event"), dict(max_rounds=100)):
+        with pytest.raises(ValueError, match="fast-path"):
+            events.EventConfig(kernel="fused", **bad)
+    with pytest.raises(ValueError, match="kernel must be one of"):
+        events.EventConfig(kernel="mega")
+    from repro.core.placement import MeshPlacement, SinglePool
+    undersized = events.EventConfig(kernel="fused",
+                                    capacity=CFG.n_units)
+    with pytest.raises(ValueError, match="capacity"):
+        SinglePool().build_runner(CFG, undersized, 16, afm.search_exact,
+                                  events._default_p, events._default_l_c)
+    # the multi-shard mesh rejects a fused kernel before touching devices
+    with pytest.raises(ValueError, match="single-pool"):
+        MeshPlacement(shards=2).build_runner(
+            CFG, events.EventConfig(kernel="fused"), 16,
+            afm.search_exact, events._default_p, events._default_l_c)
+
+
+def test_async_backend_fused_kernel_option_bitwise():
+    """TopoMap(backend='async', kernel='fused') trains bitwise-identically
+    to the default staged fast path."""
+    x = _tiny_data()
+    key = jax.random.PRNGKey(5)
+    base = TopoMap(CFG, backend="async").fit(x, key=key)
+    fused = TopoMap(CFG, backend="async",
+                    backend_options={"kernel": "fused"}).fit(x, key=key)
+    assert np.array_equal(np.asarray(base.state_.w).view(np.uint32),
+                          np.asarray(fused.state_.w).view(np.uint32))
+    assert np.array_equal(np.asarray(base.state_.c),
+                          np.asarray(fused.state_.c))
+    rb, rf = base.backend.last_report, fused.backend.last_report
+    assert int(rb.rounds) == int(rf.rounds)
+    assert int(rb.deliveries) == int(rf.deliveries)
+    assert np.array_equal(np.asarray(rb.nevents), np.asarray(rf.nevents))
 
 
 def test_pool_min_lex_survives_generations_near_int32_max():

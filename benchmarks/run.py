@@ -29,6 +29,7 @@ MODULES = [
     ("kernels_bench", "benchmarks.kernel_bench"),
     ("serving_bench", "benchmarks.serving_bench"),
     ("async_bench", "benchmarks.async_bench"),
+    ("fault_bench", "benchmarks.fault_bench"),
     ("roofline", "benchmarks.roofline"),
 ]
 

@@ -112,9 +112,18 @@ def save_artifact(path: str, *, cfg: AFMConfig, state: AFMState,
     os.makedirs(tmp_dir)
     try:
         ckpt.save(os.path.join(tmp_dir, _STATE), state)
+        payload_files = [_STATE]
         if unit_labels is not None:
             ckpt.save(os.path.join(tmp_dir, _UNIT_LABELS),
                       jnp.asarray(unit_labels, jnp.int32))
+            payload_files.append(_UNIT_LABELS)
+        # per-file SHA-256 over the payloads just written: load_artifact
+        # re-hashes before trusting a byte, so a truncated or bit-rotted
+        # artifact fails loudly instead of restoring garbage weights
+        manifest["checksums"] = {
+            f: ckpt.file_sha256(os.path.join(tmp_dir, f))
+            for f in payload_files
+        }
         with open(os.path.join(tmp_dir, _MANIFEST), "w") as f:
             json.dump(manifest, f, indent=2, sort_keys=True)
             f.write("\n")
@@ -140,8 +149,12 @@ def load_artifact(path: str) -> MapArtifact:
     manifest_path = os.path.join(path, _MANIFEST)
     if not os.path.isfile(manifest_path):
         raise FileNotFoundError(f"{path}: no {_MANIFEST} — not a map artifact")
-    with open(manifest_path) as f:
-        manifest = json.load(f)
+    try:
+        with open(manifest_path) as f:
+            manifest = json.load(f)
+    except json.JSONDecodeError as exc:
+        raise ValueError(
+            f"{manifest_path}: corrupt or truncated manifest: {exc}") from exc
     if manifest.get("format") != ARTIFACT_FORMAT:
         raise ValueError(f"{path}: manifest format is "
                          f"{manifest.get('format')!r}, not {ARTIFACT_FORMAT!r}")
@@ -151,6 +164,21 @@ def load_artifact(path: str) -> MapArtifact:
             f"{path}: artifact format version {version} is newer than this "
             f"reader (understands <= {ARTIFACT_VERSION})")
     cfg = _config_from_dict(manifest["config"])
+    # integrity gate: artifacts written since the checksum field exists are
+    # re-hashed file-by-file before any payload byte is trusted (older
+    # manifests without the field still load — their payloads carry the
+    # embedded leaf checksum inside the msgpack body instead)
+    for fname, want in sorted((manifest.get("checksums") or {}).items()):
+        fpath = os.path.join(path, fname)
+        if not os.path.isfile(fpath):
+            raise ValueError(
+                f"{path}: corrupt or truncated artifact — payload file "
+                f"{fname!r} named in the manifest is missing")
+        got = ckpt.file_sha256(fpath)
+        if got != want:
+            raise ValueError(
+                f"{path}: corrupt or truncated artifact — {fname} checksum "
+                f"mismatch (manifest {want[:12]}…, file {got[:12]}…)")
     state = ckpt.restore(os.path.join(path, _STATE), _state_like(cfg))
     unit_labels = None
     if manifest.get("has_unit_labels"):

@@ -70,6 +70,7 @@ from repro.core import schedules
 from repro.core.afm import AFMConfig, AFMState
 from repro.core.placement import base as placement_base
 from repro.core.placement import single as placement_single
+from repro.faults import FaultPlan
 
 LATENCIES = ("zero", "constant", "exponential")
 ENGINES = ("auto", "event")
@@ -125,6 +126,13 @@ class EventConfig:
                     bitwise-identical (DESIGN.md §11); a fused kernel
                     requires the fast-path regime (latency='zero',
                     engine='auto', max_rounds=None, single pool).
+    faults:         ``repro.faults.FaultPlan`` to inject (seeded message
+                    loss, unit dropout windows, shard stragglers, pool
+                    pressure) — or ``None``/``FaultPlan.none()`` for the
+                    bitwise-pinned fault-free engine. An active plan
+                    disables the fused fast path (faults are simulated,
+                    so the discrete-event engine runs) and is rejected
+                    with a fused kernel.
     """
     latency: str = "zero"
     delay: float = 0.0
@@ -133,8 +141,14 @@ class EventConfig:
     max_rounds: int | None = None
     engine: str = "auto"
     kernel: str = "staged"
+    faults: FaultPlan | None = None
 
     def __post_init__(self):
+        if self.faults is not None and not isinstance(self.faults, FaultPlan):
+            raise ValueError(
+                "faults must be a repro.faults.FaultPlan or None, got "
+                f"{self.faults!r} (dict specs are resolved by the backend "
+                "layer: backend_options={'faults': {...}})")
         if self.latency not in LATENCIES:
             raise ValueError(f"latency must be one of {LATENCIES}, got "
                              f"{self.latency!r}")
@@ -150,12 +164,27 @@ class EventConfig:
             raise ValueError(
                 "kernel='fused' runs only in the zero-latency fast-path "
                 "regime: latency='zero', engine='auto', max_rounds=None")
+        if self.kernel != "staged" and self.fault_active:
+            raise ValueError(
+                "kernel='fused' runs only in the zero-latency fast-path "
+                "regime, which an active FaultPlan disqualifies (faults are "
+                "simulated by the discrete-event engine)")
         if self.delay < 0:
             raise ValueError(f"delay must be >= 0, got {self.delay}")
         if self.latency == "zero" and self.delay:
             raise ValueError("latency='zero' takes no delay; use 'constant'")
         if self.sample_spacing <= 0:
             raise ValueError("sample_spacing must be > 0")
+
+    @property
+    def fault_active(self) -> bool:
+        """True when a fault plan with at least one active axis is set."""
+        return self.faults is not None and not self.faults.is_none()
+
+    @property
+    def plan(self) -> FaultPlan:
+        """The effective plan (``faults`` or the fault-free default)."""
+        return self.faults if self.faults is not None else FaultPlan.none()
 
 
 class EventState(NamedTuple):
@@ -200,10 +229,24 @@ class EventState(NamedTuple):
     lat_key: jnp.ndarray    # (2,) u32 — exponential-latency stream (separate
     #                         from the training chains, so zero/constant runs
     #                         consume exactly the reference PRNG stream)
+    # fault-injection sidecar (repro.faults): pure integer/PRNG accounting,
+    # zeros (and an untouched key) when the plan is inactive — the fault-free
+    # graph stays op-identical to the pre-fault engine
+    sent: jnp.ndarray          # () i32 — broadcast candidates attempted
+    dropped_fault: jnp.ndarray  # () i32 — injected losses + dead receivers
+    samples_dead: jnp.ndarray  # () i32 — samples routed to a dead GMU
+    fault_key: jnp.ndarray     # (2,) u32 — the plan's own PRNG stream
 
 
 class EventReport(NamedTuple):
-    """Per-run accounting (event-throughput benchmarks read this)."""
+    """Per-run accounting (event-throughput benchmarks read this).
+
+    The trailing fault/accounting fields (PR 10) default so historical
+    positional construction stays valid; every runner populates them. The
+    conservation identity — checked by the fault suite and ``fault_bench``
+    — is ``sent == deliveries + dropped_overflow + dropped_fault +
+    stranded`` where ``dropped_overflow = dropped - stranded``.
+    """
     rounds: jnp.ndarray      # () i32 — simulation rounds executed
     samples: jnp.ndarray     # () i32 — sample deliveries actually consumed
     #                          (< the requested E only on a max_rounds exit)
@@ -213,11 +256,24 @@ class EventReport(NamedTuple):
     t_end: jnp.ndarray       # () f32 — final simulated time
     clock: jnp.ndarray       # (N,) f32 — per-unit logical clocks
     nevents: jnp.ndarray     # (N,) i32 — per-unit event counts
+    sent: jnp.ndarray = 0          # () i32 — broadcast candidates attempted
+    dropped_fault: jnp.ndarray = 0  # () i32 — injected loss + dead receivers
+    stranded: jnp.ndarray = 0      # () i32 — in-flight at exit (also summed
+    #                                into ``dropped`` for PR-4 compatibility)
+    samples_dead: jnp.ndarray = 0  # () i32 — samples routed to a dead GMU
+    shard_counts: jnp.ndarray = 0  # (K, 5) i32 — per-shard [sent, delivered,
+    #                                dropped_overflow, dropped_fault,
+    #                                stranded]; K=1 off-mesh
 
     @property
     def events(self):
         """Total events processed (samples + weight deliveries)."""
         return self.samples + self.deliveries
+
+    @property
+    def dropped_overflow(self):
+        """Pool-overflow drops alone (``dropped`` minus the stranded tail)."""
+        return self.dropped - self.stranded
 
 
 def _resolve(cfg: AFMConfig, ecfg: EventConfig, num_events: int):
@@ -259,6 +315,10 @@ def init_events(state: AFMState, cfg: AFMConfig, ecfg: EventConfig,
         ev=jnp.int32(0), t=jnp.float32(0.0), rounds=jnp.int32(0),
         deliveries=jnp.int32(0), dropped=jnp.int32(0),
         lat_key=jnp.asarray(lat_key, jnp.uint32),
+        sent=jnp.int32(0), dropped_fault=jnp.int32(0),
+        samples_dead=jnp.int32(0),
+        fault_key=(jax.random.PRNGKey(ecfg.plan.seed)
+                   if ecfg.fault_active else z((2,), jnp.uint32)),
     )
 
 
@@ -288,6 +348,20 @@ def _make_round_fns(cfg: AFMConfig, ecfg: EventConfig, num_events: int,
     placement = placement_base.resolve_placement(placement)
     n, d, side, theta = cfg.n_units, cfg.dim, cfg.side, cfg.theta
     m, k_sel, max_waves, _ = _resolve(cfg, ecfg, num_events)
+    # fault-plan closures (repro.faults): each axis is a *static* Python
+    # branch, so an inactive plan builds the exact fault-free graph — the
+    # golden-bitwise contract is structural, not numeric luck
+    plan = ecfg.plan
+    loss_on = ecfg.fault_active and plan.p_loss > 0.0
+    dead_on = ecfg.fault_active and plan.dropout_active
+    if dead_on:
+        dead_sel = plan.dead_units(n)
+        d_lo = plan.dropout_start
+        d_hi = plan.dropout_start + plan.dropout_len
+
+        def dead_at(t):
+            """(N,) bool — units dead at simulated time ``t``."""
+            return dead_sel & (t >= d_lo) & (t < d_hi)
     scale = placement.pack_scale(cfg, ecfg, num_events)
     selector = placement.make_selector(cfg, ecfg, num_events)
     # a delivery round selects one (t, gen, cid): at zero/constant latency
@@ -304,7 +378,15 @@ def _make_round_fns(cfg: AFMConfig, ecfg: EventConfig, num_events: int,
         enqueue weight messages to their near neighbours (payload = the
         sender's current w), timestamped by the latency model. Pool slots
         come off the free ring: the r-th valid candidate takes the r-th
-        free slot, candidates past the free count are dropped (counted)."""
+        free slot, candidates past the free count are dropped (counted).
+
+        Faults: dead units neither fire nor count as firing incidents (a
+        unit whose counter crossed ``theta`` while dead fires on rejoin at
+        the next round that drives it into ``fired``); ``p_loss`` losses
+        come off the plan's own key chain *after* ``sent`` is counted, so
+        the conservation identity sees every attempted broadcast."""
+        if dead_on:
+            fired = fired & ~dead_at(t)
         nfired = jnp.sum(fired, dtype=jnp.int32)
         sizes = es.sizes.at[cid].add(nfired)
         c = jnp.where(fired, 0, es.c)
@@ -323,15 +405,22 @@ def _make_round_fns(cfg: AFMConfig, ecfg: EventConfig, num_events: int,
         # the skip branch is a no-op over small operands (not the full
         # EventState — E-sized aux arrays never enter the conditional)
         pool = (es.msg_t, es.msg_key, es.msg_gen, es.msg_cid, es.msg_dst,
-                es.msg_dir, es.msg_w, es.free_head, es.free_n, es.dropped)
+                es.msg_dir, es.msg_w, es.free_head, es.free_n, es.dropped,
+                es.sent, es.dropped_fault, es.fault_key)
 
         def enqueue(pool):
             (msg_t, msg_key, msg_gen, msg_cid, msg_dst, msg_dir, msg_w,
-             free_head, free_n, drop0) = pool
+             free_head, free_n, drop0, sent0, dfault0, fkey) = pool
             # candidate messages: (N, 4) in near-table order (up, down,
             # left, right) == receiver direction codes (below, above,
             # right, left)
             valid = (fired[:, None] & (near >= 0)).reshape(-1)       # (4N,)
+            sent0 = sent0 + jnp.sum(valid, dtype=jnp.int32)
+            if loss_on:
+                fkey, sub = jax.random.split(fkey)
+                keep = jax.random.uniform(sub, (4 * n,)) >= plan.p_loss
+                dfault0 = dfault0 + jnp.sum(valid & ~keep, dtype=jnp.int32)
+                valid = valid & keep
             if ecfg.latency == "exponential":
                 delay = jax.random.exponential(lat_sub, (4 * n,)) * ecfg.delay
             elif ecfg.latency == "constant":
@@ -356,17 +445,18 @@ def _make_round_fns(cfg: AFMConfig, ecfg: EventConfig, num_events: int,
                     msg_dir.at[slot].set(dirs4, mode="drop"),
                     msg_w.at[slot].set(es.w[src4], mode="drop"),
                     (free_head + nalloc) % m, free_n - nalloc,
-                    drop0 + dropped)
+                    drop0 + dropped, sent0, dfault0, fkey)
 
         # most rounds fire nothing: skip the pool scatters entirely then
         (msg_t, msg_key, msg_gen, msg_cid, msg_dst, msg_dir, msg_w,
-         free_head, free_n, dropped) = jax.lax.cond(
+         free_head, free_n, dropped, sent, dfault, fault_key) = jax.lax.cond(
             nfired > 0, enqueue, lambda p: p, pool)
         return es._replace(
             c=c, sizes=sizes, lat_key=lat_key,
             msg_t=msg_t, msg_key=msg_key, msg_gen=msg_gen, msg_cid=msg_cid,
             msg_dst=msg_dst, msg_dir=msg_dir, msg_w=msg_w,
-            free_head=free_head, free_n=free_n, dropped=dropped)
+            free_head=free_head, free_n=free_n, dropped=dropped,
+            sent=sent, dropped_fault=dfault, fault_key=fault_key)
 
     def sample_round(es: EventState, sample, step_key) -> EventState:
         """Deliver the next sample: search routes it, the GMU adapts
@@ -393,16 +483,34 @@ def _make_round_fns(cfg: AFMConfig, ecfg: EventConfig, num_events: int,
             * (jnp.arange(8)[:, None, None] < jnp.minimum(gmu_mask, 8)),
             axis=0)
         c = es.c + inc.reshape(-1)
-        fired0 = c >= theta
         g = res.gmu[0]
+        extra = {}
+        if dead_on:
+            # a dead GMU neither adapts nor is driven (the search still
+            # routes and the PRNG stream still advances — determinism is
+            # per-plan, not per-fault-outcome); the sample is consumed and
+            # counted in ``samples_dead``
+            alive_g = ~dead_at(t_s)[g]
+            w = jnp.where(alive_g, w, es.w)
+            c = jnp.where(alive_g, c, es.c)
+            extra["samples_dead"] = (es.samples_dead + 1
+                                     - alive_g.astype(jnp.int32))
+            clock = es.clock.at[g].set(
+                jnp.where(alive_g, t_s, es.clock[g]))
+            nevents = es.nevents.at[g].add(alive_g.astype(jnp.int32))
+        else:
+            clock = es.clock.at[g].set(t_s)
+            nevents = es.nevents.at[g].add(1)
+        fired0 = c >= theta
         es = es._replace(
             w=w, c=c, i=es.i + 1, ev=ev + 1, t=t_s,
-            clock=es.clock.at[g].set(t_s),
-            nevents=es.nevents.at[g].add(1),
+            clock=clock,
+            nevents=nevents,
             casc_key=es.casc_key.at[ev].set(k_chain),
             gmu=es.gmu.at[ev].set(g), q2=es.q2.at[ev].set(res.q2[0]),
             greedy=es.greedy.at[ev].set(res.greedy_steps[0]),
             rounds=es.rounds + 1,
+            **extra,
         )
         if max_waves >= 1:
             es = fire(es, fired0, ev, t_s, jnp.int32(1))
@@ -435,6 +543,11 @@ def _make_round_fns(cfg: AFMConfig, ecfg: EventConfig, num_events: int,
         dsts = jnp.where(ok, es.msg_dst[ii], n)          # n -> dropped row
         dirs = jnp.where(ok, es.msg_dir[ii], 0)
         ws = es.msg_w[ii]                                # (k_round, D)
+        if dead_on:
+            # messages addressed to a dead unit are consumed (their slots
+            # free normally) but not delivered: no adapt, no drive, no
+            # clock/event stamp — they count as ``dropped_fault``
+            ok = ok & ~dead_at(tmin)[jnp.minimum(dsts, n - 1)]
         # counter drive: one Bernoulli per received message, from the wave's
         # (4, N) tensor indexed by (direction, receiver)
         drive = jnp.where(ok, bern[dirs, jnp.minimum(dsts, n - 1)], False)
@@ -458,6 +571,14 @@ def _make_round_fns(cfg: AFMConfig, ecfg: EventConfig, num_events: int,
         w_rows = wr + l_c * (acc - nf[:, None] * wr)
         w = es.w.at[ridx].set(w_rows, mode="drop")
         nsel = jnp.sum(sel, dtype=jnp.int32)
+        extra = {}
+        if dead_on:
+            # ``ok`` already excludes dead receivers; the gap vs the nsel
+            # consumed slots is the dead-receiver fault count
+            ndeliv = jnp.sum(ok, dtype=jnp.int32)
+            extra["dropped_fault"] = es.dropped_fault + (nsel - ndeliv)
+        else:
+            ndeliv = nsel
         # free the delivered slots: push their ids onto the ring tail
         freed_rank = jnp.cumsum(sel.astype(jnp.int32)) - 1
         tail = jnp.where(sel, (es.free_head + es.free_n + freed_rank) % m, m)
@@ -471,8 +592,9 @@ def _make_round_fns(cfg: AFMConfig, ecfg: EventConfig, num_events: int,
             free_n=es.free_n + nsel,
             casc_key=es.casc_key.at[cid].set(ck),
             wcount=es.wcount.at[cid].set(k_wave),
-            deliveries=es.deliveries + nsel,
+            deliveries=es.deliveries + ndeliv,
             rounds=es.rounds + 1,
+            **extra,
         )
         new_fired = (c >= theta) & received
         allowed = new_fired & (k_wave < max_waves)
@@ -494,7 +616,11 @@ def _finish(es: EventState, far, near):
     report = EventReport(
         rounds=es.rounds, samples=es.ev,
         deliveries=es.deliveries, dropped=es.dropped + stranded,
-        t_end=es.t, clock=es.clock, nevents=es.nevents)
+        t_end=es.t, clock=es.clock, nevents=es.nevents,
+        sent=es.sent, dropped_fault=es.dropped_fault, stranded=stranded,
+        samples_dead=es.samples_dead,
+        shard_counts=jnp.stack([es.sent, es.deliveries, es.dropped,
+                                es.dropped_fault, stranded])[None, :])
     return final, aux, report
 
 
@@ -502,10 +628,13 @@ def _zero_fast_ok(cfg: AFMConfig, ecfg: EventConfig, num_events: int) -> bool:
     """True when the fused reference scan is bitwise-equivalent to simulating
     the rounds: zero latency (the parity regime), no explicit round budget
     (no truncation to account), auto engine, and a pool that cannot overflow
-    (at zero latency occupancy peaks at one fire's ≤ 4N messages)."""
+    (at zero latency occupancy peaks at one fire's ≤ 4N messages). An
+    active fault plan always disqualifies it: faults are simulated, so the
+    discrete-event engine must run."""
     m, _, _, _ = _resolve(cfg, ecfg, num_events)
     return (ecfg.latency == "zero" and ecfg.engine == "auto"
-            and ecfg.max_rounds is None and m >= 4 * cfg.n_units)
+            and ecfg.max_rounds is None and m >= 4 * cfg.n_units
+            and not ecfg.fault_active)
 
 
 def _make_fused_zero(cfg: AFMConfig, ecfg: EventConfig, num_events: int,
@@ -630,11 +759,20 @@ def _make_fused_zero(cfg: AFMConfig, ecfg: EventConfig, num_events: int,
         nev = nev.at[gmu].add(1)
         clock = jnp.maximum(clock, jnp.zeros((n,), jnp.float32)
                             .at[gmu].max(t_ev))
+        # zero latency + a 4N-capable pool never drops, loses, or strands:
+        # every attempted broadcast is delivered, so sent == deliveries
+        # (the engine counts the same totals — the fast-path parity test
+        # compares the report field for field)
+        zero = jnp.int32(0)
         report = EventReport(
             rounds=jnp.int32(e) + jnp.sum(waves),
-            samples=jnp.int32(e), deliveries=deliv, dropped=jnp.int32(0),
+            samples=jnp.int32(e), deliveries=deliv, dropped=zero,
             t_end=jnp.float32((e - 1) * spacing),
-            clock=clock, nevents=nev)
+            clock=clock, nevents=nev,
+            sent=deliv, dropped_fault=zero, stranded=zero,
+            samples_dead=zero,
+            shard_counts=jnp.stack([deliv, deliv, zero, zero,
+                                    zero])[None, :])
         return final, aux, report
 
     return go
@@ -808,11 +946,35 @@ def run_events(state: AFMState, samples: jnp.ndarray, step_keys: jnp.ndarray,
             waves=jnp.zeros((0,), jnp.int32),
             greedy_steps=jnp.zeros((0, 1), jnp.int32)), EventReport(
                 zero, zero, zero, zero, jnp.float32(0),
-                jnp.zeros((n,), jnp.float32), jnp.zeros((n,), jnp.int32))
+                jnp.zeros((n,), jnp.float32), jnp.zeros((n,), jnp.int32),
+                sent=zero, dropped_fault=zero, stranded=zero,
+                samples_dead=zero,
+                shard_counts=jnp.zeros((1, 5), jnp.int32))
     if lat_key is None:
         lat_key = jax.random.PRNGKey(lat_seed)
     pl = placement_base.resolve_placement(placement, shards=shards)
     fn = _compiled_runner(cfg, ecfg, e, search, p_fn, l_c_fn, bool(donate),
                           pl)
-    return fn(state, jnp.asarray(samples, jnp.float32),
-              jnp.asarray(step_keys, jnp.uint32), lat_key)
+    out = fn(state, jnp.asarray(samples, jnp.float32),
+             jnp.asarray(step_keys, jnp.uint32), lat_key)
+    if ecfg.max_rounds is None and ecfg.latency != "zero":
+        # Quiescence watchdog (ISSUE 10 satellite): with no explicit round
+        # budget the engine is supposed to drain completely — its internal
+        # round cap is a safety net against engine bugs, not a semantic
+        # bound. Tripping it strands in-flight messages; silently returning
+        # a truncated run here would violate the PR-4 truncation-visibility
+        # contract, so raise instead. Callers who *want* budgeted
+        # truncation set ``max_rounds`` and get the exact accounting.
+        stranded = int(out[2].stranded)
+        if stranded > 0:
+            raise RuntimeError(
+                f"run_events round budget exhausted at quiescence drain: "
+                f"{stranded} message(s) stranded after "
+                f"{int(out[2].rounds)} rounds (E={e}, "
+                f"latency={ecfg.latency!r}, delay={ecfg.delay}). The "
+                f"per-run safety cap of ~E*(max_waves+2) rounds was hit "
+                f"before the pool drained — the latency/traffic mix is "
+                f"generating more rounds than useful work. Set "
+                f"EventConfig.max_rounds for budgeted truncation with "
+                f"exact accounting, or reduce delay/sample_spacing ratio.")
+    return out

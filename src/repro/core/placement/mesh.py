@@ -122,6 +122,14 @@ class _Carry(NamedTuple):
     deliveries: jnp.ndarray  # () i32 local weight-message deliveries
     dropped: jnp.ndarray    # () i32 local pool-overflow drops
     lat_key: jnp.ndarray    # (2,) u32 per-shard latency stream
+    # fault-injection sidecar (repro.faults) — zeros / untouched key when
+    # the plan is inactive. Every counter is *pool-owner-side*: a halo
+    # message's sent/loss/overflow accounting lands on the receiving shard
+    # (the one that enqueues it), so per-shard identities hold exactly.
+    sent: jnp.ndarray          # () i32 broadcast candidates enqueued here
+    dropped_fault: jnp.ndarray  # () i32 injected losses + dead receivers
+    samples_dead: jnp.ndarray  # () i32 samples owned here with a dead GMU
+    fault_key: jnp.ndarray     # (2,) u32 per-shard fault stream
 
 
 class _Outbox(NamedTuple):
@@ -155,10 +163,14 @@ class MeshPlacement:
             raise ValueError(f"shards must be >= 1, got {self.shards}")
 
     def pool_capacity(self, cfg, ecfg) -> int:
-        """Per-shard pool slots: an even split of ``capacity``, or 8 · L."""
+        """Per-shard pool slots: an even split of ``capacity``, or 8 · L.
+        An active fault plan's ``pool_reserve`` withholds slots from every
+        shard's pool (forced overflow pressure, counted as overflow)."""
         n_local = max(1, cfg.n_units // self.shards)
         m = (ecfg.capacity // self.shards if ecfg.capacity is not None
              else 8 * n_local)
+        if ecfg.fault_active:
+            m = int(m) - ecfg.plan.pool_reserve
         return max(int(m), 4)
 
     def pack_scale(self, cfg, ecfg, num_events: int) -> None:
@@ -196,6 +208,12 @@ class MeshPlacement:
             raise ValueError(
                 "kernel='fused' is single-pool only (the megakernel holds "
                 "the whole lattice in one program); use shards=1")
+        if ecfg.fault_active and ecfg.plan.shard_latency_mult \
+                and len(ecfg.plan.shard_latency_mult) != self.shards:
+            raise ValueError(
+                f"FaultPlan.shard_latency_mult has "
+                f"{len(ecfg.plan.shard_latency_mult)} entries but the mesh "
+                f"has shards={self.shards}; one multiplier per shard")
         return _build_mesh_runner(self, cfg, ecfg, num_events,
                                   search, p_fn, l_c_fn)
 
@@ -225,6 +243,17 @@ def _build_mesh_runner(pl: MeshPlacement, cfg, ecfg, num_events: int,
     exact = search is afm_lib.search_exact
     use_far = cfg.greedy_use_far
     mesh = _MESHES.get(k_shards)
+    # fault-plan closures (repro.faults): static Python branches, so an
+    # inactive plan builds the exact fault-free graph (same contract as the
+    # single-pool engine)
+    plan = ecfg.plan
+    loss_on = ecfg.fault_active and plan.p_loss > 0.0
+    dead_on = ecfg.fault_active and plan.dropout_active
+    straggle_on = ecfg.fault_active and bool(plan.shard_latency_mult)
+    if dead_on:
+        dead_global = plan.dead_units(n)
+        d_lo = plan.dropout_start
+        d_hi = plan.dropout_start + plan.dropout_len
 
     # --- static local-lattice tables (shard-relative, boundary rows route
     # through the halo, off-lattice columns are dropped) ---
@@ -253,10 +282,19 @@ def _build_mesh_runner(pl: MeshPlacement, cfg, ecfg, num_events: int,
 
     def delays(lat_sub, count: int):
         if ecfg.latency == "exponential":
-            return jax.random.exponential(lat_sub, (count,)) * ecfg.delay
-        if ecfg.latency == "constant":
-            return jnp.full((count,), ecfg.delay, jnp.float32)
-        return jnp.zeros((count,), jnp.float32)
+            base = jax.random.exponential(lat_sub, (count,)) * ecfg.delay
+        elif ecfg.latency == "constant":
+            base = jnp.full((count,), ecfg.delay, jnp.float32)
+        else:
+            base = jnp.zeros((count,), jnp.float32)
+        if straggle_on:
+            # straggler injection: everything entering shard k's pool takes
+            # mult[k]x longer (a slow host delays the messages it owns —
+            # halo arrivals draw delays receiver-side, so this covers
+            # cross-shard traffic into the straggler too)
+            mults = jnp.asarray(plan.shard_latency_mult, jnp.float32)
+            base = base * mults[jax.lax.axis_index(AXIS)]
+        return base
 
     def split_lat(lat_key):
         # the stream advances once per draw site whether or not anything
@@ -275,7 +313,18 @@ def _build_mesh_runner(pl: MeshPlacement, cfg, ecfg, num_events: int,
     def enqueue(cy: _Carry, valid, dstv, dirv, wv, tv, genv, cidv) -> _Carry:
         """Allocate pool slots off the free ring for the valid candidates:
         the r-th valid candidate takes the r-th free slot; candidates past
-        the free count are dropped and counted."""
+        the free count are dropped and counted. Fault accounting is
+        owner-side: ``sent`` counts every valid candidate before the loss
+        draw, so sent == delivered + overflow + fault + stranded per shard."""
+        cy = cy._replace(sent=cy.sent + jnp.sum(valid, dtype=jnp.int32))
+        if loss_on:
+            fkey, sub = jax.random.split(cy.fault_key)
+            keep = jax.random.uniform(sub, valid.shape) >= plan.p_loss
+            cy = cy._replace(
+                fault_key=fkey,
+                dropped_fault=cy.dropped_fault
+                + jnp.sum(valid & ~keep, dtype=jnp.int32))
+            valid = valid & keep
         rank = jnp.cumsum(valid.astype(jnp.int32)) - 1
         can = valid & (rank < cy.free_n)
         slot = jnp.where(can, cy.free_ring[(cy.free_head + rank) % m], m)
@@ -354,6 +403,16 @@ def _build_mesh_runner(pl: MeshPlacement, cfg, ecfg, num_events: int,
         """Per-shard round handlers (closures over the shard index, the
         run's starting sample count, and the replicated link tables — all
         loop-invariant)."""
+        if dead_on:
+            # the local band of the plan's global dead-unit mask: the dead
+            # set is shard-layout-independent, only its ownership is sliced
+            dead_band = jax.lax.dynamic_slice(
+                dead_global.astype(jnp.int32), (me * length,),
+                (length,)) != 0
+
+            def dead_at(t):
+                """(L,) bool — local units dead at simulated time ``t``."""
+                return dead_band & (t >= d_lo) & (t < d_hi)
 
         def delivery_round(cy: _Carry, tmin, gmin, cmin, sel):
             """Deliver one local round: the ≤k_round selected slots are
@@ -376,6 +435,10 @@ def _build_mesh_runner(pl: MeshPlacement, cfg, ecfg, num_events: int,
             dsts = jnp.where(ok, cy.msg_dst[ii], length)
             dirs = jnp.where(ok, cy.msg_dir[ii], 0)
             ws = cy.msg_w[ii]
+            if dead_on:
+                # messages to a dead local unit are consumed but not
+                # delivered (dropped_fault); their slots free normally
+                ok = ok & ~dead_at(tmin)[jnp.minimum(dsts, length - 1)]
             drive = jnp.where(
                 ok, bern[dirs, jnp.minimum(dsts, length - 1)], False)
             c = cy.c.at[dsts].add(drive.astype(jnp.int32), mode="drop")
@@ -394,6 +457,13 @@ def _build_mesh_runner(pl: MeshPlacement, cfg, ecfg, num_events: int,
             w_rows = wr + l_c * (acc - nf[:, None] * wr)
             w = cy.w.at[ridx].set(w_rows, mode="drop")
             nsel = jnp.sum(sel, dtype=jnp.int32)
+            extra = {}
+            if dead_on:
+                ndeliv = jnp.sum(ok, dtype=jnp.int32)
+                extra["dropped_fault"] = (cy.dropped_fault
+                                          + (nsel - ndeliv))
+            else:
+                ndeliv = nsel
             freed_rank = jnp.cumsum(sel.astype(jnp.int32)) - 1
             tail = jnp.where(sel,
                              (cy.free_head + cy.free_n + freed_rank) % m, m)
@@ -408,10 +478,13 @@ def _build_mesh_runner(pl: MeshPlacement, cfg, ecfg, num_events: int,
                 casc_key=cy.casc_key.at[cid].set(ck),
                 wcount=cy.wcount.at[cid].set(
                     jnp.maximum(cy.wcount[cid], gmin)),
-                deliveries=cy.deliveries + nsel,
-                drounds=cy.drounds + 1)
+                deliveries=cy.deliveries + ndeliv,
+                drounds=cy.drounds + 1,
+                **extra)
             new_fired = (c >= theta) & received
             allowed = new_fired & (gmin < max_waves)
+            if dead_on:
+                allowed = allowed & ~dead_at(tmin)
             return fire(cy, me, allowed, cid, tmin, gmin + 1)
 
         def greedy(w_loc, sample, jstar, qstar):
@@ -476,7 +549,19 @@ def _build_mesh_runner(pl: MeshPlacement, cfg, ecfg, num_events: int,
             lo = me * length
             mine = (gmu_g >= lo) & (gmu_g < lo + length)
             lu = jnp.clip(gmu_g - lo, 0, length - 1)
-            owner_at = jnp.where(mine, lu, length)
+            extra = {}
+            if dead_on:
+                # a dead GMU neither adapts nor is driven; the sample is
+                # consumed and counted by the owning shard (search + PRNG
+                # streams advance identically — determinism is per-plan)
+                alive_g = ~dead_at(t_s)[lu]
+                mine_live = mine & alive_g
+                extra["samples_dead"] = (
+                    cy.samples_dead
+                    + (mine & ~alive_g).astype(jnp.int32))
+            else:
+                mine_live = mine
+            owner_at = jnp.where(mine_live, lu, length)
             upd = cy.w[lu] + cfg.l_s * (sample - cy.w[lu])
             w = cy.w.at[owner_at].set(upd, mode="drop")
             # counter drive: one Bernoulli at the GMU from the owner's
@@ -484,9 +569,11 @@ def _build_mesh_runner(pl: MeshPlacement, cfg, ecfg, num_events: int,
             k_drive, k_chain = jax.random.split(k_cascade)
             hit = jax.random.uniform(jax.random.fold_in(k_drive, me),
                                      ()) < p_i
-            c = cy.c.at[jnp.where(mine & hit, lu, length)].add(
+            c = cy.c.at[jnp.where(mine_live & hit, lu, length)].add(
                 1, mode="drop")
             fired0 = c >= theta
+            if dead_on:
+                fired0 = fired0 & ~dead_at(t_s)
             cy = cy._replace(
                 w=w, c=c, t=jnp.maximum(cy.t, t_s),
                 clock=cy.clock.at[owner_at].set(t_s, mode="drop"),
@@ -495,7 +582,8 @@ def _build_mesh_runner(pl: MeshPlacement, cfg, ecfg, num_events: int,
                     jax.random.fold_in(k_chain, me)),
                 gmu=cy.gmu.at[ev].set(gmu_g),
                 q2=cy.q2.at[ev].set(q2v),
-                greedy=cy.greedy.at[ev].set(gsteps))
+                greedy=cy.greedy.at[ev].set(gsteps),
+                **extra)
             if max_waves >= 1:
                 cy, out = fire(cy, me, fired0, ev, t_s, jnp.int32(1))
             else:
@@ -553,7 +641,12 @@ def _build_mesh_runner(pl: MeshPlacement, cfg, ecfg, num_events: int,
             q2=z((e,), jnp.float32), greedy=z((e,), jnp.int32),
             t=jnp.float32(0.0), drounds=jnp.int32(0),
             deliveries=jnp.int32(0), dropped=jnp.int32(0),
-            lat_key=jax.random.fold_in(lat_key, me))
+            lat_key=jax.random.fold_in(lat_key, me),
+            sent=jnp.int32(0), dropped_fault=jnp.int32(0),
+            samples_dead=jnp.int32(0),
+            fault_key=(jax.random.fold_in(
+                jax.random.PRNGKey(plan.seed), me)
+                if ecfg.fault_active else z((2,), jnp.uint32)))
 
         def sbody(cy, xs):
             sample, key, ev = xs
@@ -564,6 +657,11 @@ def _build_mesh_runner(pl: MeshPlacement, cfg, ecfg, num_events: int,
             sbody, cy, (samples, step_keys, jnp.arange(e, dtype=jnp.int32)))
         cy = drain(cy, jnp.inf)
         stranded = m - cy.free_n       # nonzero only on an iter_cap trip
+        # per-shard accounting row [sent, delivered, overflow, fault,
+        # stranded]: gathered sharded into the report's (K, 5) table so the
+        # conservation identity is checkable per shard, not just globally
+        shard_row = jnp.stack([cy.sent, cy.deliveries, cy.dropped,
+                               cy.dropped_fault, stranded])[None, :]
         return (cy.w.reshape(rows, side, d), cy.c, cy.clock, cy.nevents,
                 jax.lax.psum(cy.sizes, AXIS),
                 jax.lax.pmax(cy.wcount, AXIS),
@@ -571,7 +669,12 @@ def _build_mesh_runner(pl: MeshPlacement, cfg, ecfg, num_events: int,
                 jnp.int32(e) + jax.lax.psum(cy.drounds, AXIS),
                 jax.lax.psum(cy.deliveries, AXIS),
                 jax.lax.psum(cy.dropped + stranded, AXIS),
-                jax.lax.pmax(cy.t, AXIS))
+                jax.lax.pmax(cy.t, AXIS),
+                jax.lax.psum(cy.sent, AXIS),
+                jax.lax.psum(cy.dropped_fault, AXIS),
+                jax.lax.psum(stranded, AXIS),
+                jax.lax.psum(cy.samples_dead, AXIS),
+                shard_row)
 
     sharded = P(AXIS)
     repl = P()
@@ -580,11 +683,13 @@ def _build_mesh_runner(pl: MeshPlacement, cfg, ecfg, num_events: int,
         in_specs=(sharded, sharded, repl, repl, repl, repl, repl, repl),
         out_specs=(sharded, sharded, sharded, sharded,
                    repl, repl, repl, repl, repl,
-                   repl, repl, repl, repl))
+                   repl, repl, repl, repl,
+                   repl, repl, repl, repl, sharded))
 
     def go(state, samples, step_keys, lat_key):
         (w, c, clock, nevents, sizes, waves, gmu, q2, greedy,
-         rounds, deliveries, dropped, t_end) = mapped(
+         rounds, deliveries, dropped, t_end,
+         sent, dropped_fault, stranded, samples_dead, shard_counts) = mapped(
             state.w.reshape(side, side, d),
             jnp.asarray(state.c, jnp.int32),
             state.near, state.far, jnp.asarray(state.i, jnp.int32),
@@ -597,7 +702,9 @@ def _build_mesh_runner(pl: MeshPlacement, cfg, ecfg, num_events: int,
             waves=waves, greedy_steps=greedy[:, None])
         report = events_lib.EventReport(
             rounds=rounds, samples=jnp.int32(e), deliveries=deliveries,
-            dropped=dropped, t_end=t_end, clock=clock, nevents=nevents)
+            dropped=dropped, t_end=t_end, clock=clock, nevents=nevents,
+            sent=sent, dropped_fault=dropped_fault, stranded=stranded,
+            samples_dead=samples_dead, shard_counts=shard_counts)
         return final, aux, report
 
     return go

@@ -29,8 +29,14 @@ def wave_cap(cfg) -> int:
 
 
 def pool_capacity(cfg, ecfg) -> int:
-    """Pool slots for one dense pool: ``capacity`` or 8·N, at least 4."""
+    """Pool slots for one dense pool: ``capacity`` or 8·N, at least 4.
+
+    An active fault plan's ``pool_reserve`` withholds slots (forced
+    overflow pressure — the drops land in ``dropped_overflow``, never the
+    fault counter, pinning the accounting split)."""
     m = ecfg.capacity if ecfg.capacity is not None else 8 * cfg.n_units
+    if ecfg.fault_active:
+        m = int(m) - ecfg.plan.pool_reserve
     return max(int(m), 4)
 
 
@@ -138,6 +144,11 @@ class SinglePool:
         # late import: events imports this module for its selector aliases
         from repro.core import events
 
+        if ecfg.fault_active and ecfg.plan.shard_latency_mult:
+            raise ValueError(
+                "FaultPlan.shard_latency_mult injects per-shard stragglers "
+                "and needs placement='mesh' with shards == len(mult) >= 2; "
+                "the single-pool placement has no shards to slow down")
         if events._zero_fast_ok(cfg, ecfg, num_events):
             return events._make_fused_zero(cfg, ecfg, num_events,
                                            search, p_fn, l_c_fn)

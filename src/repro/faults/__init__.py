@@ -1,0 +1,145 @@
+"""Deterministic fault injection for the event engine (``FaultPlan``).
+
+The paper's core claim is robustness *by construction*: units adapt
+autonomously through sparse local messages, so the map should degrade
+gracefully — not collapse — when messages are lost, units die and rejoin,
+or shards straggle. This module makes that claim testable: a ``FaultPlan``
+is a frozen, hashable description of the faults to inject, seeded by its
+own PRNG stream so a faulty run is **bitwise reproducible** for a given
+``(plan, engine seed, shards)`` and never perturbs the fault-free PRNG
+discipline (``FaultPlan.none()`` is golden-pinned bitwise against
+``tests/golden/async_engine.npz``).
+
+Fault axes (all composable, all counted in ``EventReport``):
+
+- **broadcast loss** (``p_loss``): each enqueued weight-broadcast message
+  is independently lost with probability ``p_loss`` — drawn from the
+  plan's own key chain, never the training chains. Lost messages count as
+  ``dropped_fault``, so the accounting identity
+  ``sent == deliveries + dropped_overflow + dropped_fault + stranded``
+  always holds.
+- **unit dropout windows** (``dropout_frac`` / ``dropout_start`` /
+  ``dropout_len``): a seeded fraction of units is *dead* for the simulated
+  time window ``[dropout_start, dropout_start + dropout_len)``. Dead units
+  neither adapt (sample or broadcast receipt) nor broadcast; messages
+  delivered to a dead unit are consumed and counted as ``dropped_fault``;
+  samples routed to a dead GMU are counted in ``samples_dead``. After the
+  window the unit rejoins with whatever counter it accumulated.
+- **shard stragglers** (``shard_latency_mult``): per-shard multipliers on
+  message latency for the mesh placement — shard ``k``'s outgoing
+  messages take ``mult[k]×`` the base delay, modelling a slow host.
+  Requires ``placement='mesh'`` with ``shards == len(mult) >= 2``.
+- **pool pressure** (``pool_reserve``): statically removes slots from
+  every pool (per shard under a mesh), forcing overflow drops — which
+  count as ``dropped_overflow``, *not* fault drops, pinning the
+  accounting split.
+
+``EventConfig(faults=plan)`` (or ``backend_options={"faults": {...}}`` on
+the ``async`` backend) threads a plan through both placements. A ``None``
+or ``FaultPlan.none()`` plan builds the exact pre-fault compute graph.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Mapping
+
+__all__ = ["FaultPlan", "resolve_plan"]
+
+
+@dataclasses.dataclass(frozen=True)
+class FaultPlan:
+    """Seeded, hashable fault-injection plan (see module docstring).
+
+    seed:               root of the plan's PRNG stream (message-loss draws,
+                        dead-unit selection). Independent of the engine's
+                        training/latency streams; under a mesh each shard
+                        folds its shard id into this root.
+    p_loss:             per-message broadcast loss probability in [0, 1].
+    dropout_frac:       fraction of units dead during the window, in [0, 1].
+                        The dead set is ``round(frac * N)`` units drawn by a
+                        seeded permutation.
+    dropout_start:      simulated time the window opens (sample-spacing
+                        units, like ``EventConfig.delay``).
+    dropout_len:        window length; 0 disables dropout.
+    shard_latency_mult: per-shard latency multipliers (mesh only; length
+                        must equal the shard count, every entry > 0).
+    pool_reserve:       pool slots withheld from every pool to force
+                        overflow pressure (>= 0).
+    """
+    seed: int = 0
+    p_loss: float = 0.0
+    dropout_frac: float = 0.0
+    dropout_start: float = 0.0
+    dropout_len: float = 0.0
+    shard_latency_mult: tuple = ()
+    pool_reserve: int = 0
+
+    def __post_init__(self):
+        object.__setattr__(self, "seed", int(self.seed))
+        object.__setattr__(self, "p_loss", float(self.p_loss))
+        object.__setattr__(self, "dropout_frac", float(self.dropout_frac))
+        object.__setattr__(self, "dropout_start", float(self.dropout_start))
+        object.__setattr__(self, "dropout_len", float(self.dropout_len))
+        object.__setattr__(self, "shard_latency_mult",
+                           tuple(float(x) for x in self.shard_latency_mult))
+        object.__setattr__(self, "pool_reserve", int(self.pool_reserve))
+        if not 0.0 <= self.p_loss <= 1.0:
+            raise ValueError(f"p_loss must be in [0, 1], got {self.p_loss}")
+        if not 0.0 <= self.dropout_frac <= 1.0:
+            raise ValueError(
+                f"dropout_frac must be in [0, 1], got {self.dropout_frac}")
+        if self.dropout_start < 0 or self.dropout_len < 0:
+            raise ValueError("dropout_start/dropout_len must be >= 0")
+        if any(x <= 0 for x in self.shard_latency_mult):
+            raise ValueError("shard_latency_mult entries must be > 0, got "
+                             f"{self.shard_latency_mult}")
+        if self.pool_reserve < 0:
+            raise ValueError(
+                f"pool_reserve must be >= 0, got {self.pool_reserve}")
+
+    @classmethod
+    def none(cls) -> "FaultPlan":
+        """The fault-free plan: bitwise-identical engine to ``faults=None``
+        (the golden contract — ``tests/test_faults.py`` pins it)."""
+        return cls()
+
+    def is_none(self) -> bool:
+        """True when no fault axis is active (the seed alone activates
+        nothing: a plan with only a seed set is still fault-free)."""
+        return (self.p_loss == 0.0
+                and not (self.dropout_frac > 0.0 and self.dropout_len > 0.0)
+                and not self.shard_latency_mult
+                and self.pool_reserve == 0)
+
+    @property
+    def dropout_active(self) -> bool:
+        return self.dropout_frac > 0.0 and self.dropout_len > 0.0
+
+    def dead_units(self, n: int):
+        """(N,) bool — the seeded dead-unit selection: exactly
+        ``round(dropout_frac * n)`` units, drawn by a permutation keyed on
+        the plan seed (shard-independent: the mesh slices its local band
+        out of this same global mask)."""
+        import jax
+        import jax.numpy as jnp
+
+        k = int(round(self.dropout_frac * n))
+        sel = jnp.zeros((n,), bool)
+        if k == 0 or not self.dropout_active:
+            return sel
+        order = jax.random.permutation(
+            jax.random.PRNGKey(self.seed), jnp.arange(n, dtype=jnp.int32))
+        return sel.at[order[:k]].set(True)
+
+
+def resolve_plan(spec) -> FaultPlan | None:
+    """Normalize a fault spec: ``None`` passes through, a ``FaultPlan``
+    passes through, a mapping becomes ``FaultPlan(**spec)`` (the
+    ``backend_options={"faults": {...}}`` spelling)."""
+    if spec is None or isinstance(spec, FaultPlan):
+        return spec
+    if isinstance(spec, Mapping):
+        return FaultPlan(**spec)
+    raise ValueError(
+        f"faults must be None, a FaultPlan, or a mapping of FaultPlan "
+        f"fields, got {spec!r}")

@@ -141,6 +141,13 @@ def _serve_blocks(args, svc, blocks):
     else:
         call = getattr(svc, method)
     kwargs = {"lattice": args.lattice} if args.endpoint == "transform" else {}
+    if getattr(args, "max_retries", 0):
+        # Overloaded sheds become transient: each client retries with
+        # bounded backoff honoring the fleet's retry_after hint, so a
+        # burst past admission capacity drains instead of failing the run
+        from repro.serving.retry import call_with_retries
+        call = functools.partial(call_with_retries, call,
+                                 max_retries=args.max_retries)
 
     def one(i, block):
         outs[i] = np.asarray(call(block, **kwargs))
@@ -202,6 +209,11 @@ def main():
                     help="serve through a MapFleet of N replica workers "
                          "(least-outstanding routing, admission control, "
                          "rolling reload)")
+    ap.add_argument("--max-retries", type=int, default=0,
+                    help="retry Overloaded sheds per request this many "
+                         "times with bounded exponential backoff honoring "
+                         "the fleet's retry_after hint (default 0: a shed "
+                         "fails the run)")
     ap.add_argument("--shed-deadline-ms", type=float, default=None,
                     help="fleet admission: max milliseconds a caller may "
                          "wait for a slot before an Overloaded shed "

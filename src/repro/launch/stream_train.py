@@ -24,11 +24,23 @@ readers never observe a torn map:
 The run reports training-event throughput, swap count, client request
 count, and the final per-sample quantization error of the served map —
 ``qe ... finite=True`` is the line CI's smoke step asserts on.
+
+**Crash resume** (ISSUE 10): with ``--checkpoint-dir`` the trainer writes a
+``TrainCheckpoint`` (dense state + latency-key position + sample cursor,
+SHA-256-manifested) every ``--checkpoint-every`` consumed samples, and a
+SIGTERM checkpoints once more and stops cleanly (``--die-after N`` raises
+that SIGTERM from inside the loop for deterministic kill tests). Rerunning
+with ``--resume`` verifies the checkpoint's checksums ("checkpoint checksum
+verified" is CI's assert line), restores state/keys/cursor, and continues —
+because per-chunk training keys are step-indexed (``fold_in(seed, step)``)
+and the latency chain position is saved, the resumed run reproduces the
+uninterrupted run **bitwise** at zero message latency.
 """
 from __future__ import annotations
 
 import argparse
 import dataclasses
+import signal
 import threading
 import time
 
@@ -37,8 +49,11 @@ import numpy as np
 
 from repro.api import AFMConfig, MapStore, TopoMap
 from repro.api.backends import add_backend_argument
+from repro.api.persistence import _state_like
 from repro.data import DATASETS, make_dataset
 from repro.serving import GatewayStats, MapGateway, MapService
+from repro.training.checkpoint import (load_train_checkpoint,
+                                       save_train_checkpoint)
 
 
 @dataclasses.dataclass
@@ -52,6 +67,9 @@ class StreamReport:
     client_errors: list         # exceptions raised in client threads
     qe: np.ndarray              # final per-sample quantization errors
     gateway: GatewayStats
+    interrupted: bool = False   # stopped early on SIGTERM / --die-after
+    checkpoint_path: str | None = None   # last checkpoint written (if any)
+    resumed_from: dict | None = None     # resumed cursor (if --resume hit)
 
     @property
     def events_per_sec(self) -> float:
@@ -68,7 +86,10 @@ def run_stream(cfg: AFMConfig, train_data, eval_data, *,
                clients: int = 2, client_batch: int = 8,
                store_root: str | None = None, name: str = "stream",
                max_delay: float = 0.001, seed: int = 0,
-               min_client_reads: int = 1, log=None) -> StreamReport:
+               min_client_reads: int = 1,
+               checkpoint_dir: str | None = None, checkpoint_every: int = 0,
+               resume: bool = False, die_after: int | None = None,
+               log=None) -> StreamReport:
     """Train on ``events`` samples while serving concurrent gateway reads.
 
     The stream is ``train_data`` cycled in ``chunk``-sized
@@ -81,19 +102,80 @@ def run_stream(cfg: AFMConfig, train_data, eval_data, *,
     client completes its first (compile-paying) read, so the loop keeps
     serving until at least ``min_client_reads`` requests landed (bounded
     wait) — the report always reflects genuine train/serve overlap.
+
+    ``checkpoint_dir`` turns on crash resume: a ``TrainCheckpoint`` lands
+    there every ``checkpoint_every`` consumed samples (default
+    ``swap_every``) and once more on SIGTERM. Checkpoints are cut at chunk
+    boundaries, where the event engine is drained to quiescence — the dense
+    state plus the latency-key position plus the cursor is the complete
+    in-flight state, which is what makes ``resume=True`` bitwise-faithful
+    (per-chunk keys are step-indexed, so the resumed run consumes the
+    identical PRNG streams the uninterrupted run would have).
+    ``die_after=N`` raises SIGTERM from inside the loop once N samples are
+    consumed — the deterministic stand-in for an external kill.
     """
     log = log or (lambda *_: None)
     train_data = np.asarray(train_data, np.float32)
     eval_data = np.asarray(eval_data, np.float32)
     chunk = max(1, min(chunk, events))
-    tm = TopoMap(cfg, backend=backend,
-                 backend_options=dict(backend_options or {}), seed=seed)
+    if checkpoint_dir and checkpoint_every <= 0:
+        checkpoint_every = swap_every
+    if (resume or die_after is not None) and not checkpoint_dir:
+        raise ValueError("resume/die_after need checkpoint_dir set")
 
-    # warm start: the serving stack needs a fitted state to open with
+    # SIGTERM lands as a graceful stop flag checked at chunk boundaries;
+    # the previous handler is restored on exit. Off the main thread (or
+    # under a non-default handler policy) --die-after falls back to setting
+    # the flag directly.
+    interrupt = threading.Event()
+    prev_handler = None
+    handler_installed = False
+    if checkpoint_dir and threading.current_thread() is threading.main_thread():
+        prev_handler = signal.signal(signal.SIGTERM,
+                                     lambda *_: interrupt.set())
+        handler_installed = True
+
+    resumed_from = None
     consumed = 0
-    first = train_data[:chunk]
-    tm.partial_fit(first, key=jax.random.fold_in(jax.random.PRNGKey(seed), 0))
-    consumed += len(first)
+    cursor = {"pos": 0, "step": 1, "since_swap": 0, "swaps": 0}
+    if resume:
+        tc = load_train_checkpoint(checkpoint_dir,
+                                   state_like=_state_like(cfg),
+                                   expect_config=dataclasses.asdict(cfg))
+        tm = TopoMap.from_state(tc.state, cfg, backend=backend,
+                                backend_options=dict(backend_options or {}),
+                                seed=seed)
+        if tc.lat_key is not None and hasattr(tm.backend, "lat_key"):
+            tm.backend.lat_key = tc.lat_key
+        consumed = int(tc.cursor.get("consumed", 0))
+        cursor = {k: int(tc.cursor.get(k, cursor[k])) for k in cursor}
+        resumed_from = dict(tc.cursor)
+        log(f"resume: checkpoint checksum verified — continuing at event "
+            f"{consumed} (step {cursor['step']}, "
+            f"{len(tc.checksums)} payload files)")
+    else:
+        tm = TopoMap(cfg, backend=backend,
+                     backend_options=dict(backend_options or {}), seed=seed)
+        # warm start: the serving stack needs a fitted state to open with
+        first = train_data[:chunk]
+        tm.partial_fit(first,
+                       key=jax.random.fold_in(jax.random.PRNGKey(seed), 0))
+        consumed += len(first)
+
+    last_ckpt = consumed
+    checkpoint_path = None
+
+    def save_ckpt() -> None:
+        nonlocal last_ckpt, checkpoint_path
+        cur = {"consumed": consumed, **cursor}
+        save_train_checkpoint(
+            checkpoint_dir, config=dataclasses.asdict(cfg),
+            state=jax.tree.map(np.asarray, tm.state_), cursor=cur,
+            lat_key=getattr(tm.backend, "lat_key", None),
+            meta={"name": name, "events_target": events, "seed": seed})
+        last_ckpt = consumed
+        checkpoint_path = checkpoint_dir
+        log(f"  checkpoint at {consumed} events -> {checkpoint_dir}")
 
     store = MapStore(store_root) if store_root else None
     svc = None
@@ -132,33 +214,51 @@ def run_stream(cfg: AFMConfig, train_data, eval_data, *,
         else:
             svc.swap(tm.state_)
 
-    swaps = 0
+    interrupted = False
     t0 = time.perf_counter()
     try:
         for t in threads:
             t.start()
-        since_swap, pos, step = consumed, consumed % len(train_data), 1
+        if not resume:
+            cursor["pos"] = consumed % len(train_data)
+            cursor["since_swap"] = consumed
         while consumed < events:
             take = min(chunk, events - consumed)
-            batch = np.take(train_data, range(pos, pos + take), axis=0,
-                            mode="wrap")
-            pos = (pos + take) % len(train_data)
+            batch = np.take(train_data,
+                            range(cursor["pos"], cursor["pos"] + take),
+                            axis=0, mode="wrap")
+            cursor["pos"] = (cursor["pos"] + take) % len(train_data)
             tm.partial_fit(batch, key=jax.random.fold_in(
-                jax.random.PRNGKey(seed), step))
+                jax.random.PRNGKey(seed), cursor["step"]))
             consumed += take
-            since_swap += take
-            step += 1
-            if since_swap >= swap_every:
+            cursor["since_swap"] += take
+            cursor["step"] += 1
+            if cursor["since_swap"] >= swap_every:
                 publish()
-                swaps += 1
-                since_swap = 0
+                cursor["swaps"] += 1
+                cursor["since_swap"] = 0
                 log(f"  published after {consumed} events "
-                    f"(swap {swaps}, {sum(requests)} reads served)")
-        if since_swap:                  # final state always reaches serving
-            publish()
-            swaps += 1
+                    f"(swap {cursor['swaps']}, {sum(requests)} reads "
+                    f"served)")
+            if checkpoint_dir and consumed - last_ckpt >= checkpoint_every:
+                save_ckpt()
+            if die_after is not None and consumed >= die_after:
+                die_after = None        # deliver the kill exactly once
+                if handler_installed:   # exercise the real signal path
+                    signal.raise_signal(signal.SIGTERM)
+                else:
+                    interrupt.set()
+            if interrupt.is_set():
+                interrupted = True
+                save_ckpt()             # the state the resume picks up
+                log(f"  interrupted at {consumed} events — checkpoint "
+                    f"saved, resume with --resume")
+                break
+        if not interrupted and cursor["since_swap"]:
+            publish()                   # final state always reaches serving
+            cursor["swaps"] += 1
         seconds = time.perf_counter() - t0
-        if clients > 0:
+        if clients > 0 and not interrupted:
             deadline = time.perf_counter() + 30.0
             while (sum(requests) < min_client_reads and not errors
                    and time.perf_counter() < deadline):
@@ -173,9 +273,14 @@ def run_stream(cfg: AFMConfig, train_data, eval_data, *,
     finally:
         stop.set()
         gw.close()
-    return StreamReport(events=consumed, seconds=seconds, swaps=swaps,
+        if handler_installed:
+            signal.signal(signal.SIGTERM, prev_handler or signal.SIG_DFL)
+    return StreamReport(events=consumed, seconds=seconds,
+                        swaps=cursor["swaps"],
                         client_requests=sum(requests), client_errors=errors,
-                        qe=qe, gateway=stats)
+                        qe=qe, gateway=stats, interrupted=interrupted,
+                        checkpoint_path=checkpoint_path,
+                        resumed_from=resumed_from)
 
 
 def main():
@@ -215,6 +320,28 @@ def main():
                          "--side)")
     ap.add_argument("--search", default=None,
                     choices=(None, "heuristic", "exact"))
+    ap.add_argument("--checkpoint-dir", default=None,
+                    help="write crash-resume TrainCheckpoints here (every "
+                         "--checkpoint-every samples and on SIGTERM)")
+    ap.add_argument("--checkpoint-every", type=int, default=0,
+                    help="samples between checkpoints (default: "
+                         "--swap-every)")
+    ap.add_argument("--resume", action="store_true",
+                    help="resume from --checkpoint-dir (verifies checksums; "
+                         "bitwise-faithful at zero latency)")
+    ap.add_argument("--die-after", type=int, default=None,
+                    help="raise SIGTERM after consuming N samples "
+                         "(deterministic kill for resume tests)")
+    ap.add_argument("--p-loss", type=float, default=0.0,
+                    help="async backend: fault injection — broadcast loss "
+                         "probability per message")
+    ap.add_argument("--dropout-frac", type=float, default=0.0,
+                    help="async backend: fault injection — fraction of "
+                         "units dead during the dropout window")
+    ap.add_argument("--dropout-start", type=float, default=0.0)
+    ap.add_argument("--dropout-len", type=float, default=0.0)
+    ap.add_argument("--fault-seed", type=int, default=0,
+                    help="seed of the fault plan's own PRNG stream")
     ap.add_argument("--e-factor", type=float, default=0.5)
     ap.add_argument("--train-size", type=int, default=2000)
     ap.add_argument("--eval-size", type=int, default=256)
@@ -228,16 +355,25 @@ def main():
                                   test_size=min(spec.test, args.eval_size))
     cfg = AFMConfig(side=args.side, dim=spec.features,
                     e_factor=args.e_factor, i_max=args.events)
+    faults = None
+    if args.p_loss or (args.dropout_frac and args.dropout_len):
+        faults = {"seed": args.fault_seed, "p_loss": args.p_loss,
+                  "dropout_frac": args.dropout_frac,
+                  "dropout_start": args.dropout_start,
+                  "dropout_len": args.dropout_len}
     opts: dict = {}
     if args.backend == "async":
         opts.update(latency=args.latency, delay=args.delay,
                     engine=args.engine, lat_seed=args.lat_seed)
         if args.shards > 1:
             opts.update(placement="mesh", shards=args.shards)
+        if faults:
+            opts["faults"] = faults
     elif (args.latency != "zero" or args.delay or args.engine != "auto"
-          or args.lat_seed or args.shards > 1):
-        raise SystemExit("--latency/--delay/--engine/--lat-seed/--shards "
-                         "only apply to the async backend")
+          or args.lat_seed or args.shards > 1 or faults):
+        raise SystemExit("--latency/--delay/--engine/--lat-seed/--shards/"
+                         "--p-loss/--dropout-* only apply to the async "
+                         "backend")
     if args.search:
         if args.backend == "sharded":
             raise SystemExit("--search is not supported by the sharded "
@@ -254,7 +390,14 @@ def main():
                      clients=args.clients, client_batch=args.client_batch,
                      store_root=args.store, name=name,
                      max_delay=args.coalesce_ms / 1000.0, seed=args.seed,
+                     checkpoint_dir=args.checkpoint_dir,
+                     checkpoint_every=args.checkpoint_every,
+                     resume=args.resume, die_after=args.die_after,
                      log=print)
+    if rep.interrupted:
+        print(f"stream interrupted at {rep.events} events — checkpoint "
+              f"saved to {rep.checkpoint_path}; rerun with --resume to "
+              f"continue")
     print(f"stream: trained {rep.events} events in {rep.seconds:.2f}s "
           f"({rep.events_per_sec:.0f} events/s), {rep.swaps} swaps, "
           f"{rep.client_requests} client reads "

@@ -8,6 +8,7 @@ publish into a live service/gateway/fleet between requests via the atomic
 canonical train-and-serve consumer (DESIGN.md §7; the fleet tier is §8)."""
 from repro.serving.fleet import FleetStats, MapFleet, Overloaded
 from repro.serving.gateway import GatewayStats, MapGateway
+from repro.serving.retry import call_with_retries
 from repro.serving.maps import (DEFAULT_BUCKETS, GLOBAL_COMPILE_CACHE,
                                 BmuEngine, CompileCache, LatencyHistogram,
                                 MapService, ServiceStats)
@@ -17,5 +18,5 @@ from repro.serving.serve_step import (init_serving_cache, make_decode_step,
 __all__ = ["BmuEngine", "CompileCache", "DEFAULT_BUCKETS", "FleetStats",
            "GatewayStats", "GLOBAL_COMPILE_CACHE", "LatencyHistogram",
            "MapFleet", "MapGateway", "MapService", "Overloaded",
-           "ServiceStats", "init_serving_cache", "make_decode_step",
-           "make_prefill"]
+           "ServiceStats", "call_with_retries", "init_serving_cache",
+           "make_decode_step", "make_prefill"]

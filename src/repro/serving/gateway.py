@@ -108,12 +108,20 @@ class MapGateway:
              before the dispatcher flushes it (the coalescing deadline).
       coalesce_max: merged-dispatch sample target; defaults to the top
              bucket. Requests this large or larger are served inline.
+      shed_retries: when an attached fleet sheds a dispatch with
+             ``Overloaded``, retry it this many times with bounded
+             exponential backoff honoring ``retry_after``
+             (``repro.serving.retry``) before failing the riders. 0
+             (default) keeps sheds immediate. The dispatcher thread sleeps
+             through the backoff, so merged riders wait together — the
+             coalesced dispatch *is* the retry unit.
       buckets / use_pallas / interpret / update_backend: forwarded to
              services built by ``open``/``reload``.
     """
 
     def __init__(self, *, store=None, max_delay: float = 0.001,
-                 coalesce_max: int | None = None, buckets=DEFAULT_BUCKETS,
+                 coalesce_max: int | None = None, shed_retries: int = 0,
+                 buckets=DEFAULT_BUCKETS,
                  use_pallas: bool | None = None,
                  interpret: bool | None = None,
                  update_backend: str = "batched"):
@@ -131,6 +139,10 @@ class MapGateway:
         if self.coalesce_max < 1:
             raise ValueError(f"coalesce_max must be >= 1, got "
                              f"{self.coalesce_max}")
+        self.shed_retries = int(shed_retries)
+        if self.shed_retries < 0:
+            raise ValueError(f"shed_retries must be >= 0, got "
+                             f"{self.shed_retries}")
         # queue-stall grace: how long a queue must stop growing before it
         # flushes early (see _loop); max_delay stays the hard deadline
         self._stall_wait = min(max(self.max_delay / 8.0, 5e-5), 1e-3)
@@ -380,6 +392,15 @@ class MapGateway:
         else:
             future.set_result(value)
 
+    def _serve_bmu(self, svc, data):
+        """One backing ``serve_bmu`` call, retrying ``Overloaded`` sheds
+        per the gateway's ``shed_retries`` policy (0 = raise through)."""
+        if not self.shed_retries:
+            return svc.serve_bmu(data)
+        from repro.serving.retry import call_with_retries
+        return call_with_retries(svc.serve_bmu, data,
+                                 max_retries=self.shed_retries)
+
     def _dispatch(self, name: str, group: list[_Pending]) -> None:
         del name
         try:
@@ -388,7 +409,7 @@ class MapGateway:
             svc = group[0].svc
             merged = (group[0].data if len(group) == 1 else
                       np.concatenate([p.data for p in group], axis=0))
-            idx, q2, labels = svc.serve_bmu(merged)
+            idx, q2, labels = self._serve_bmu(svc, merged)
             # materialise once per dispatch; per-request slicing is then
             # free numpy views, with no further jax dispatches
             idx = np.asarray(idx)
@@ -417,7 +438,7 @@ class MapGateway:
 
     def _serve_inline(self, svc: MapService, pending: _Pending) -> None:
         try:
-            idx, q2, labels = svc.serve_bmu(pending.data)
+            idx, q2, labels = self._serve_bmu(svc, pending.data)
             self._resolve(pending, self._post(
                 svc, pending, np.asarray(idx), np.asarray(q2),
                 None if labels is None else np.asarray(labels)))

@@ -37,6 +37,7 @@ from repro.core import placement as placement_lib
 from repro.core import search as search_lib
 from repro.core.afm import AFMConfig, AFMState
 from repro.core.events import EventConfig, EventReport  # re-export  # noqa: F401
+from repro.faults import resolve_plan
 
 _SEARCHES = {"heuristic": afm.search_heuristic, "exact": afm.search_exact}
 
@@ -89,6 +90,13 @@ class AsyncBackend:
                  placement each shard folds its shard id into this stream —
                  same ``(lat_seed, shards)`` replays bitwise (see
                  ``run_events``).
+      faults:    a ``repro.faults.FaultPlan`` or a mapping of its fields
+                 (``{"p_loss": 0.1, "seed": 7}``) — deterministic fault
+                 injection for the event engine: broadcast loss, unit
+                 dropout windows, shard stragglers, pool pressure. ``None``
+                 or ``FaultPlan.none()`` builds the exact fault-free graph
+                 (golden-pinned). Faulty runs replay bitwise for a given
+                 ``(plan, seed, lat_seed, shards)``.
       donate_run: donate the input state's buffers to each ``run()`` call
                  (saves a dense-state copy per run on accelerators; no-op
                  on CPU). Opt-in because it changes ``run``'s contract to
@@ -107,7 +115,7 @@ class AsyncBackend:
                  capacity: int | None = None, max_rounds: int | None = None,
                  engine: str = "auto", search: str = "heuristic",
                  kernel: str = "staged", placement: str = "single",
-                 shards: int = 1, lat_seed: int = 0,
+                 shards: int = 1, lat_seed: int = 0, faults=None,
                  donate_run: bool = False):
         if search not in _SEARCHES:
             raise ValueError(f"search must be one of {sorted(_SEARCHES)}, "
@@ -116,7 +124,8 @@ class AsyncBackend:
         self.ecfg = EventConfig(latency=latency, delay=delay,
                                 sample_spacing=sample_spacing,
                                 capacity=capacity, max_rounds=max_rounds,
-                                engine=engine, kernel=kernel)
+                                engine=engine, kernel=kernel,
+                                faults=resolve_plan(faults))
         # fail fast: a bad placement spec or an indivisible shard count
         # should surface at construction, not on the first training call
         self.placement = placement_lib.resolve_placement(
@@ -137,6 +146,19 @@ class AsyncBackend:
     def _next_lat_key(self):
         self._lat_key, sub = jax.random.split(self._lat_key)
         return sub
+
+    @property
+    def lat_key(self):
+        """Current position of the latency-stream key chain — snapshot it
+        into a ``TrainCheckpoint`` and assign it back on resume: the chain
+        advances one split per step/run call, so restoring the position
+        makes an exponential-latency resume replay the uninterrupted run's
+        latency draws bitwise."""
+        return self._lat_key
+
+    @lat_key.setter
+    def lat_key(self, value):
+        self._lat_key = jnp.asarray(value, jnp.uint32)
 
     def init(self, key, samples=None) -> AFMState:
         return afm.init(key, self.cfg, samples)

@@ -8,10 +8,29 @@ arrays/scalars.
 All structural checks raise ``ValueError`` (never bare ``assert``, which
 vanishes under ``python -O``) so callers — notably ``repro.api.persistence``
 — can surface corrupt or mismatched checkpoints with a clear message.
+
+Two integrity layers (ISSUE 10):
+
+- every pytree payload embeds a SHA-256 over its leaf buffers, verified on
+  ``restore`` (bit rot inside a structurally-valid msgpack body);
+- ``save_train_checkpoint`` / ``load_train_checkpoint`` persist a
+  **training checkpoint** — the crash-resume unit of ``stream_train``: the
+  drained engine state (dense ``AFMState``: at a chunk boundary the event
+  engine is quiesced, so the pool/free-ring/in-flight set is empty by
+  construction and the dense state plus PRNG chain positions *is* the full
+  in-flight state), the backend's latency-stream key, the sample cursor,
+  and per-unit clocks/event counts, under a manifest with per-file
+  SHA-256 checksums.
 """
 from __future__ import annotations
 
+import dataclasses
+import errno
+import hashlib
+import json
 import os
+import shutil
+from typing import Any
 
 import jax
 import jax.numpy as jnp
@@ -22,6 +41,13 @@ import numpy as np
 # (pre-dating the field) are identical except for the missing marker and
 # load fine; readers reject versions *newer* than they understand.
 FORMAT_VERSION = 2
+
+TRAIN_CKPT_FORMAT = "train-checkpoint"
+TRAIN_CKPT_VERSION = 1
+
+_TC_MANIFEST = "manifest.json"
+_TC_STATE = "state.msgpack"
+_TC_ENGINE = "engine.msgpack"
 
 
 def _flatten(tree):
@@ -50,21 +76,44 @@ def describe_structure(tree):
     return "*"
 
 
+def _leaves_sha256(leaf_records) -> str:
+    """SHA-256 over the leaf buffers *and* their dtype/shape headers, in
+    flatten order — a content fingerprint of the actual numbers, immune to
+    msgpack re-encoding details."""
+    h = hashlib.sha256()
+    for rec in leaf_records:
+        h.update(str(rec["dtype"]).encode())
+        h.update(repr(list(rec["shape"])).encode())
+        h.update(rec["data"])
+    return h.hexdigest()
+
+
+def file_sha256(path: str) -> str:
+    """SHA-256 of a file's raw bytes (streamed; artifacts can be large)."""
+    h = hashlib.sha256()
+    with open(path, "rb") as f:
+        for chunk in iter(lambda: f.read(1 << 20), b""):
+            h.update(chunk)
+    return h.hexdigest()
+
+
 def save(path: str, tree) -> None:
     leaves, treedef = _flatten(tree)
+    leaf_records = [
+        {
+            "dtype": str(np.asarray(leaf).dtype),
+            "shape": list(np.asarray(leaf).shape),
+            "data": np.ascontiguousarray(
+                np.asarray(leaf).astype(np.asarray(leaf).dtype)).tobytes(),
+        }
+        for leaf in leaves
+    ]
     payload = {
         "format_version": FORMAT_VERSION,
         "treedef": str(treedef),
         "structure": describe_structure(tree),
-        "leaves": [
-            {
-                "dtype": str(np.asarray(leaf).dtype),
-                "shape": list(np.asarray(leaf).shape),
-                "data": np.ascontiguousarray(
-                    np.asarray(leaf).astype(np.asarray(leaf).dtype)).tobytes(),
-            }
-            for leaf in leaves
-        ],
+        "checksum": _leaves_sha256(leaf_records),
+        "leaves": leaf_records,
     }
     tmp = path + ".tmp"
     os.makedirs(os.path.dirname(os.path.abspath(path)), exist_ok=True)
@@ -85,7 +134,13 @@ def restore(path: str, like):
     checkpoint.
     """
     with open(path, "rb") as f:
-        payload = msgpack.unpackb(f.read(), raw=False)
+        raw = f.read()
+    try:
+        payload = msgpack.unpackb(raw, raw=False)
+    except Exception as exc:
+        raise ValueError(
+            f"{path}: corrupt or truncated checkpoint "
+            f"(msgpack decode failed: {exc})") from exc
     if not isinstance(payload, dict) or "leaves" not in payload:
         raise ValueError(f"{path}: not a repro checkpoint payload")
     version = payload.get("format_version", 1)
@@ -93,6 +148,19 @@ def restore(path: str, like):
         raise ValueError(
             f"{path}: checkpoint format version {version} is newer than this "
             f"reader (understands <= {FORMAT_VERSION})")
+    stored_sum = payload.get("checksum")
+    if stored_sum is not None:
+        try:
+            actual = _leaves_sha256(payload["leaves"])
+        except Exception as exc:
+            raise ValueError(
+                f"{path}: corrupt or truncated checkpoint "
+                f"(malformed leaf records: {exc})") from exc
+        if actual != stored_sum:
+            raise ValueError(
+                f"{path}: corrupt or truncated checkpoint — content "
+                f"checksum mismatch (stored {stored_sum[:12]}…, "
+                f"recomputed {actual[:12]}…)")
     leaves, treedef = _flatten(like)
     stored_treedef = payload.get("treedef")
     treedef_differs = (stored_treedef is not None
@@ -123,3 +191,163 @@ def restore(path: str, like):
         arr = arr.reshape(rec["shape"])
         out.append(jnp.asarray(arr).astype(ref_arr.dtype))
     return jax.tree.unflatten(treedef, out)
+
+
+# --------------------------------------------------------------------------
+# Training checkpoints: the crash-resume unit of ``stream_train``
+# --------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class TrainCheckpoint:
+    """A loaded training checkpoint (see ``load_train_checkpoint``).
+
+    config:    the ``AFMConfig`` field dict the run was started with — the
+               loader hands it back for the caller to validate against its
+               own config (a resume under a different geometry is a bug,
+               not a best-effort merge).
+    state:     the dense ``AFMState`` pytree at the checkpointed chunk
+               boundary (engine drained to quiescence — pool empty by
+               construction, so this *is* the full in-flight state).
+    lat_key:   the async backend's latency-stream key position ((2,) uint32)
+               or ``None`` for backends without one. Restoring it is what
+               makes an exponential-latency resume replay the uninterrupted
+               run bitwise.
+    cursor:    the sample cursor (``consumed`` / ``pos`` / ``step`` /
+               ``since_swap`` / anything else the trainer stashed).
+    meta:      free-form metadata recorded at save time.
+    checksums: filename -> SHA-256 hexdigest, as stored in the manifest and
+               re-verified against the payload files during load ("checksum
+               verified" in the resume log means this passed).
+    """
+    config: dict
+    state: Any
+    lat_key: Any
+    cursor: dict
+    meta: dict
+    checksums: dict
+
+
+def _replace_dir(tmp: str, path: str) -> None:
+    """Atomically promote ``tmp`` to ``path``, displacing an existing
+    checkpoint dir (the overwrite case of ``--checkpoint-every``): a reader
+    observes either the old complete checkpoint or the new one, never a
+    partial write."""
+    try:
+        os.replace(tmp, path)
+        return
+    except OSError as exc:
+        if exc.errno not in (errno.ENOTEMPTY, errno.EEXIST, errno.ENOTDIR):
+            raise
+    old = path + ".old"
+    shutil.rmtree(old, ignore_errors=True)
+    os.replace(path, old)
+    os.replace(tmp, path)
+    shutil.rmtree(old, ignore_errors=True)
+
+
+def save_train_checkpoint(path: str, *, config: dict, state,
+                          cursor: dict, lat_key=None,
+                          meta: dict | None = None) -> dict:
+    """Write a training checkpoint directory (atomic, overwrite-safe).
+
+    Layout: ``manifest.json`` (format marker, config, cursor, meta, and a
+    SHA-256 per payload file) + ``state.msgpack`` (the dense ``AFMState``)
+    + ``engine.msgpack`` (the backend's latency-key position, when given).
+    Returns the manifest's checksum dict.
+    """
+    parent = os.path.dirname(os.path.abspath(path)) or "."
+    os.makedirs(parent, exist_ok=True)
+    tmp = os.path.join(parent,
+                       f".tmp-{os.path.basename(path)}-{os.getpid()}")
+    shutil.rmtree(tmp, ignore_errors=True)
+    os.makedirs(tmp)
+    try:
+        save(os.path.join(tmp, _TC_STATE), state)
+        files = [_TC_STATE]
+        if lat_key is not None:
+            save(os.path.join(tmp, _TC_ENGINE),
+                 {"lat_key": np.asarray(lat_key)})
+            files.append(_TC_ENGINE)
+        checksums = {f: file_sha256(os.path.join(tmp, f)) for f in files}
+        manifest = {
+            "format": TRAIN_CKPT_FORMAT,
+            "format_version": TRAIN_CKPT_VERSION,
+            "config": dict(config),
+            "cursor": dict(cursor),
+            "meta": dict(meta or {}),
+            "checksums": checksums,
+        }
+        with open(os.path.join(tmp, _TC_MANIFEST), "w") as f:
+            json.dump(manifest, f, indent=2, sort_keys=True)
+        _replace_dir(tmp, path)
+    finally:
+        shutil.rmtree(tmp, ignore_errors=True)
+    return checksums
+
+
+def load_train_checkpoint(path: str, *, state_like,
+                          expect_config: dict | None = None
+                          ) -> TrainCheckpoint:
+    """Load and integrity-check a training checkpoint.
+
+    Every payload file is re-hashed against the manifest's SHA-256 before
+    its bytes are trusted; any mismatch (or a missing/undecodable file)
+    raises ``ValueError`` naming the corrupt file — a truncated checkpoint
+    from a crash mid-``save`` can never be silently resumed (the atomic
+    rename makes that window a non-event in practice, but belt and braces).
+    ``state_like`` supplies the expected ``AFMState`` structure (e.g.
+    ``repro.api.persistence._state_like(cfg)``). ``expect_config``, when
+    given, must equal the manifest's stored config — checked before any
+    payload is decoded, so a resume under the wrong geometry fails with
+    the config diff rather than a leaf-shape error.
+    """
+    manifest_path = os.path.join(path, _TC_MANIFEST)
+    if not os.path.isfile(manifest_path):
+        raise FileNotFoundError(
+            f"{path}: no train checkpoint here ({_TC_MANIFEST} missing)")
+    try:
+        with open(manifest_path) as f:
+            manifest = json.load(f)
+    except json.JSONDecodeError as exc:
+        raise ValueError(
+            f"{manifest_path}: corrupt or truncated manifest: {exc}") from exc
+    if manifest.get("format") != TRAIN_CKPT_FORMAT:
+        raise ValueError(
+            f"{path}: not a train checkpoint "
+            f"(format={manifest.get('format')!r})")
+    version = manifest.get("format_version", 0)
+    if version > TRAIN_CKPT_VERSION:
+        raise ValueError(
+            f"{path}: train checkpoint version {version} is newer than "
+            f"this reader (understands <= {TRAIN_CKPT_VERSION})")
+    stored_config = dict(manifest.get("config") or {})
+    if (expect_config is not None and stored_config
+            and stored_config != dict(expect_config)):
+        raise ValueError(
+            f"{path}: checkpoint config {stored_config} does not match "
+            f"the expected config {dict(expect_config)} — resume under "
+            f"the same geometry/schedule or start fresh")
+    checksums = dict(manifest.get("checksums") or {})
+    for fname, want in sorted(checksums.items()):
+        fpath = os.path.join(path, fname)
+        if not os.path.isfile(fpath):
+            raise ValueError(
+                f"{path}: corrupt or truncated checkpoint — payload file "
+                f"{fname!r} is missing")
+        got = file_sha256(fpath)
+        if got != want:
+            raise ValueError(
+                f"{path}: corrupt or truncated checkpoint — {fname} "
+                f"checksum mismatch (manifest {want[:12]}…, "
+                f"file {got[:12]}…)")
+    state = restore(os.path.join(path, _TC_STATE), state_like)
+    lat_key = None
+    if _TC_ENGINE in checksums:
+        engine = restore(os.path.join(path, _TC_ENGINE),
+                         {"lat_key": np.zeros((2,), np.uint32)})
+        lat_key = engine["lat_key"]
+    return TrainCheckpoint(config=stored_config,
+                           state=state, lat_key=lat_key,
+                           cursor=dict(manifest.get("cursor") or {}),
+                           meta=dict(manifest.get("meta") or {}),
+                           checksums=checksums)

@@ -200,3 +200,72 @@ def test_save_over_regular_file_rejected(tmp_path, fitted):
         tm.save(str(target))
     # no temp-dir litter left behind on the failure path
     assert [p.name for p in tmp_path.iterdir()] == ["occupied"]
+
+
+# --------------------------------------------------------- artifact integrity
+
+
+def test_manifest_records_payload_checksums(tmp_path, fitted):
+    """Every artifact manifest names a SHA-256 per payload file (ISSUE 10)."""
+    tm, _, _ = fitted
+    path = str(tmp_path / "art")
+    tm.save(path)
+    with open(os.path.join(path, "manifest.json")) as f:
+        manifest = json.load(f)
+    sums = manifest["checksums"]
+    assert set(sums) == {"state.msgpack", "unit_labels.msgpack"}
+    for fname, digest in sums.items():
+        assert len(digest) == 64 and int(digest, 16) >= 0
+        from repro.training.checkpoint import file_sha256
+        assert file_sha256(os.path.join(path, fname)) == digest
+
+
+def test_bitflipped_state_payload_rejected(tmp_path, fitted):
+    """A single flipped byte in the state payload fails the load loudly."""
+    tm, _, _ = fitted
+    path = str(tmp_path / "art")
+    tm.save(path)
+    p = os.path.join(path, "state.msgpack")
+    with open(p, "rb") as f:
+        raw = bytearray(f.read())
+    raw[len(raw) // 2] ^= 0xFF
+    with open(p, "wb") as f:
+        f.write(bytes(raw))
+    with pytest.raises(ValueError, match="corrupt or truncated"):
+        load_artifact(path)
+
+
+def test_truncated_state_payload_rejected(tmp_path, fitted):
+    """A half-written payload (simulated crash) never loads as weights."""
+    tm, _, _ = fitted
+    path = str(tmp_path / "art")
+    tm.save(path)
+    p = os.path.join(path, "state.msgpack")
+    with open(p, "rb") as f:
+        raw = f.read()
+    with open(p, "wb") as f:
+        f.write(raw[: len(raw) // 2])
+    with pytest.raises(ValueError, match="corrupt or truncated"):
+        load_artifact(path)
+
+
+def test_missing_payload_file_rejected(tmp_path, fitted):
+    """A payload file named in the manifest but absent on disk is an error,
+    not a silent label-less load."""
+    tm, _, _ = fitted
+    path = str(tmp_path / "art")
+    tm.save(path)
+    os.remove(os.path.join(path, "unit_labels.msgpack"))
+    with pytest.raises(ValueError, match="missing"):
+        load_artifact(path)
+
+
+def test_corrupt_manifest_json_rejected(tmp_path, fitted):
+    tm, _, _ = fitted
+    path = str(tmp_path / "art")
+    tm.save(path)
+    p = os.path.join(path, "manifest.json")
+    with open(p, "w") as f:
+        f.write('{"format": "topomap-art')      # truncated mid-write
+    with pytest.raises(ValueError, match="corrupt or truncated"):
+        load_artifact(path)

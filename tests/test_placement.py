@@ -231,3 +231,84 @@ def test_mesh_determinism_quality_accounting():
     # the partitioned engine must land in the reference's quality band
     # (different PRNG partition => different trajectory, same physics)
     assert res["q_mesh"] < 1.3 * res["q_ref"], res
+
+
+_MESH_FAULT_SCRIPT = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=2"
+import json
+import jax
+import jax.numpy as jnp
+import numpy as np
+from repro.api import AFMConfig
+from repro.core import afm, events
+from repro.faults import FaultPlan
+
+cfg = AFMConfig(side=6, dim=3, i_max=256, e_factor=1.0)
+key = jax.random.PRNGKey(11)
+k_init, k_data, k_steps = jax.random.split(key, 3)
+E = 128
+st0 = afm.init(k_init, cfg)
+samples = jax.random.uniform(k_data, (E, cfg.dim))
+step_keys = jax.random.split(k_steps, E)
+p_one = lambda i, c: jnp.float32(1.0)
+
+plan = FaultPlan(seed=21, p_loss=0.15, dropout_frac=0.2,
+                 dropout_start=E * 0.25, dropout_len=E * 0.5,
+                 shard_latency_mult=(1.0, 3.0))
+ecfg = events.EventConfig(latency="constant", delay=0.5, engine="event",
+                          faults=plan)
+
+def go():
+    return events.run_events(st0, samples, step_keys, cfg, ecfg,
+                             p_fn=p_one, lat_key=jax.random.PRNGKey(5),
+                             placement="mesh", shards=2)
+
+st_a, _, rep_a = go()
+st_b, _, rep_b = go()
+
+rows = np.asarray(rep_a.shard_counts, np.int64)
+# per-shard columns: [sent, delivered, dropped_overflow+stranded,
+#                     dropped_fault, stranded]
+per_shard_unaccounted = [
+    int(r[0] - (r[1] + (r[2] - r[4]) + r[3] + r[4])) for r in rows
+]
+print(json.dumps({
+    "bitwise_repeat": bool(
+        np.array_equal(np.asarray(st_a.w), np.asarray(st_b.w))
+        and int(rep_a.dropped_fault) == int(rep_b.dropped_fault)),
+    "shard_rows": rows.tolist(),
+    "per_shard_unaccounted": per_shard_unaccounted,
+    "sent": int(rep_a.sent), "deliveries": int(rep_a.deliveries),
+    "dropped_overflow": int(rep_a.dropped_overflow),
+    "dropped_fault": int(rep_a.dropped_fault),
+    "stranded": int(rep_a.stranded),
+    "row_sums_match_globals": bool(
+        int(rows[:, 0].sum()) == int(rep_a.sent)
+        and int(rows[:, 1].sum()) == int(rep_a.deliveries)
+        and int(rows[:, 3].sum()) == int(rep_a.dropped_fault)),
+    "nan": bool(np.any(np.isnan(np.asarray(st_a.w)))),
+}))
+"""
+
+
+def test_mesh_fault_accounting_per_shard_and_global():
+    """ISSUE 10: under a composite fault plan (loss + dropout window +
+    straggler shard) every shard satisfies
+    ``sent == delivered + dropped_overflow + dropped_fault + stranded``
+    exactly, the shard rows sum to the global counters, and the faulty
+    run replays bitwise."""
+    env = dict(os.environ, PYTHONPATH=os.path.join(_HERE, "..", "src"))
+    env.pop("XLA_FLAGS", None)
+    out = subprocess.run([sys.executable, "-c", _MESH_FAULT_SCRIPT],
+                         capture_output=True, text=True, env=env,
+                         timeout=600)
+    assert out.returncode == 0, out.stderr[-3000:]
+    res = json.loads(out.stdout.strip().splitlines()[-1])
+    assert res["bitwise_repeat"], res
+    assert not res["nan"]
+    assert res["per_shard_unaccounted"] == [0, 0], res
+    assert res["row_sums_match_globals"], res
+    assert res["sent"] == (res["deliveries"] + res["dropped_overflow"]
+                           + res["dropped_fault"] + res["stranded"]), res
+    assert res["dropped_fault"] > 0, res     # the plan genuinely dropped
